@@ -1,0 +1,41 @@
+"""Paper Fig. 9/10: DBIndex vs EAGR — index time and query time, 1/2-hop.
+
+Scaled-down real-shaped graphs (power-law social networks).  EAGR runs its
+paper configuration (10 iterations); the memory-limit failure mode (paper:
+LiveJournal/Orkut 2-hop OOM) is reproduced with a proportional cap.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.dbindex import build_dbindex
+from repro.core.eagr import build_eagr
+from repro.core.windows import KHopWindow
+from repro.graphs.generators import barabasi_albert, with_random_attrs
+
+
+def run(n: int = 2000, hops=(1, 2)):
+    g = with_random_attrs(barabasi_albert(n, 5, seed=3), seed=4)
+    vals = g.attrs["val"]
+    for k in hops:
+        w = KHopWindow(k)
+        idx = build_dbindex(g, w, method="emc")
+        emit(f"fig9_index_time/dbindex/k{k}", idx.stats["t_total_s"] * 1e6,
+             f"n={n}")
+        us = timeit(lambda: idx.query(vals, "sum"))
+        emit(f"fig9_query/dbindex/k{k}", us, "")
+        try:
+            eagr = build_eagr(g, w, iterations=10, chunk_size=256,
+                              memory_limit_bytes=200 * 2**20)
+            emit(f"fig9_index_time/eagr/k{k}", eagr.stats["t_total_s"] * 1e6,
+                 f"virtual={eagr.stats['num_virtual']}")
+            us = timeit(lambda: eagr.query(vals, "sum"), repeats=1)
+            emit(f"fig9_query/eagr/k{k}", us, "")
+        except MemoryError as e:
+            emit(f"fig9_index_time/eagr/k{k}", float("nan"), f"OOM:{e}")
+
+
+if __name__ == "__main__":
+    run()

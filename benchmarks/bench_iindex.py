@@ -1,0 +1,58 @@
+"""Paper Fig. 14-16: I-Index vs DBIndex vs non-index on DAGs.
+
+Degree and |V| sweeps on DAGGER-style random DAGs (locality-bounded so the
+ancestor sets match the paper's pathway-graph regime), plus the index-size
+ratio (Fig 16)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, timeit
+from repro.core.dbindex import build_dbindex
+from repro.core.iindex import build_iindex
+from repro.core.nonindex import query_batched_bitset
+from repro.core.windows import TopologicalWindow
+from repro.graphs.generators import random_dag, with_random_attrs
+
+
+def run(fast: bool = False):
+    w = TopologicalWindow()
+    # Fig 14: degree sweep at fixed |V| (paper 30k/60k; here 5k/10k)
+    for n in ((5_000,) if fast else (5_000, 10_000)):
+        for deg in ((3, 10) if fast else (3, 5, 10)):
+            g = with_random_attrs(random_dag(n, float(deg), seed=deg, locality=200),
+                                  seed=deg + 1)
+            ii = build_iindex(g)
+            emit(f"fig14_index_time/iindex/n{n}/deg{deg}",
+                 ii.stats["t_total_s"] * 1e6, f"maxlvl={ii.stats['max_level']}")
+            db = build_dbindex(g, w)
+            emit(f"fig14_index_time/dbindex/n{n}/deg{deg}",
+                 db.stats["t_total_s"] * 1e6, "")
+            us = timeit(lambda: ii.query(g.attrs["val"], "sum"))
+            emit(f"fig14_query/iindex/n{n}/deg{deg}", us, "")
+            us = timeit(lambda: db.query(g.attrs["val"], "sum"))
+            emit(f"fig14_query/dbindex/n{n}/deg{deg}", us, "")
+            us = timeit(lambda: query_batched_bitset(g, w, g.attrs["val"], "sum"),
+                        repeats=1)
+            emit(f"fig14_query/nonindex/n{n}/deg{deg}", us, "")
+    # Fig 15: |V| sweep at fixed degree
+    for deg in ((10,) if fast else (10, 20)):
+        for n in ((10_000,) if fast else (10_000, 25_000, 50_000)):
+            g = with_random_attrs(random_dag(n, float(deg), seed=n + deg,
+                                             locality=200), seed=n)
+            ii = build_iindex(g)
+            emit(f"fig15_index_time/deg{deg}/n{n}", ii.stats["t_total_s"] * 1e6, "")
+            us = timeit(lambda: ii.query(g.attrs["val"], "sum"))
+            emit(f"fig15_query/deg{deg}/n{n}", us, "")
+    # Fig 16: index size ratio across degrees
+    for n in ((10_000,) if fast else (10_000, 30_000)):
+        gsize = None
+        for deg in (3, 5, 10, 20):
+            g = random_dag(n, float(deg), seed=deg, locality=200)
+            gsize = g.src.nbytes + g.dst.nbytes
+            ii = build_iindex(g)
+            emit(f"fig16_size_ratio/n{n}/deg{deg}", ii.size_bytes(),
+                 f"ratio={ii.size_bytes()/gsize:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Kernel-level benches: device query data plane vs NumPy, plus roofline
+bytes accounting for the segment-reduce primitive (the TPU hot path)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import engine_jax as ej
+from repro.core.dbindex import build_dbindex
+from repro.core.iindex import build_iindex
+from repro.core.windows import KHopWindow, TopologicalWindow
+from repro.graphs.generators import erdos_renyi, random_dag, with_random_attrs
+
+
+def run():
+    g = with_random_attrs(erdos_renyi(30_000, 10.0, seed=21), seed=22)
+    idx = build_dbindex(g, KHopWindow(2), method="emc")
+    plan = ej.plan_from_dbindex(idx)
+    vals = jnp.asarray(g.attrs["val"], jnp.float32)
+
+    us_np = timeit(lambda: idx.query(g.attrs["val"], "sum"))
+    emit("engine/dbindex_query_numpy", us_np, "")
+    fn = jax.jit(lambda v: ej.query_dbindex(plan, v, "sum", use_pallas=False))
+    fn(vals).block_until_ready()
+    us_xla = timeit(lambda: fn(vals).block_until_ready())
+    members = int(idx.stats["num_members"])
+    bytes_moved = members * 4 * 2 + idx.stats["num_links"] * 4 * 2
+    emit("engine/dbindex_query_xla_cpu", us_xla,
+         f"members={members};approx_bytes={bytes_moved};"
+         f"tpu_roofline_us={bytes_moved/819e9*1e6:.1f}")
+
+    dag = with_random_attrs(random_dag(30_000, 5.0, seed=23, locality=200), seed=24)
+    ii = build_iindex(dag)
+    iplan = ej.plan_from_iindex(ii)
+    dvals = jnp.asarray(dag.attrs["val"], jnp.float32)
+    for sched in ("level", "doubling"):
+        f = jax.jit(lambda v, s=sched: ej.query_iindex(iplan, v, schedule=s,
+                                                       use_pallas=False))
+        f(dvals).block_until_ready()
+        us = timeit(lambda: f(dvals).block_until_ready())
+        emit(f"engine/iindex_query_{sched}", us,
+             f"max_level={iplan.max_level}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Paper Fig. 7 + Fig. 8: MC vs EMC index construction time / size / query.
+
+Scaled to this container (the paper's Amazon/Stanford-web graphs at 1/8
+scale, same degree regime).  Also reports our beyond-paper `mc`
+(message-passing signatures) against the paper-faithful `mc_paper`.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.dbindex import build_dbindex
+from repro.core.windows import KHopWindow
+from repro.graphs.generators import barabasi_albert, with_random_attrs
+
+
+def run(n: int = 40_000, hops=(1, 2, 3, 4)):
+    g = with_random_attrs(barabasi_albert(n, 4, seed=1), seed=2)
+    gsize = g.src.nbytes + g.dst.nbytes
+    for k in hops:
+        w = KHopWindow(k)
+        for method in ("mc_paper", "emc", "mc"):
+            idx = build_dbindex(g, w, method=method)
+            st = idx.stats
+            emit(
+                f"fig7_index_time/{method}/k{k}",
+                st["t_total_s"] * 1e6,
+                f"hash_s={st['t_hash_s']:.2f};blocks_s={st['t_blocks_s']:.2f};"
+                f"dense={st['num_dense_blocks']}",
+            )
+            emit(
+                f"fig7_index_size/{method}/k{k}",
+                idx.size_bytes(),
+                f"ratio_to_graph={idx.size_bytes()/gsize:.2f}",
+            )
+            us = timeit(lambda: idx.query(g.attrs["val"], "sum"))
+            emit(f"fig8_query/{method}/k{k}", us,
+                 f"members={st['num_members']};links={st['num_links']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Paper Fig. 11-13: DBIndex scalability — |V| sweep and degree sweeps
+(sparse and dense regimes), Erdős–Rényi per the paper's generator."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, timeit
+from repro.core.dbindex import build_dbindex
+from repro.core.windows import KHopWindow
+from repro.graphs.generators import erdos_renyi, with_random_attrs
+
+
+def run():
+    # Fig 11: vary |V|, degree 10 (paper: 2M-10M; here 1/100 scale)
+    for n in (20_000, 50_000, 100_000):
+        g = with_random_attrs(erdos_renyi(n, 10.0, seed=n), seed=n + 1)
+        idx = build_dbindex(g, KHopWindow(1), method="emc")
+        emit(f"fig11_index_time/n{n}", idx.stats["t_total_s"] * 1e6, "k=1,deg=10")
+        us = timeit(lambda: idx.query(g.attrs["val"], "sum"))
+        emit(f"fig11_query/n{n}", us, "")
+    # Fig 12: degree sweep on sparse graphs (2M -> 20k nodes)
+    for deg in (5, 10, 20):
+        g = with_random_attrs(erdos_renyi(20_000, float(deg), seed=deg), seed=deg + 1)
+        for k in (1, 2):
+            idx = build_dbindex(g, KHopWindow(k), method="emc")
+            emit(f"fig12_index_time/deg{deg}/k{k}", idx.stats["t_total_s"] * 1e6, "")
+            us = timeit(lambda: idx.query(g.attrs["val"], "sum"))
+            emit(f"fig12_query/deg{deg}/k{k}", us, "")
+    # Fig 13: dense graphs (200k -> 2k nodes, degree 80-200)
+    for deg in (80, 140, 200):
+        g = with_random_attrs(erdos_renyi(2_000, float(deg), seed=deg), seed=deg + 1)
+        for k in (1, 2):
+            idx = build_dbindex(g, KHopWindow(k), method="emc")
+            emit(f"fig13_index_time/deg{deg}/k{k}", idx.stats["t_total_s"] * 1e6, "")
+            us = timeit(lambda: idx.query(g.attrs["val"], "sum"))
+            emit(f"fig13_query/deg{deg}/k{k}", us, "")
+
+
+if __name__ == "__main__":
+    run()

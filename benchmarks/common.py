@@ -1,0 +1,37 @@
+"""Benchmark harness utilities: timing + CSV emission.
+
+Output contract (benchmarks/run.py): ``name,us_per_call,derived`` rows.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall time in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us: float, derived: str = ""):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")
+
+
+def flush_csv(path: str = None):
+    if path:
+        with open(path, "w") as f:
+            f.write("name,us_per_call,derived\n")
+            for n, u, d in ROWS:
+                f.write(f"{n},{u:.1f},{d}\n")

@@ -1,0 +1,39 @@
+"""repro: Graph Window Analytics over Large-scale Dynamic Graphs, on JAX/TPU.
+
+Implements Fan, Wang, Chan, Tan (2015): Graph Window Queries (k-hop and
+topological windows), the Dense Block Index (DBIndex, MC/EMC construction),
+the Inheritance Index (I-Index), the EAGR baseline, and a production
+training/serving substrate that runs the assigned architecture pool on
+single-pod (16x16) and multi-pod (2x16x16) TPU meshes.
+
+Public API is re-exported lazily to keep `import repro` cheap (no jax device
+initialization at import time).
+"""
+
+__version__ = "1.0.0"
+
+_LAZY = {
+    "Graph": "repro.core.graph",
+    "DeviceGraph": "repro.core.graph",
+    "KHopWindow": "repro.core.windows",
+    "TopologicalWindow": "repro.core.windows",
+    "GraphWindowQuery": "repro.core.query",
+    "DBIndex": "repro.core.dbindex",
+    "build_dbindex": "repro.core.dbindex",
+    "IIndex": "repro.core.iindex",
+    "build_iindex": "repro.core.iindex",
+    "AGGREGATES": "repro.core.aggregates",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        mod = importlib.import_module(_LAZY[name])
+        return getattr(mod, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))

@@ -1,0 +1,3 @@
+"""Architecture registry: 10 assigned archs + the paper's own GWQ workload."""
+
+from repro.configs.registry import ARCHS, get_arch, ShapeCase  # noqa: F401

@@ -1,0 +1,50 @@
+"""grok-1-314b — 8-expert top-2 MoE [hf:xai-org/grok-1; unverified].
+
+64L d_model=6144 48H (GQA kv=8) d_ff=32768 vocab=131072, MoE 8e top-2.
+Sharding: experts TP-sharded on d_ff over "model" (8 experts don't divide
+the 16-way axis); params+Adafactor state FSDP over the full mesh.
+"""
+
+from repro.configs.registry import LM_SHAPES, ArchSpec
+from repro.models.moe import MoEConfig
+
+CONFIG = MoEConfig(
+    name="grok-1-314b",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=32768,
+    vocab=131072,
+    n_experts=8,
+    top_k=2,
+    # 314B posture: bf16 params + Adafactor f32 accumulators (T5X-style
+    # master-less training) — halves weight HBM and removes the stacked
+    # f32->bf16 weight converts from the step (§Perf iteration C2).
+    param_dtype="bfloat16",
+    attn_kv_chunk=2048,
+)
+
+SMOKE = MoEConfig(
+    name="grok-1-smoke",
+    n_layers=2,
+    d_model=128,
+    n_heads=8,
+    n_kv_heads=4,
+    d_ff=256,
+    vocab=512,
+    n_experts=4,
+    top_k=2,
+    remat=False,
+)
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(
+        name="grok-1-314b",
+        family="lm-moe",
+        model_cfg=CONFIG,
+        smoke_cfg=SMOKE,
+        shapes=LM_SHAPES,
+        skip={"long_500k": "pure full-attention arch; see DESIGN.md §4"},
+    )

@@ -1,0 +1,5 @@
+"""Core of the paper: graph window queries, DBIndex, I-Index, baselines."""
+
+from repro.core.aggregates import AGGREGATES  # noqa: F401
+from repro.core.graph import DeviceGraph, Graph  # noqa: F401
+from repro.core.windows import KHopWindow, TopologicalWindow  # noqa: F401

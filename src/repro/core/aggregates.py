@@ -1,0 +1,68 @@
+"""Distributive / algebraic aggregate functions (paper §3).
+
+Each distributive aggregate is a commutative monoid ``(op, identity)`` — that
+is exactly what both the DBIndex two-stage evaluation and the I-Index
+inheritance evaluation require (partial aggregates must compose).  Algebraic
+aggregates (``avg``) are expressed as a tuple of distributive parts plus a
+finalizer, per the classic Gray et al. decomposition the paper leans on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Monoid:
+    name: str
+    np_op: Callable  # ufunc with .reduceat / .at
+    identity: float
+
+    def jnp_segment(self):
+        import jax.ops as jops
+
+        return {
+            "add": jops.segment_sum,
+            "minimum": jops.segment_min,
+            "maximum": jops.segment_max,
+        }[self.np_op.__name__]
+
+
+SUM = Monoid("sum", np.add, 0.0)
+MIN = Monoid("min", np.minimum, np.inf)
+MAX = Monoid("max", np.maximum, -np.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregate:
+    """An aggregate = one or two monoid channels + a finalizer."""
+
+    name: str
+    monoids: Tuple[Monoid, ...]
+    # channel value extractor: attr -> per-channel input values
+    prepare: Callable[[np.ndarray], Tuple[np.ndarray, ...]]
+    finalize: Optional[Callable] = None  # (channel_results...) -> result
+
+    def finalize_np(self, *chans):
+        return self.finalize(*chans) if self.finalize else chans[0]
+
+
+def _ones_like(a):
+    return np.ones(a.shape[0], dtype=np.float64)
+
+
+AGGREGATES = {
+    "sum": Aggregate("sum", (SUM,), lambda a: (a.astype(np.float64),)),
+    "count": Aggregate("count", (SUM,), lambda a: (_ones_like(a),)),
+    "min": Aggregate("min", (MIN,), lambda a: (a.astype(np.float64),)),
+    "max": Aggregate("max", (MAX,), lambda a: (a.astype(np.float64),)),
+    "avg": Aggregate(
+        "avg",
+        (SUM, SUM),
+        lambda a: (a.astype(np.float64), _ones_like(a)),
+        finalize=lambda s, c: s / np.maximum(c, 1e-30),
+    ),
+}

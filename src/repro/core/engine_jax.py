@@ -1,0 +1,234 @@
+"""Device (JAX/TPU) query data plane for DBIndex and I-Index.
+
+The host-built indices become static *plans* of device arrays:
+
+* DBIndex: two chained tile plans — members→blocks, then links→owners —
+  each one fused gather + Pallas segment-sum (DESIGN.md §2).
+* I-Index: one tile plan for the window-difference partials plus the PID
+  forest; the inheritance scan is either level-scheduled (``depth`` gathers)
+  or pointer-doubled (``log2(depth)`` gathers, the §Perf variant).
+
+``query_dbindex_sharded`` distributes the query under ``shard_map``:
+pass 1 is sharded over *blocks*, the (small) block-partial vector ``T`` is
+all-gathered over the data axis, and pass 2 is sharded over *owners* —
+the collective footprint is ``|T|`` floats, independent of window sizes,
+which is what makes the paper's sharing structure attractive on a pod.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dbindex import DBIndex
+from repro.core.iindex import IIndex
+from repro.kernels.segment_reduce.ops import TilePlan, build_tile_plan, segment_sum
+
+
+# ---------------------------------------------------------------------- #
+#  DBIndex plan
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class DBIndexPlan:
+    n: int
+    num_blocks: int
+    pass1: TilePlan  # members -> block partials
+    pass2: TilePlan  # block partials -> owner windows
+    block_sizes: jnp.ndarray  # f32 [num_blocks] (for count/avg)
+    link_counts: jnp.ndarray  # f32 [n]
+
+    def tree_flatten(self):
+        return (
+            (self.pass1, self.pass2, self.block_sizes, self.link_counts),
+            (self.n, self.num_blocks),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        p1, p2, bs, lc = children
+        return cls(aux[0], aux[1], p1, p2, bs, lc)
+
+
+jax.tree_util.register_pytree_node(
+    DBIndexPlan, DBIndexPlan.tree_flatten, DBIndexPlan.tree_unflatten
+)
+
+
+def plan_from_dbindex(index: DBIndex, tm: int = 512, ts: int = 512) -> DBIndexPlan:
+    member_block = np.asarray(index.member_block_ids, np.int64)
+    pass1 = build_tile_plan(index.block_members, member_block, index.num_blocks, tm, ts)
+    owner_ids = np.asarray(index.link_owner_ids, np.int64)
+    pass2 = build_tile_plan(index.link_block, owner_ids, index.n, tm, ts)
+    sizes = np.diff(index.block_offsets).astype(np.float32)
+    links = np.diff(index.link_owner_offsets).astype(np.float32)
+    return DBIndexPlan(
+        n=index.n,
+        num_blocks=index.num_blocks,
+        pass1=pass1,
+        pass2=pass2,
+        block_sizes=jnp.asarray(sizes),
+        link_counts=jnp.asarray(links),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("agg", "use_pallas", "interpret"))
+def query_dbindex(plan: DBIndexPlan, values, agg: str = "sum",
+                  use_pallas: bool = True, interpret: Optional[bool] = None):
+    """values: [n] (or [n, D]) vertex attribute -> [n(, D)] window aggregates."""
+    values = jnp.asarray(values, jnp.float32)
+    if agg in ("sum", "count", "avg"):
+        chans = []
+        if agg in ("sum", "avg"):
+            t = segment_sum(plan.pass1, values, use_pallas=use_pallas, interpret=interpret)
+            chans.append(segment_sum(plan.pass2, t, use_pallas=use_pallas, interpret=interpret))
+        if agg in ("count", "avg"):
+            cnt = segment_sum(plan.pass2, plan.block_sizes, use_pallas=use_pallas,
+                              interpret=interpret)
+            chans.append(cnt)
+        if agg == "sum":
+            return chans[0]
+        if agg == "count":
+            return chans[0]
+        return chans[0] / jnp.maximum(chans[1], 1e-30)
+    if agg in ("min", "max"):
+        from repro.kernels.segment_reduce.ref import segment_reduce_ref
+
+        sid1 = plan.pass1.seg_tiles.reshape(-1)
+        t = segment_reduce_ref(values, plan.pass1.gather_padded, sid1,
+                               plan.num_blocks, op=agg)
+        sid2 = plan.pass2.seg_tiles.reshape(-1)
+        return segment_reduce_ref(t, plan.pass2.gather_padded, sid2, plan.n, op=agg)
+    raise ValueError(agg)
+
+
+def query_dbindex_sharded(plan: DBIndexPlan, values, mesh, axis="data"):
+    """Distributed two-stage query under shard_map.
+
+    Link/member rows are sharded over `axis` (row order is arbitrary for
+    correctness — partial segment sums are combined with one ``psum`` per
+    stage, so a segment straddling shards is handled for free).  Collective
+    footprint: |T| + |n| floats per step, independent of window sizes —
+    the paper's sharing structure keeps the wire format tiny.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    nb_pad = plan.pass1.num_out_tiles * plan.pass1.ts
+    n_pad = plan.pass2.num_out_tiles * plan.pass2.ts
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+
+    def local(p1_gather, p1_seg, p2_gather, p2_seg, vals):
+        ok1 = p1_seg >= 0
+        t_partial = jax.ops.segment_sum(
+            jnp.where(ok1, jnp.take(vals, p1_gather), 0.0),
+            jnp.where(ok1, p1_seg, nb_pad),
+            num_segments=nb_pad + 1,
+        )[:nb_pad]
+        t_full = jax.lax.psum(t_partial, axes)
+        ok2 = p2_seg >= 0
+        out_partial = jax.ops.segment_sum(
+            jnp.where(ok2, jnp.take(t_full, p2_gather), 0.0),
+            jnp.where(ok2, p2_seg, n_pad),
+            num_segments=n_pad + 1,
+        )[:n_pad]
+        return jax.lax.psum(out_partial, axes)
+
+    p1g, p1s = plan.pass1.gather_padded, plan.pass1.seg_tiles.reshape(-1)
+    p2g, p2s = plan.pass2.gather_padded, plan.pass2.seg_tiles.reshape(-1)
+    ndev = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def pad_rows(x):  # equal row shards
+        pad = (-x.shape[0]) % ndev
+        return jnp.pad(x, (0, pad), constant_values=-1 if x.dtype == jnp.int32 else 0)
+
+    p1s, p2s = pad_rows(p1s), pad_rows(p2s)
+    p1g = jnp.pad(p1g, (0, p1s.shape[0] - p1g.shape[0]))
+    p2g = jnp.pad(p2g, (0, p2s.shape[0] - p2g.shape[0]))
+    values = jnp.asarray(values, jnp.float32)
+
+    spec = P(axes)
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(spec, spec, spec, spec, P()),
+        out_specs=P(),
+        check_rep=False,
+    )
+    return fn(p1g, p1s, p2g, p2s, values)[: plan.n]
+
+
+# ---------------------------------------------------------------------- #
+#  I-Index plan
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class IIndexPlan:
+    n: int
+    max_level: int
+    wd_plan: TilePlan  # wd members -> per-vertex difference partials
+    pid: jnp.ndarray  # int32 [n], -1 roots
+    level: jnp.ndarray  # int32 [n]
+
+    def tree_flatten(self):
+        return ((self.wd_plan, self.pid, self.level), (self.n, self.max_level))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux[0], aux[1], *children)
+
+
+jax.tree_util.register_pytree_node(
+    IIndexPlan, IIndexPlan.tree_flatten, IIndexPlan.tree_unflatten
+)
+
+
+def plan_from_iindex(index: IIndex, tm: int = 512, ts: int = 512) -> IIndexPlan:
+    sizes = np.diff(index.wd_offsets)
+    owner = np.repeat(np.arange(index.n, dtype=np.int64), sizes)
+    wd_plan = build_tile_plan(index.wd_members, owner, index.n, tm, ts)
+    return IIndexPlan(
+        n=index.n,
+        max_level=int(index.level.max()) if index.n else 0,
+        wd_plan=wd_plan,
+        pid=jnp.asarray(index.pid),
+        level=jnp.asarray(index.level),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("schedule", "use_pallas", "interpret"))
+def query_iindex(plan: IIndexPlan, values, schedule: str = "level",
+                 use_pallas: bool = True, interpret: Optional[bool] = None):
+    """Topological window SUM via inheritance (paper Algorithm 5 on device).
+
+    schedule="level":   depth sequential steps, each one masked gather.
+    schedule="doubling": pointer doubling, ceil(log2(depth+1)) gathers —
+    the beyond-paper parallelization (§Perf).
+    """
+    values = jnp.asarray(values, jnp.float32)
+    wdp = segment_sum(plan.wd_plan, values, use_pallas=use_pallas, interpret=interpret)
+    pid = plan.pid
+    if schedule == "level":
+        def body(i, ans):
+            parent = jnp.take(ans, jnp.clip(pid, 0, plan.n - 1))
+            parent = jnp.where(pid >= 0, parent, 0.0)
+            return jnp.where(plan.level == i, wdp + parent, ans)
+
+        return jax.lax.fori_loop(1, plan.max_level + 1, body, wdp)
+    if schedule == "doubling":
+        rounds = max(1, int(np.ceil(np.log2(plan.max_level + 1)))) if plan.max_level else 0
+
+        def body(_, carry):
+            val, ptr = carry
+            pv = jnp.take(val, jnp.clip(ptr, 0, plan.n - 1))
+            val = val + jnp.where(ptr >= 0, pv, 0.0)
+            pp = jnp.take(ptr, jnp.clip(ptr, 0, plan.n - 1))
+            ptr = jnp.where(ptr >= 0, pp, -1)
+            return val, ptr
+
+        val, _ = jax.lax.fori_loop(0, rounds, body, (wdp, pid))
+        return val
+    raise ValueError(schedule)

@@ -1,0 +1,98 @@
+"""Graph Window Query facade (paper Definition 3).
+
+``GWQ(G, W, Σ, A)`` evaluated through any engine:
+
+* ``nonindex``   — per-vertex BFS (paper baseline)
+* ``bitset``     — vectorized non-index (batched bitset BFS)
+* ``dbindex``    — Dense Block Index (builds one if not supplied)
+* ``iindex``     — Inheritance Index (topological windows on DAGs)
+* ``eagr``       — EAGR overlay baseline
+* ``jax``        — device data plane (two-stage segment-reduce; sharded
+                   variant lives in :mod:`repro.core.engine_jax`)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.aggregates import AGGREGATES
+from repro.core.graph import Graph
+from repro.core.windows import KHopWindow, TopologicalWindow
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphWindowQuery:
+    """A single graph window function (G, W, Σ, A)."""
+
+    window: object  # KHopWindow | TopologicalWindow
+    agg: str = "sum"
+    attr: str = "val"
+
+    def __post_init__(self):
+        assert self.agg in AGGREGATES, f"unknown aggregate {self.agg}"
+
+    def run(
+        self,
+        g: Graph,
+        engine: str = "dbindex",
+        index: Optional[object] = None,
+        **kw,
+    ) -> np.ndarray:
+        values = g.attrs[self.attr]
+        if engine == "nonindex":
+            from repro.core.nonindex import query_pervertex
+
+            return query_pervertex(g, self.window, values, self.agg, **kw)
+        if engine == "bitset":
+            from repro.core.nonindex import query_batched_bitset
+
+            return query_batched_bitset(g, self.window, values, self.agg)
+        if engine == "dbindex":
+            if index is None:
+                from repro.core.dbindex import build_dbindex
+
+                index = build_dbindex(g, self.window, **kw)
+            return index.query(values, self.agg)
+        if engine == "iindex":
+            assert isinstance(self.window, TopologicalWindow)
+            if index is None:
+                from repro.core.iindex import build_iindex
+
+                index = build_iindex(g)
+            return index.query(values, self.agg)
+        if engine == "eagr":
+            if index is None:
+                from repro.core.eagr import build_eagr
+
+                index = build_eagr(g, self.window, **kw)
+            return index.query(values, self.agg)
+        if engine == "jax":
+            from repro.core import engine_jax
+
+            if index is None:
+                from repro.core.dbindex import build_dbindex
+
+                index = build_dbindex(g, self.window, **kw)
+            plan = engine_jax.plan_from_dbindex(index)
+            return np.asarray(engine_jax.query_dbindex(plan, values, self.agg))
+        raise ValueError(f"unknown engine {engine!r}")
+
+
+def brute_force(g: Graph, window, values: np.ndarray, agg: str = "sum") -> np.ndarray:
+    """Reference oracle used by property tests — independent code path."""
+    from repro.core.windows import khop_window_single, topological_window_single
+
+    a = AGGREGATES[agg]
+    chans = a.prepare(np.asarray(values))
+    outs = [np.full(g.n, m.identity) for m in a.monoids]
+    for v in range(g.n):
+        if isinstance(window, KHopWindow):
+            w = khop_window_single(g, window.k, v)
+        else:
+            w = topological_window_single(g, v)
+        for o, m, c in zip(outs, a.monoids, chans):
+            o[v] = m.np_op.reduce(c[w]) if w.size else m.identity
+    return a.finalize_np(*outs)

@@ -1,0 +1,209 @@
+"""Dynamic-graph updates (paper §4.3 and §5.3).
+
+Attribute updates never touch either index (both are structure-only).
+
+Structural updates:
+
+* **DBIndex** — two-phase maintenance (§4.3).  Phase 1 (here): identify the
+  owner set ``S`` whose windows changed, drop their links from the primary
+  index, build a *secondary* DBIndex over their new windows, and merge.  The
+  merged index is exactly correct but possibly less shared than a fresh
+  build.  Phase 2: :func:`reorganize` = full rebuild (run periodically).
+* **I-Index** — localized rebuild of the affected descendant cone (§5.3's
+  four cases collapse to: every vertex whose ancestor set may change is a
+  descendant of the edge head ``t``; we recompute PID/WD for exactly that
+  cone, reusing untouched entries).  The paper defers efficient update
+  algorithms to future work; this is the correct localized variant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core.dbindex import DBIndex, _Builder, _blocks_from_windows, build_dbindex
+from repro.core.graph import Graph
+from repro.core.iindex import IIndex, build_iindex
+from repro.core.windows import (
+    KHopWindow,
+    TopologicalWindow,
+    khop_reach_bitsets,
+    khop_windows,
+)
+
+Array = np.ndarray
+
+
+# --------------------------- graph edits ------------------------------ #
+def insert_edge(g: Graph, s: int, t: int) -> Graph:
+    return g.with_edges(np.append(g.src, np.int32(s)), np.append(g.dst, np.int32(t)))
+
+
+def delete_edge(g: Graph, s: int, t: int) -> Graph:
+    hit = np.flatnonzero((g.src == s) & (g.dst == t))
+    if not g.directed and hit.size == 0:
+        hit = np.flatnonzero((g.src == t) & (g.dst == s))
+    if hit.size == 0:
+        raise KeyError(f"edge ({s},{t}) not present")
+    keep = np.ones(g.n_edges, dtype=bool)
+    keep[hit[0]] = False
+    return g.with_edges(g.src[keep], g.dst[keep])
+
+
+# ------------------------ affected-owner sets ------------------------- #
+def affected_owners_khop(g_new: Graph, k: int, s: int, t: int) -> Array:
+    """Owners whose k-hop window may change after touching edge (s,t):
+    vertices that reach `s` within k-1 hops (plus s itself), on either
+    endpoint for undirected graphs."""
+    rg = Graph(
+        n=g_new.n, src=g_new.dst, dst=g_new.src, directed=True
+    ) if g_new.directed else g_new
+    ends = [s] if g_new.directed else [s, t]
+    out: Set[int] = set()
+    for e in ends:
+        reach = khop_reach_bitsets(rg, max(k - 1, 0), np.array([e], np.int32))
+        hit = np.flatnonzero(
+            np.unpackbits(reach.view(np.uint8), axis=1, bitorder="little")[:, 0]
+        )
+        out.update(int(x) for x in hit)
+        out.add(int(e))
+    return np.array(sorted(out), dtype=np.int32)
+
+
+def descendants(g: Graph, t: int) -> Array:
+    """t plus all vertices reachable from t (directed)."""
+    seen = np.zeros(g.n, dtype=bool)
+    seen[t] = True
+    stack = [int(t)]
+    while stack:
+        u = stack.pop()
+        for w in g.out_neighbors(u):
+            if not seen[w]:
+                seen[w] = True
+                stack.append(int(w))
+    return np.flatnonzero(seen).astype(np.int32)
+
+
+# ------------------------- DBIndex maintenance ------------------------ #
+def update_dbindex(
+    index: DBIndex, g_new: Graph, window, s: int, t: int
+) -> DBIndex:
+    """Incremental phase-1 maintenance after inserting/deleting edge (s,t)."""
+    if isinstance(window, KHopWindow):
+        owners = affected_owners_khop(g_new, window.k, s, t)
+        wins = khop_windows(g_new, window.k, owners)
+    elif isinstance(window, TopologicalWindow):
+        owners = descendants(g_new, t)
+        # windows of affected owners on the new graph
+        from repro.core.windows import topological_window_single
+
+        wins = [topological_window_single(g_new, int(v)) for v in owners]
+    else:
+        raise TypeError(window)
+
+    # drop links of affected owners from the primary
+    affected = np.zeros(index.n, dtype=bool)
+    affected[owners] = True
+    owner_ids = index.link_owner_ids
+    keep = ~affected[owner_ids]
+    kept_block = index.link_block[keep]
+    kept_owner = owner_ids[keep]
+
+    # secondary index: blocks over the new windows of affected owners
+    b = _Builder(index.n)
+    _blocks_from_windows(b, owners, wins)
+    sec = b.finish({})
+
+    # merge: secondary block ids offset by primary count
+    nb0 = index.num_blocks
+    sizes0 = np.diff(index.block_offsets)
+    new_sizes = np.diff(sec.block_offsets)
+    block_members = np.concatenate([index.block_members, sec.block_members])
+    block_offsets = np.zeros(nb0 + sec.num_blocks + 1, dtype=np.int64)
+    np.cumsum(np.concatenate([sizes0, new_sizes]), out=block_offsets[1:])
+    lb_new = (sec.link_block + nb0).astype(np.int32)
+    lo_new = sec.link_owner_ids.astype(np.int32)
+    lb = np.concatenate([kept_block, lb_new])
+    lo_ = np.concatenate([kept_owner, lo_new])
+    order = np.lexsort((lb, lo_))
+    lb, lo_ = lb[order], lo_[order]
+    link_owner_offsets = np.zeros(index.n + 1, dtype=np.int64)
+    np.cumsum(np.bincount(lo_, minlength=index.n), out=link_owner_offsets[1:])
+    stats = dict(index.stats)
+    stats["incremental_updates"] = stats.get("incremental_updates", 0) + 1
+    stats["last_affected_owners"] = int(owners.size)
+    return DBIndex(
+        n=index.n,
+        num_blocks=nb0 + sec.num_blocks,
+        block_members=block_members,
+        block_offsets=block_offsets,
+        link_block=lb,
+        link_owner_offsets=link_owner_offsets,
+        stats=stats,
+    )
+
+
+def reorganize(g: Graph, window, method: str = "emc", **kw) -> DBIndex:
+    """Phase-2 periodic reorganization = fresh build (paper §4.3)."""
+    if isinstance(window, TopologicalWindow):
+        method = "mc"
+    return build_dbindex(g, window, method=method, **kw)
+
+
+# ------------------------- I-Index maintenance ------------------------ #
+def update_iindex(index: IIndex, g_new: Graph, s: int, t: int) -> IIndex:
+    """Localized rebuild of the descendant cone of t on the new graph."""
+    cone = descendants(g_new, t)
+    if cone.size > index.n // 2:
+        return build_iindex(g_new)  # cheaper to rebuild outright
+    from repro.core.windows import topological_window_single
+
+    pid = index.pid.copy()
+    level = index.level.copy()
+    wd_lists = [index.wd(v) for v in range(index.n)]
+    # recompute in topological order restricted to the cone
+    order = g_new.topological_order()
+    in_cone = np.zeros(index.n, dtype=bool)
+    in_cone[cone] = True
+    win_cache: dict = {}
+
+    def win(v: int) -> Array:
+        if v not in win_cache:
+            win_cache[v] = topological_window_single(g_new, v)
+        return win_cache[v]
+
+    for v in order:
+        v = int(v)
+        if not in_cone[v]:
+            continue
+        parents = g_new.in_neighbors(v)
+        best, best_c = -1, -1
+        for p in parents:
+            c = win(int(p)).size
+            if c > best_c:
+                best_c, best = c, int(p)
+        wv = win(v)
+        if best != -1:
+            wd = np.setdiff1d(wv, win(best), assume_unique=True)
+        else:
+            wd = wv
+        pid[v] = best
+        wd_lists[v] = wd.astype(np.int32)
+        level[v] = 0 if best == -1 else level[best] + 1
+
+    sizes = np.array([w.size for w in wd_lists], dtype=np.int64)
+    wd_offsets = np.zeros(index.n + 1, dtype=np.int64)
+    np.cumsum(sizes, out=wd_offsets[1:])
+    stats = dict(index.stats)
+    stats["incremental_updates"] = stats.get("incremental_updates", 0) + 1
+    return IIndex(
+        n=index.n,
+        pid=pid,
+        wd_members=np.concatenate(wd_lists).astype(np.int32) if index.n else np.empty(0, np.int32),
+        wd_offsets=wd_offsets,
+        level=level,
+        topo_order=order,
+        stats=stats,
+    )

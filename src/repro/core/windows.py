@@ -1,0 +1,236 @@
+"""Window specifications and host-side window computation.
+
+Implements the paper's two window instantiations (Definitions 1 and 2):
+
+* :class:`KHopWindow` — ``W_kh(v)`` = vertices reachable from ``v`` within
+  ``k`` hops (follows out-edges on directed graphs, all edges on undirected
+  graphs).  Includes ``v`` itself, matching the paper's running examples
+  (``W(B) = {A, B, D, F}`` contains ``B``).
+* :class:`TopologicalWindow` — ``W_t(v)`` = ``{v}`` plus all ancestors of
+  ``v`` in a DAG (the paper's example ``W_t(E) = {A,B,C,D,E}`` includes
+  ``E``).
+
+Host computation uses *batched multi-source bitset BFS*: reachability bits
+for a batch of B source vertices are packed into ``uint64`` words and the
+k-hop expansion is one vectorized scatter-OR per hop (``R[dst] |= R[src]``
+grouped with ``np.bitwise_or.reduceat``).  This is the NumPy mirror of the
+TPU `bitset_expand` Pallas kernel and is what lets index construction avoid
+materializing all windows at once (the paper's central memory argument
+against EAGR).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.graph import Graph
+
+Array = np.ndarray
+
+
+# ---------------------------------------------------------------------- #
+#  Window specs
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class KHopWindow:
+    """k-hop window (Definition 1)."""
+
+    k: int
+
+    def __post_init__(self):
+        assert self.k >= 1
+
+    def name(self) -> str:
+        return f"khop[{self.k}]"
+
+    def windows(self, g: Graph, sources: Optional[Array] = None) -> List[Array]:
+        return khop_windows(g, self.k, sources)
+
+    def batches(self, g: Graph, batch: int = 4096) -> Iterator[Tuple[Array, List[Array]]]:
+        return khop_window_batches(g, self.k, batch)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologicalWindow:
+    """Topological window (Definition 2) — ancestors in a DAG, plus self."""
+
+    def name(self) -> str:
+        return "topological"
+
+    def windows(self, g: Graph, sources: Optional[Array] = None) -> List[Array]:
+        return topological_windows(g, sources)
+
+
+WindowSpec = object  # typing alias; either of the dataclasses above
+
+
+# ---------------------------------------------------------------------- #
+#  Batched bitset BFS
+# ---------------------------------------------------------------------- #
+def _scatter_or_rows(
+    reach: Array, src_sorted: Array, dst_sorted: Array, group_starts: Array, dst_unique: Array
+) -> Array:
+    """new[dst] |= OR-reduce of reach[src] grouped by dst.  reach: [n, W] u64."""
+    if src_sorted.size == 0:
+        return reach
+    gathered = reach[src_sorted]  # [E, W]
+    reduced = np.bitwise_or.reduceat(gathered, group_starts, axis=0)
+    out = reach.copy()
+    out[dst_unique] |= reduced
+    return out
+
+
+def _sorted_edges_by_dst(g: Graph) -> Tuple[Array, Array, Array, Array]:
+    """Symmetrized-if-undirected edges sorted by dst + reduceat group info."""
+    if g.directed:
+        src, dst = g.src, g.dst
+    else:
+        src = np.concatenate([g.src, g.dst])
+        dst = np.concatenate([g.dst, g.src])
+    order = np.argsort(dst, kind="stable")
+    src, dst = src[order], dst[order]
+    dst_unique, group_starts = np.unique(dst, return_index=True)
+    return src, dst, group_starts, dst_unique
+
+
+def khop_reach_bitsets(g: Graph, k: int, sources: Array) -> Array:
+    """Packed reachability: bit j of word row u says source[j] reaches u in <=k hops.
+
+    Returns uint64 array of shape [n, ceil(B/64)].
+    """
+    sources = np.asarray(sources, np.int64)
+    b = sources.size
+    words = (b + 63) // 64
+    reach = np.zeros((g.n, words), dtype=np.uint64)
+    cols = np.arange(b)
+    reach[sources, cols // 64] |= np.uint64(1) << (cols % 64).astype(np.uint64)
+    src, dst, group_starts, dst_unique = _sorted_edges_by_dst(g)
+    for _ in range(k):
+        new = _scatter_or_rows(reach, src, dst, group_starts, dst_unique)
+        if np.array_equal(new, reach):  # converged early (small diameter)
+            break
+        reach = new
+    return reach
+
+
+def _bitsets_to_windows(reach: Array, sources: Array) -> List[Array]:
+    """Column j of the packed matrix -> sorted member array for source j."""
+    n, _ = reach.shape
+    b = sources.size
+    out: List[Array] = []
+    # unpack per 64-column block to bound memory
+    for w in range((b + 63) // 64):
+        lo, hi = w * 64, min((w + 1) * 64, b)
+        block = reach[:, w]  # [n] uint64
+        for j in range(lo, hi):
+            bit = np.uint64(1) << np.uint64(j - lo)
+            members = np.flatnonzero((block & bit) != 0).astype(np.int32)
+            out.append(members)
+    return out
+
+
+def khop_windows(g: Graph, k: int, sources: Optional[Array] = None) -> List[Array]:
+    """Materialize W_kh for the given sources (default: all vertices)."""
+    if sources is None:
+        sources = np.arange(g.n, dtype=np.int32)
+    sources = np.asarray(sources, np.int32)
+    out: List[Array] = []
+    for lo in range(0, sources.size, 4096):
+        batch = sources[lo : lo + 4096]
+        reach = khop_reach_bitsets(g, k, batch)
+        out.extend(_bitsets_to_windows(reach, batch))
+    return out
+
+
+def khop_window_batches(
+    g: Graph, k: int, batch: int = 4096
+) -> Iterator[Tuple[Array, List[Array]]]:
+    """Stream (source_batch, windows) without holding all windows in memory."""
+    sources = np.arange(g.n, dtype=np.int32)
+    for lo in range(0, g.n, batch):
+        chunk = sources[lo : lo + batch]
+        reach = khop_reach_bitsets(g, k, chunk)
+        yield chunk, _bitsets_to_windows(reach, chunk)
+
+
+def khop_window_single(g: Graph, k: int, v: int) -> Array:
+    """Per-vertex frontier BFS — the paper's Non-Indexed primitive."""
+    seen = np.zeros(g.n, dtype=bool)
+    seen[v] = True
+    frontier = np.array([v], dtype=np.int32)
+    for _ in range(k):
+        if frontier.size == 0:
+            break
+        starts = g.out_indptr[frontier]
+        lens = g.out_indptr[frontier + 1] - starts
+        total = int(lens.sum())
+        if total == 0:
+            break
+        idx = np.repeat(starts, lens) + (
+            np.arange(total) - np.repeat(np.cumsum(lens) - lens, lens)
+        )
+        nbr = g.out_indices[idx]
+        nbr = nbr[~seen[nbr]]
+        nbr = np.unique(nbr)
+        seen[nbr] = True
+        frontier = nbr.astype(np.int32)
+    return np.flatnonzero(seen).astype(np.int32)
+
+
+# ---------------------------------------------------------------------- #
+#  Topological windows (ancestor sets)
+# ---------------------------------------------------------------------- #
+def topological_windows(g: Graph, sources: Optional[Array] = None) -> List[Array]:
+    """W_t(v) = {v} ∪ ancestors(v) for every v (or the given sources).
+
+    One topological sweep propagating packed ancestor bitsets down out-edges.
+    Memory is bounded by freeing a vertex's bitset once all children consumed
+    it (the paper's Algorithm 4 memory discipline); here we keep the simple
+    dense [n, n/64] variant for n up to ~60k and a chunked variant above.
+    """
+    order = g.topological_order()
+    words = (g.n + 63) // 64
+    # chunk over *bit columns* (ancestor id space) to bound memory at ~512MB
+    max_cols_words = max(1, (512 * 2**20) // max(1, 8 * g.n))
+    anc = None
+    pieces: List[Array] = []
+    for wlo in range(0, words, max_cols_words):
+        whi = min(words, wlo + max_cols_words)
+        anc = np.zeros((g.n, whi - wlo), dtype=np.uint64)
+        ids = np.arange(g.n, dtype=np.int64)
+        in_range = (ids >= wlo * 64) & (ids < whi * 64)
+        rel = ids[in_range] - wlo * 64
+        anc[ids[in_range], rel // 64] |= np.uint64(1) << (rel % 64).astype(np.uint64)
+        for v in order:
+            ch = g.out_neighbors(v)
+            if ch.size:
+                anc[ch] |= anc[v]
+        pieces.append(anc)
+    full = np.concatenate(pieces, axis=1) if len(pieces) > 1 else pieces[0]
+    if sources is None:
+        sources = np.arange(g.n, dtype=np.int32)
+    out: List[Array] = []
+    for v in np.asarray(sources, np.int64):
+        row = full[v]
+        members = np.flatnonzero(
+            np.unpackbits(row.view(np.uint8), bitorder="little")[: g.n]
+        ).astype(np.int32)
+        out.append(members)
+    return out
+
+
+def topological_window_single(g: Graph, v: int) -> Array:
+    """Reverse BFS from v over in-edges (brute-force oracle)."""
+    seen = np.zeros(g.n, dtype=bool)
+    seen[v] = True
+    frontier = [int(v)]
+    while frontier:
+        u = frontier.pop()
+        for p in g.in_neighbors(u):
+            if not seen[p]:
+                seen[p] = True
+                frontier.append(int(p))
+    return np.flatnonzero(seen).astype(np.int32)

@@ -1,0 +1,8 @@
+"""Data pipelines: deterministic synthetic streams, shard-aware loaders."""
+
+from repro.data.pipeline import (  # noqa: F401
+    TokenStream,
+    GraphBatcher,
+    RecsysStream,
+    NeighborSampler,
+)

@@ -1,0 +1,10 @@
+"""Distribution layer: per-family sharding rules + collective helpers."""
+
+from repro.distributed.sharding_rules import (  # noqa: F401
+    lm_param_specs,
+    lm_batch_specs,
+    moe_param_specs,
+    gnn_specs,
+    recsys_specs,
+    opt_state_specs,
+)

@@ -1,0 +1,68 @@
+"""Activation sharding constraints (GSPMD hints).
+
+Reshape-heavy spots (attention head folding, MoE dispatch) can break GSPMD
+propagation and silently replicate multi-GiB activations.  Models accept an
+optional ``acts`` dict of named PartitionSpecs and call :func:`constrain`
+at the few places that anchor the layout:
+
+* ``res``    — the residual stream [B, S, D].  The production rule is
+  *sequence parallelism*: P(dp, "model", None) — S divides the model axis
+  for every assigned shape, unlike head counts (minitron has 24 q heads on
+  a 16-wide axis), so this is the universally valid TP anchoring.
+* ``logits`` — [B, S_or_1, V]: P(dp, None, "model") (vocab-sharded).
+* ``kv``     — cache [L, B, H, S, D]: P(None, dp, None, "model", None).
+
+``constrain(x, acts, name)`` is a no-op when acts is None or the name is
+absent — smoke tests and single-device runs never see a mesh requirement.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P  # noqa: F401  (re-export)
+
+
+def constrain(x, acts: Optional[Dict], name: str):
+    if acts is None:
+        return x
+    spec = acts.get(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def lm_train_acts(dp_axes, mesh=None) -> Dict:
+    d = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    acts = {
+        "res": P(d, "model", None),
+        "logits": P(d, None, "model"),  # vocab-sharded; lse psums over model
+        "loss_hidden": P(d, None, None),  # gathered over model for the head
+        "loss_logits": P(d, None, "model"),  # per-chunk logits, vocab-sharded
+    }
+    if mesh is not None:
+        acts["moe_shard"] = (mesh, tuple(dp_axes), "model")
+    return acts
+
+
+def lm_prefill_acts(dp_axes, mesh=None) -> Dict:
+    d = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    acts = {
+        "res": P(d, "model", None),
+        "logits": P(d, "model"),  # [B, V] last-token logits
+    }
+    if mesh is not None:
+        acts["moe_shard"] = (mesh, tuple(dp_axes), "model")
+    return acts
+
+
+def lm_decode_acts(dp_axes, mesh=None) -> Dict:
+    d = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    acts = {
+        "res": P(d, None, None),  # [B, 1, D]
+        "logits": P(d, "model"),
+    }
+    if mesh is not None:
+        acts["moe_shard"] = (mesh, tuple(dp_axes), "model")
+    return acts

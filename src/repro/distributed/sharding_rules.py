@@ -1,0 +1,150 @@
+"""PartitionSpec rules per architecture family (DESIGN.md §5).
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  ``dp_axes`` below is ``("data",)`` or ``("pod", "data")``.
+
+LM (dense & MoE), FSDP×TP posture:
+
+* 2-D parameter sharding: the *fsdp* axis (= dp axes) shards the d_model
+  (rows) dimension of every matmul weight, the *model* axis shards the
+  head/ff (cols) dimension — params and optimizer state are fully sharded
+  over the entire mesh (grok-1 f32 master + bf16 moments fit 256 chips).
+* activations: batch over dp axes, heads/ff over model.
+* vocab sharded over model for embed/unembed (logits psum via GSPMD).
+
+GNN: edges over dp axes (segment partials psum'd), features over model when
+wide, node state replicated (full-batch) or batch-sharded (sampled).
+
+RecSys: embedding tables row-sharded over model (mod-hash), batch over dp.
+
+All rules return pytrees of PartitionSpec matching the param pytrees.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _fsdp(dp_axes: Tuple[str, ...]):
+    return dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+
+def lm_param_specs(cfg, dp_axes: Tuple[str, ...] = ("data",), fsdp: bool = True):
+    """Spec tree matching transformer.init / moe.init param trees."""
+    f = _fsdp(dp_axes) if fsdp else None
+    layer = {
+        "ln1": P(None),
+        "ln2": P(None),
+        "wq": P(None, f, "model"),
+        "wk": P(None, f, "model"),
+        "wv": P(None, f, "model"),
+        "wo": P(None, "model", f),
+        "w_gate": P(None, f, "model"),
+        "w_up": P(None, f, "model"),
+        "w_down": P(None, "model", f),
+    }
+    if getattr(cfg, "qk_norm", False):
+        layer["q_norm"] = P(None)
+        layer["k_norm"] = P(None)
+    specs = {
+        "embed": P("model", f),
+        "layers": layer,
+        "ln_f": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P(f, "model")
+    return specs
+
+
+def moe_param_specs(cfg, dp_axes: Tuple[str, ...] = ("data",), fsdp: bool = True,
+                    expert_parallel: bool = False):
+    f = _fsdp(dp_axes) if fsdp else None
+    base = lm_param_specs(cfg, dp_axes, fsdp)
+    layer = dict(base["layers"])
+    for k in ("w_gate", "w_up", "w_down"):
+        layer.pop(k, None)
+    if expert_parallel:
+        # experts over model axis (requires n_experts_padded % model == 0)
+        layer.update(
+            router=P(None, f, None),
+            we_gate=P(None, "model", f, None),
+            we_up=P(None, "model", f, None),
+            we_down=P(None, "model", None, f),
+        )
+    else:
+        # TP inside each expert's ffn hidden dim
+        layer.update(
+            router=P(None, f, None),
+            we_gate=P(None, None, f, "model"),
+            we_up=P(None, None, f, "model"),
+            we_down=P(None, None, "model", f),
+        )
+    if cfg.n_shared_experts:
+        layer.update(
+            ws_gate=P(None, f, "model"),
+            ws_up=P(None, f, "model"),
+            ws_down=P(None, "model", f),
+        )
+    base["layers"] = layer
+    return base
+
+
+def lm_batch_specs(dp_axes: Tuple[str, ...] = ("data",)):
+    d = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    return {"tokens": P(d, None), "labels": P(d, None)}
+
+
+def kv_cache_specs(dp_axes: Tuple[str, ...] = ("data",), seq_axis: str = "model"):
+    """KV cache [L, B, Hkv, S, D]: batch over dp, sequence over model
+    (flash-decode combines softmax stats over the model axis)."""
+    d = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    return {"k": P(None, d, None, seq_axis, None), "v": P(None, d, None, seq_axis, None)}
+
+
+def gnn_specs(dp_axes: Tuple[str, ...] = ("data",)):
+    d = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    return {
+        "edges": P(d),
+        "nodes": P(None),  # replicated node state (full-batch)
+        "node_batch": P(d),  # sampled-minibatch node sharding
+    }
+
+
+def recsys_specs(dp_axes: Tuple[str, ...] = ("data",)):
+    d = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    return {
+        "emb": P("model", None),  # row-sharded tables
+        "w1": P("model"),
+        "bias": P(),
+        "batch": P(d, None),
+    }
+
+
+def opt_state_specs(param_specs, opt_state):
+    """Optimizer-state spec tree: moments shard exactly like their param
+    (FSDP of the optimizer state for free); Adafactor row/col factors drop
+    the reduced axis from the param spec; scalars replicate."""
+    from repro.optim.optimizers import AdafactorState, AdamWState, SGDState
+
+    if isinstance(opt_state, AdamWState):
+        return AdamWState(step=P(), mu=param_specs, nu=param_specs)
+    if isinstance(opt_state, SGDState):
+        return SGDState(step=P(), momentum=param_specs)
+    if isinstance(opt_state, AdafactorState):
+        def drop(spec, which):
+            t = tuple(spec)
+            if len(t) < 2:
+                return P()
+            return P(*(t[:-1] if which == "row" else t[:-2] + t[-1:]))
+
+        row = jax.tree_util.tree_map(lambda s: drop(s, "row"), param_specs,
+                                     is_leaf=lambda x: isinstance(x, P))
+        col = jax.tree_util.tree_map(lambda s: drop(s, "col"), param_specs,
+                                     is_leaf=lambda x: isinstance(x, P))
+        full = jax.tree_util.tree_map(lambda s: P(), param_specs,
+                                      is_leaf=lambda x: isinstance(x, P))
+        return AdafactorState(step=P(), row=row, col=col, full=full)
+    raise TypeError(type(opt_state))

@@ -1,0 +1,10 @@
+"""Graph data substrate: generators, neighbor sampling, device partitioning."""
+
+from repro.graphs.generators import (  # noqa: F401
+    erdos_renyi,
+    barabasi_albert,
+    random_dag,
+    grid_mesh,
+    batched_molecules,
+    with_random_attrs,
+)

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: one k-hop BFS expansion step over packed bitsets.
+
+TPU adaptation of the paper's window-computation primitive (DESIGN.md §2):
+multi-source reachability is a scatter-OR of ``uint32``-packed source rows
+into destination rows over a dst-sorted edge list — i.e. a segment-OR with
+the same tile-aligned plan as the segment-sum kernel.
+
+OR is not a matmul monoid, so the kernel uses the two-step TPU idiom:
+
+1. **Segmented Hillis–Steele OR-scan** over the row tile (log2(TM) vector
+   steps on the VPU; rows of different segments masked out of each shift),
+   after which the *last* row of every segment holds the tile-local OR.
+2. **Boundary extraction via 16-bit split one-hot matmul**: each output row
+   receives exactly one boundary contribution per tile, so splitting words
+   into exact-in-f32 16-bit halves makes the MXU scatter the boundary rows
+   (sum of one term == the value), recombined as ``lo | hi << 16``.
+
+Cross-tile continuation of a segment is handled by OR-idempotent revisit
+accumulation on the resident output block (same consecutive-revisit
+guarantee as segment_sum).  Lane count W = 128 uint32 words = 4096 BFS
+sources per sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TM = 256
+DEFAULT_TS = 256
+
+
+def _expand_kernel(m2out_ref, first_ref, seg_ref, rows_ref, base_ref, out_ref, *, ts: int):
+    mi = pl.program_id(0)
+    out_tile = m2out_ref[mi]
+    seg = seg_ref[0, :]  # [TM] int32, -1 padding
+    vals = rows_ref[...].astype(jnp.uint32)  # [TM, W] gathered reach[src]
+    tm = seg.shape[0]
+    vals = jnp.where((seg >= 0)[:, None], vals, jnp.uint32(0))
+    # segmented inclusive OR-scan down the rows
+    shift = 1
+    while shift < tm:
+        rolled = pltpu.roll(vals, shift, 0)
+        seg_rolled = pltpu.roll(seg, shift, 0)
+        row = jax.lax.broadcasted_iota(jnp.int32, (tm,), 0)
+        same = (row >= shift) & (seg_rolled == seg)
+        vals = vals | jnp.where(same[:, None], rolled, jnp.uint32(0))
+        shift *= 2
+    # boundary = last row of each segment within the tile
+    nxt = pltpu.roll(seg, tm - 1, 0)  # nxt[i] = seg[i+1 mod tm]
+    row = jax.lax.broadcasted_iota(jnp.int32, (tm,), 0)
+    boundary = (seg >= 0) & ((nxt != seg) | (row == tm - 1))
+    rel = jnp.where(boundary, seg - out_tile * ts, 0)
+    ok = boundary & (rel >= 0) & (rel < ts)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tm, ts), 1)
+    oh = jnp.where(ok[:, None], (iota == rel[:, None]).astype(jnp.float32), 0.0)
+    lo = (vals & jnp.uint32(0xFFFF)).astype(jnp.float32)
+    hi = (vals >> jnp.uint32(16)).astype(jnp.float32)
+    plo = jax.lax.dot_general(oh, lo, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    phi = jax.lax.dot_general(oh, hi, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    partial = plo.astype(jnp.uint32) | (phi.astype(jnp.uint32) << jnp.uint32(16))
+
+    @pl.when(first_ref[mi] == 1)
+    def _init():
+        out_ref[...] = partial | base_ref[...]
+
+    @pl.when(first_ref[mi] == 0)
+    def _acc():
+        out_ref[...] = out_ref[...] | partial
+
+
+@functools.partial(jax.jit, static_argnames=("num_out_tiles", "tm", "ts", "interpret"))
+def bitset_expand_tiled(
+    gathered_rows,  # [Mpad, W] uint32 = reach[edge_src] tile-aligned
+    base,  # [num_out_tiles*TS, W] uint32 = current reach (self OR)
+    seg_ids,  # [nm, TM] int32 (-1 padding)
+    m2out,
+    first_visit,
+    *,
+    num_out_tiles: int,
+    tm: int = DEFAULT_TM,
+    ts: int = DEFAULT_TS,
+    interpret: bool = False,
+):
+    num_m_tiles = seg_ids.shape[0]
+    w = gathered_rows.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(num_m_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, tm), lambda mi, m2out, first: (mi, 0)),
+            pl.BlockSpec((tm, w), lambda mi, m2out, first: (mi, 0)),
+            pl.BlockSpec((ts, w), lambda mi, m2out, first: (m2out[mi], 0)),
+        ],
+        out_specs=pl.BlockSpec((ts, w), lambda mi, m2out, first: (m2out[mi], 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_expand_kernel, ts=ts),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_out_tiles * ts, w), jnp.uint32),
+        compiler_params=pltpu.CompilerParams(dimension_semantics=(pltpu.ARBITRARY,)),
+        interpret=interpret,
+    )(m2out, first_visit, seg_ids, gathered_rows, base)

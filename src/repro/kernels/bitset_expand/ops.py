@@ -1,0 +1,70 @@
+"""Jit'd wrapper: k-hop reachability sweep on device.
+
+Reuses the segment-reduce tile plan (segments = destination vertices).  One
+call = one BFS hop for up to ``32 * W`` sources (W uint32 lane words, default
+128 -> 4096 sources), the on-device mirror of
+:func:`repro.core.windows.khop_reach_bitsets`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bitset_expand.bitset_expand import (
+    DEFAULT_TM,
+    DEFAULT_TS,
+    bitset_expand_tiled,
+)
+from repro.kernels.segment_reduce.ops import TilePlan, build_tile_plan
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def build_expand_plan(edge_src: np.ndarray, edge_dst: np.ndarray, n: int,
+                      tm: int = DEFAULT_TM, ts: int = DEFAULT_TS) -> TilePlan:
+    """Edges must be sorted by dst (DeviceGraph layout)."""
+    return build_tile_plan(edge_src, edge_dst, n, tm=tm, ts=ts)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitset_expand(plan: TilePlan, reach: jnp.ndarray,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """One expansion hop: returns new reach [n_pad, W] (same shape as input,
+    padded to num_out_tiles*TS rows)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    n_pad = plan.num_out_tiles * plan.ts
+    if reach.shape[0] != n_pad:
+        reach = jnp.pad(reach, ((0, n_pad - reach.shape[0]), (0, 0)))
+    gathered = jnp.take(reach, plan.gather_padded, axis=0)
+    return bitset_expand_tiled(
+        gathered,
+        reach,
+        plan.seg_tiles,
+        plan.m2out,
+        plan.first_visit,
+        num_out_tiles=plan.num_out_tiles,
+        tm=plan.tm,
+        ts=plan.ts,
+        interpret=interpret,
+    )
+
+
+def khop_reach(plan: TilePlan, n: int, sources: np.ndarray, k: int,
+               lanes: int = 128, interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Full k-hop sweep for <= 32*lanes sources; returns [n, lanes] uint32."""
+    sources = np.asarray(sources)
+    assert sources.size <= 32 * lanes
+    reach0 = np.zeros((n, lanes), dtype=np.uint32)
+    cols = np.arange(sources.size)
+    reach0[sources, cols // 32] |= np.uint32(1) << (cols % 32).astype(np.uint32)
+    r = jnp.asarray(reach0)
+    for _ in range(k):
+        r = bitset_expand(plan, r, interpret=interpret)[: n]
+    return r[:n]

@@ -1,0 +1,34 @@
+"""Jit'd attention entry points with backend-aware dispatch.
+
+``attention(...)`` picks the Pallas flash kernel on TPU (or in interpret
+mode for tests) and the jnp oracle otherwise.  The model code calls only
+this wrapper, so the dry-run lowers the Pallas kernel while CPU smoke tests
+ride the oracle at tiny shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import decode_ref, mha_ref
+
+
+def attention(q, k, v, *, causal: bool = True, local_window=None,
+              use_pallas: bool | None = None, interpret: bool | None = None,
+              bq: int = 512, bk: int = 512):
+    """q: [B, Hq, S, D]; k/v: [B, Hkv, S, D] -> [B, Hq, S, D]."""
+    s = q.shape[2]
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu" and s % bq == 0 and local_window is None
+    if not use_pallas:
+        return mha_ref(q, k, v, causal=causal, local_window=local_window)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_attention(q, k, v, causal=causal, bq=bq, bk=bk, interpret=interpret)
+
+
+def decode_attention(q, k_cache, v_cache, length):
+    """Single-token decode over a KV cache (XLA path; the sharded
+    flash-decode lives in repro.serve.engine via shard_map)."""
+    return decode_ref(q, k_cache, v_cache, length)

@@ -1,0 +1,17 @@
+"""Jit'd wrapper for the FM interaction kernel with CPU fallback."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.fm_interaction.fm_interaction import fm_interaction
+from repro.kernels.fm_interaction.ref import fm_interaction_ref
+
+
+def fm_second_order(emb, use_pallas: bool = True, interpret=None):
+    """emb: [B, F, K] -> [B].  Pallas on TPU / interpret; jnp oracle else."""
+    if not use_pallas:
+        return fm_interaction_ref(emb)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return fm_interaction(emb, interpret=interpret)

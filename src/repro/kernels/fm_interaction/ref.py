@@ -1,0 +1,18 @@
+"""Oracle for the FM second-order interaction (Rendle, ICDM'10).
+
+``y[b] = 0.5 * sum_k ( (sum_f v[b,f,k])^2 - sum_f v[b,f,k]^2 )``
+
+— the O(n*k) sum-square factorization of the pairwise dot interactions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fm_interaction_ref(emb):
+    """emb: [B, F, K] field embeddings (already weighted by feature value).
+    Returns [B] second-order interaction."""
+    s = jnp.sum(emb, axis=1)  # [B, K]
+    ss = jnp.sum(emb * emb, axis=1)  # [B, K]
+    return 0.5 * jnp.sum(s * s - ss, axis=-1)

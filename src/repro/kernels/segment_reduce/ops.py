@@ -1,0 +1,175 @@
+"""Jit'd wrapper + host tile-plan builder for the segment-reduce kernel.
+
+``build_tile_plan`` is run once at *index build time* (host, NumPy): it
+renumbers nothing (ids are already dense) but groups rows by output tile and
+pads so the Pallas kernel sees a tile-aligned layout.  The returned plan is
+a pytree of device arrays with static shapes — exactly what pjit wants.
+
+``segment_sum(plan, values)`` = gather + Pallas tiled segment sum.
+``segment_reduce(...)`` adds the min/max fallbacks (XLA segment ops): the
+paper's experiments use SUM exclusively (§6 "the window query is conducted
+by using SUM()"), so the MXU path optimizes sum/count/avg and min/max ride
+the well-tuned XLA lowering.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.segment_reduce.segment_reduce import (
+    DEFAULT_TM,
+    DEFAULT_TS,
+    segment_sum_tiled,
+)
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """Static-shape device plan for one sorted segment reduction."""
+
+    gather_padded: jnp.ndarray  # int32 [Mpad] index into values rows (0 on pad)
+    seg_tiles: jnp.ndarray  # int32 [nm, TM]; -1 on padding rows
+    m2out: jnp.ndarray  # int32 [nm]
+    first_visit: jnp.ndarray  # int32 [nm]
+    num_segments: int
+    num_out_tiles: int
+    tm: int
+    ts: int
+
+    def tree_flatten(self):
+        return (
+            (self.gather_padded, self.seg_tiles, self.m2out, self.first_visit),
+            (self.num_segments, self.num_out_tiles, self.tm, self.ts),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+jax.tree_util.register_pytree_node(
+    TilePlan, TilePlan.tree_flatten, TilePlan.tree_unflatten
+)
+
+
+def build_tile_plan(
+    gather_idx: np.ndarray,
+    segment_ids: np.ndarray,
+    num_segments: int,
+    tm: int = DEFAULT_TM,
+    ts: int = DEFAULT_TS,
+) -> TilePlan:
+    """Host-side plan: rows (sorted by segment id) -> tile-aligned layout."""
+    gather_idx = np.asarray(gather_idx, np.int32)
+    segment_ids = np.asarray(segment_ids, np.int64)
+    assert gather_idx.shape == segment_ids.shape
+    if segment_ids.size:
+        assert (np.diff(segment_ids) >= 0).all(), "segment_ids must be sorted"
+    sizes = np.bincount(segment_ids, minlength=num_segments).astype(np.int64)
+    n_out_tiles = max(1, -(-num_segments // ts))
+    group_rows = np.add.reduceat(sizes, np.arange(0, num_segments, ts)) if num_segments else np.zeros(1, np.int64)
+    if group_rows.size < n_out_tiles:
+        group_rows = np.pad(group_rows, (0, n_out_tiles - group_rows.size))
+    # >=1 input tile per output tile so every output block gets initialized
+    tiles_per_group = np.maximum(1, -(-group_rows // tm))
+    padded_rows = tiles_per_group * tm
+    total_pad = int(padded_rows.sum())
+    nm = int(tiles_per_group.sum())
+    # scatter original rows into the padded layout
+    src_group_start = np.zeros(n_out_tiles + 1, np.int64)
+    np.cumsum(group_rows, out=src_group_start[1:])
+    dst_group_start = np.zeros(n_out_tiles + 1, np.int64)
+    np.cumsum(padded_rows, out=dst_group_start[1:])
+    row_map = np.full(total_pad, -1, dtype=np.int64)
+    if segment_ids.size:
+        within = np.arange(segment_ids.size) - np.repeat(
+            src_group_start[:-1], group_rows
+        )
+        dst = np.repeat(dst_group_start[:-1], group_rows) + within
+        row_map[dst] = np.arange(segment_ids.size)
+    seg_padded = np.full(total_pad, -1, dtype=np.int32)
+    valid = row_map >= 0
+    seg_padded[valid] = segment_ids[row_map[valid]]
+    gather_padded = np.zeros(total_pad, dtype=np.int32)
+    gather_padded[valid] = gather_idx[row_map[valid]]
+    m2out = np.repeat(np.arange(n_out_tiles, dtype=np.int32), tiles_per_group)
+    first_visit = np.empty(nm, dtype=np.int32)
+    first_visit[0] = 1
+    first_visit[1:] = (np.diff(m2out) != 0).astype(np.int32)
+    return TilePlan(
+        gather_padded=jnp.asarray(gather_padded),
+        seg_tiles=jnp.asarray(seg_padded.reshape(nm, tm)),
+        m2out=jnp.asarray(m2out),
+        first_visit=jnp.asarray(first_visit),
+        num_segments=int(num_segments),
+        num_out_tiles=n_out_tiles,
+        tm=tm,
+        ts=ts,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
+def segment_sum(
+    plan: TilePlan,
+    values: jnp.ndarray,
+    interpret: Optional[bool] = None,
+    use_pallas: bool = True,
+):
+    """Fused gather + tiled segment sum.  values: [N] or [N, D] -> [S(, D)]."""
+    interpret = _default_interpret() if interpret is None else interpret
+    squeeze = values.ndim == 1
+    v = values[:, None] if squeeze else values
+    d = v.shape[1]
+    pad_d = (-d) % 128
+    if pad_d:
+        v = jnp.pad(v, ((0, 0), (0, pad_d)))
+    gathered = jnp.take(v, plan.gather_padded, axis=0)
+    if use_pallas:
+        out = segment_sum_tiled(
+            gathered.astype(jnp.float32),
+            plan.seg_tiles,
+            plan.m2out,
+            plan.first_visit,
+            num_out_tiles=plan.num_out_tiles,
+            tm=plan.tm,
+            ts=plan.ts,
+            interpret=interpret,
+        )
+    else:  # XLA fallback (same tile-aligned inputs)
+        sid = plan.seg_tiles.reshape(-1)
+        ok = sid >= 0
+        out = jax.ops.segment_sum(
+            jnp.where(ok[:, None], gathered, 0).astype(jnp.float32),
+            jnp.where(ok, sid, plan.num_out_tiles * plan.ts),
+            num_segments=plan.num_out_tiles * plan.ts + 1,
+        )[:-1]
+    out = out[: plan.num_segments, :d]
+    return out[:, 0] if squeeze else out
+
+
+def segment_reduce(
+    values, gather_idx, segment_ids, num_segments, op="add",
+    plan: Optional[TilePlan] = None, interpret: Optional[bool] = None,
+    use_pallas: bool = True,
+):
+    """General entry point.  SUM goes through the Pallas MXU path (plan
+    required or built eagerly); min/max use the XLA segment lowering."""
+    if op == "add":
+        if plan is None:
+            plan = build_tile_plan(
+                np.asarray(gather_idx), np.asarray(segment_ids), num_segments
+            )
+        return segment_sum(plan, values, interpret=interpret, use_pallas=use_pallas)
+    from repro.kernels.segment_reduce.ref import segment_reduce_ref
+
+    return segment_reduce_ref(values, gather_idx, segment_ids, num_segments, op)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the fused gather + segment-reduce primitive.
+
+This is the paper's entire query data plane as one op (DESIGN.md §2):
+``out[s] = op-reduce over { values[gather_idx[i]] : segment_ids[i] == s }``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax.ops
+
+
+def segment_reduce_ref(values, gather_idx, segment_ids, num_segments, op="add"):
+    """values: [N, D] (or [N]); gather_idx, segment_ids: [M] int32.
+
+    Rows with segment_ids < 0 are dropped (padding).  Returns [S, D].
+    """
+    squeeze = values.ndim == 1
+    if squeeze:
+        values = values[:, None]
+    gathered = values[jnp.clip(gather_idx, 0, values.shape[0] - 1)]
+    valid = segment_ids >= 0
+    sid = jnp.where(valid, segment_ids, num_segments)  # sink row
+    if op == "add":
+        gathered = jnp.where(valid[:, None], gathered, 0)
+        out = jax.ops.segment_sum(gathered, sid, num_segments=num_segments + 1)
+    elif op == "min":
+        big = jnp.array(jnp.inf, values.dtype) if jnp.issubdtype(values.dtype, jnp.floating) else jnp.iinfo(values.dtype).max
+        gathered = jnp.where(valid[:, None], gathered, big)
+        out = jax.ops.segment_min(gathered, sid, num_segments=num_segments + 1)
+    elif op == "max":
+        small = jnp.array(-jnp.inf, values.dtype) if jnp.issubdtype(values.dtype, jnp.floating) else jnp.iinfo(values.dtype).min
+        gathered = jnp.where(valid[:, None], gathered, small)
+        out = jax.ops.segment_max(gathered, sid, num_segments=num_segments + 1)
+    elif op == "or":
+        gathered = jnp.where(valid[:, None], gathered, 0)
+        out = jax.ops.segment_max(gathered, sid, num_segments=num_segments + 1)
+        raise NotImplementedError("use bitset_expand ref for packed-or")
+    else:
+        raise ValueError(op)
+    out = out[:num_segments]
+    return out[:, 0] if squeeze else out

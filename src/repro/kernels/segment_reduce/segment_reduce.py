@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: tiled segment-sum over sorted, tile-aligned segments.
+
+TPU-native rethink of the paper's shared-aggregation data plane (DESIGN.md
+§2).  The host plan (:func:`repro.kernels.segment_reduce.ops.build_tile_plan`)
+renumbers segments and pads rows so that
+
+* rows are grouped by segment, segments by output tile of ``TS`` ids,
+* every input tile of ``TM`` rows touches exactly **one** output tile,
+* all tiles visiting one output tile are consecutive in the grid.
+
+Inside the kernel, the per-tile reduction becomes a one-hot matmul on the
+MXU: ``partial[TS, D] = one_hot(seg - ts0)^T @ vals`` — the scatter that a
+GPU implementation would do with atomics is a systolic matrix product here.
+Revisit accumulation relies on Pallas TPU semantics: an output block whose
+index_map repeats across *consecutive* grid steps stays resident in VMEM, so
+``out += partial`` accumulates without ever round-tripping HBM.
+
+VMEM budget per grid step (defaults ``TM=512, TS=512, D<=256`` f32):
+vals 512·256·4 = 512 KiB, one-hot 512·512·4 = 1 MiB, out 512 KiB — well
+under the ~16 MiB/core budget, MXU-aligned (multiples of 128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TM = 512  # rows per input tile
+DEFAULT_TS = 512  # segment ids per output tile
+
+
+def _seg_sum_kernel(m2out_ref, first_ref, seg_ref, vals_ref, out_ref, *, ts: int):
+    mi = pl.program_id(0)
+    out_tile = m2out_ref[mi]
+    seg = seg_ref[0, :]  # [TM] int32 (padding rows carry -1)
+    vals = vals_ref[...]  # [TM, D]
+    tm = seg.shape[0]
+    rel = seg - out_tile * ts
+    valid = (rel >= 0) & (rel < ts)
+    rel = jnp.where(valid, rel, 0)
+    # one-hot [TM, TS] on the fly; padding rows masked out
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tm, ts), 1)
+    oh = jnp.where(valid[:, None], (iota == rel[:, None]).astype(vals.dtype), 0)
+    partial = jax.lax.dot_general(
+        oh,
+        vals,
+        (((0,), (0,)), ((), ())),  # contract over TM: [TS, D]
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(first_ref[mi] == 1)
+    def _init():
+        out_ref[...] = partial.astype(out_ref.dtype)
+
+    @pl.when(first_ref[mi] == 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + partial.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_out_tiles", "tm", "ts", "interpret")
+)
+def segment_sum_tiled(
+    vals,  # [M_pad, D] pre-gathered rows, grouped by segment
+    seg_ids,  # [num_m_tiles, TM] int32, -1 on padding rows
+    m2out,  # [num_m_tiles] int32: output tile per input tile (non-decreasing)
+    first_visit,  # [num_m_tiles] int32 {0,1}
+    *,
+    num_out_tiles: int,
+    tm: int = DEFAULT_TM,
+    ts: int = DEFAULT_TS,
+    interpret: bool = False,
+):
+    """Returns [num_out_tiles * TS, D] f32 segment sums."""
+    num_m_tiles = seg_ids.shape[0]
+    d = vals.shape[1]
+    assert vals.shape[0] == num_m_tiles * tm, (vals.shape, num_m_tiles, tm)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # m2out, first_visit
+        grid=(num_m_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, tm), lambda mi, m2out, first: (mi, 0)),
+            pl.BlockSpec((tm, d), lambda mi, m2out, first: (mi, 0)),
+        ],
+        out_specs=pl.BlockSpec((ts, d), lambda mi, m2out, first: (m2out[mi], 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_seg_sum_kernel, ts=ts),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_out_tiles * ts, d), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.ARBITRARY,)
+        ),
+        interpret=interpret,
+    )(m2out, first_visit, seg_ids, vals)

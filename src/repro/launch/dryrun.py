@@ -1,0 +1,176 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the entry point (``python -m repro.launch.dryrun``) — the XLA_FLAGS
+override above runs before any other import so the 512 placeholder devices
+exist when jax initializes.
+
+For every cell:
+  * build the step (ShapeDtypeStruct args — zero allocation),
+  * ``.lower()`` then ``.compile()`` under the production mesh,
+  * print ``memory_analysis()`` (fits-per-device proof) and
+    ``cost_analysis()`` (FLOPs/bytes for the roofline),
+  * parse the post-optimization HLO for collective bytes,
+  * append a JSON record to ``reports/dryrun_<mesh>.jsonl``.
+
+Usage:
+  python -m repro.launch.dryrun --arch minitron-4b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--cells a:s,b:t]
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs.registry import ARCHS, get_arch  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import analyze_compiled  # noqa: E402
+
+
+def build_step_for(arch_name: str, shape_name: str, mesh):
+    from repro.launch import steps
+
+    arch = get_arch(arch_name)
+    case = arch.shapes[shape_name]
+    if arch.family in ("lm-dense", "lm-moe"):
+        cfg = arch.model_cfg
+        if case.kind == "train":
+            return steps.build_lm_train(cfg, mesh, case.dims)
+        if case.kind == "prefill":
+            return steps.build_lm_prefill(cfg, mesh, case.dims)
+        if case.kind == "decode":
+            return steps.build_lm_decode(cfg, mesh, case.dims)
+    if arch.family == "gnn":
+        import importlib
+
+        mod = importlib.import_module(
+            {
+                "graphsage-reddit": "repro.configs.graphsage_reddit",
+                "meshgraphnet": "repro.configs.meshgraphnet",
+                "gcn-cora": "repro.configs.gcn_cora",
+                "gat-cora": "repro.configs.gat_cora",
+            }[arch_name]
+        )
+        cfg = mod.cfg_for(case.dims)
+        return steps.build_gnn_train(cfg, mesh, case.dims)
+    if arch.family == "recsys":
+        return steps.build_fm_step(arch.model_cfg, mesh, case.kind, case.dims)
+    if arch.family == "paper":
+        return steps.build_gwq_step(case.dims, mesh)
+    raise ValueError((arch_name, shape_name))
+
+
+def run_cell(arch_name: str, shape_name: str, mesh, mesh_tag: str,
+             report_dir: Path, verbose: bool = True):
+    arch = get_arch(arch_name)
+    rec = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": mesh_tag,
+        "status": "",
+    }
+    if shape_name in arch.skip:
+        rec["status"] = "skipped"
+        rec["reason"] = arch.skip[shape_name]
+        if verbose:
+            print(f"[SKIP] {arch_name} x {shape_name}: {rec['reason']}")
+        return rec
+    t0 = time.perf_counter()
+    try:
+        built = build_step_for(arch_name, shape_name, mesh)
+        with mesh:
+            lowered = built.lower(mesh)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        roof = analyze_compiled(compiled, mesh, arch_name, shape_name)
+        rec.update(
+            status="ok",
+            t_lower_s=round(t_lower, 1),
+            t_compile_s=round(t_compile, 1),
+            bytes_per_device=getattr(mem, "temp_size_in_bytes", None),
+            argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+            output_bytes=getattr(mem, "output_size_in_bytes", None),
+            flops=cost.get("flops") if isinstance(cost, dict) else None,
+            roofline=roof,
+        )
+        if verbose:
+            print(
+                f"[OK]   {arch_name} x {shape_name} ({mesh_tag}) "
+                f"lower {t_lower:.0f}s compile {t_compile:.0f}s | "
+                f"args/dev {rec['argument_bytes'] and rec['argument_bytes']/2**30:.2f} GiB "
+                f"temp/dev {rec['bytes_per_device'] and rec['bytes_per_device']/2**30:.2f} GiB | "
+                f"flops {rec['flops'] and rec['flops']:.3g}"
+            )
+            print("       roofline:", json.dumps(roof.get("terms", {})))
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"[:500]
+        if verbose:
+            print(f"[FAIL] {arch_name} x {shape_name}: {rec['error']}")
+            traceback.print_exc(limit=4)
+    report_dir.mkdir(parents=True, exist_ok=True)
+    with open(report_dir / f"dryrun_{mesh_tag}.jsonl", "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--cells", default=None, help="comma list arch:shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--report-dir", default="reports")
+    args = ap.parse_args(argv)
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [(make_production_mesh(), "1pod"),
+                  (make_production_mesh(multi_pod=True), "2pod")]
+    else:
+        mp = args.multi_pod
+        meshes = [(make_production_mesh(multi_pod=mp), "2pod" if mp else "1pod")]
+
+    cells = []
+    if args.cells:
+        for c in args.cells.split(","):
+            a, s = c.split(":")
+            cells.append((a, s))
+    elif args.all:
+        for a in ARCHS():
+            arch = get_arch(a)
+            for s in arch.shapes:
+                cells.append((a, s))
+    else:
+        cells.append((args.arch, args.shape))
+
+    report_dir = Path(args.report_dir)
+    n_ok = n_fail = n_skip = 0
+    for mesh, tag in meshes:
+        for a, s in cells:
+            rec = run_cell(a, s, mesh, tag, report_dir)
+            n_ok += rec["status"] == "ok"
+            n_fail += rec["status"] == "fail"
+            n_skip += rec["status"] == "skipped"
+    print(f"\ndry-run summary: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

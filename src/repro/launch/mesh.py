@@ -1,0 +1,29 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (jax locks the device count on first backend init; dryrun.py must set
+XLA_FLAGS before any jax call).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod; 2 pods for the multi-pod dry-run."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes_of(mesh) -> Tuple[str, ...]:
+    names = mesh.axis_names
+    return tuple(a for a in names if a in ("pod", "data"))
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for unit tests (requires host-platform device override)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,136 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware).
+
+Three terms per (arch x shape x mesh), all in seconds (TPU v5e targets):
+
+  compute   = HLO_FLOPs               / (chips * 197e12 FLOP/s bf16)
+  memory    = HLO_bytes_accessed      / (chips * 819e9  B/s HBM)
+  collective= collective_bytes        / (chips * 50e9   B/s per ICI link)
+
+``cost_analysis()`` supplies flops / bytes accessed.  Collective bytes are
+NOT in cost_analysis: we parse the post-optimization HLO text and sum the
+shape bytes of every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute operand.  MODEL_FLOPS (6*N*D dense, 6*N_active*D MoE) is
+attached per LM arch so the "useful compute" ratio is visible.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9_\[\]{}, ]+?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind from HLO text."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        if b:
+            out[kind] = out.get(kind, 0) + b
+    return out
+
+
+def model_flops_for(arch_name: str, shape_name: str, dims: Dict) -> Optional[float]:
+    """6*N*D (dense) / 6*N_active*D (MoE) for LM train; 2*N*D for inference."""
+    try:
+        from repro.configs.registry import get_arch
+
+        arch = get_arch(arch_name)
+        if arch.family == "lm-dense":
+            n = arch.model_cfg.n_params()
+        elif arch.family == "lm-moe":
+            n = arch.model_cfg.n_active_params()
+        else:
+            return None
+        tokens = dims.get("batch", 1) * dims.get("seq", 1)
+        case = arch.shapes[shape_name]
+        if case.kind == "train":
+            return 6.0 * n * tokens
+        if case.kind == "prefill":
+            return 2.0 * n * tokens
+        if case.kind == "decode":
+            return 2.0 * n * dims.get("batch", 1)
+    except Exception:  # noqa: BLE001
+        return None
+    return None
+
+
+def analyze_compiled(compiled, mesh, arch_name: str, shape_name: str) -> Dict:
+    chips = mesh.devices.size
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    # bytes accessed: sum every "bytes accessed*" key (operands + outputs)
+    bytes_accessed = 0.0
+    for k, v in cost.items():
+        if k.startswith("bytes accessed"):
+            bytes_accessed = max(bytes_accessed, float(v))
+    try:
+        hlo = compiled.as_text()
+    except Exception:  # noqa: BLE001
+        hlo = ""
+    coll = collective_bytes_from_hlo(hlo)
+    coll_total = float(sum(coll.values()))
+
+    # cost_analysis flops on the host backend are per-program (already
+    # partitioned).  Treat them as per-device numbers.
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_accessed / HBM_BW
+    t_coll = (coll_total / chips) / ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    from repro.configs.registry import get_arch
+
+    dims = get_arch(arch_name).shapes[shape_name].dims
+    mf = model_flops_for(arch_name, shape_name, dims)
+    useful = (mf / chips) / flops if (mf and flops) else None
+    return {
+        "chips": int(chips),
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_accessed,
+        "collective_bytes_total": coll_total,
+        "collective_breakdown": coll,
+        "terms": {
+            "compute_s": t_compute,
+            "memory_s": t_memory,
+            "collective_s": t_coll,
+        },
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_compute_ratio": useful,
+    }

@@ -1,0 +1,1 @@
+"""Model zoo: dense/MoE LMs, GNNs, recsys FM — functional param-pytree style."""

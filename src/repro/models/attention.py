@@ -1,0 +1,97 @@
+"""Attention dispatch: Pallas flash kernel on TPU, pure-jnp flash elsewhere.
+
+``flash_jnp`` is the *algorithmic twin* of the Pallas kernel — a two-level
+``lax.scan`` (query chunks × kv chunks) carrying streaming-softmax stats —
+so the dry-run lowering on the host platform has the same O(S·chunk) memory
+profile the TPU kernel has, and ``compiled.memory_analysis()`` stays honest
+for 32k prefill.  ``local_window`` gives sliding-window attention (the
+sub-quadratic variant used for the bonus long_500k rows).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def flash_jnp(q, k, v, *, causal: bool = True, q_chunk: int = 512,
+              kv_chunk: int = 512, local_window: Optional[int] = None):
+    """q: [B, Hq, S, D]; k/v: [B, Hkv, S, D] -> [B, Hq, S, D] (f32 acc)."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = d ** -0.5
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, s)
+    nq, nk = s // q_chunk, s // kv_chunk
+    qr = q.reshape(b, hkv, group, nq, q_chunk, d)
+    kr = k.reshape(b, hkv, nk, kv_chunk, d)
+    vr = v.reshape(b, hkv, nk, kv_chunk, d)
+
+    def q_step(_, qi):
+        qblk = jax.lax.dynamic_index_in_dim(qr, qi, axis=3, keepdims=False)
+        # qblk: [B, Hkv, G, qc, D]
+        m0 = jnp.full(qblk.shape[:-1], NEG, jnp.float32)
+        l0 = jnp.zeros(qblk.shape[:-1], jnp.float32)
+        a0 = jnp.zeros(qblk.shape, jnp.float32)
+
+        @jax.checkpoint  # flash backward: recompute p per chunk, store carries only
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk = jax.lax.dynamic_index_in_dim(kr, ki, axis=2, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vr, ki, axis=2, keepdims=False)
+            sc = jnp.einsum(
+                "bhgqd,bhkd->bhgqk", qblk, kblk,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            rows = qi * q_chunk + jnp.arange(q_chunk)[:, None]
+            cols = ki * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= cols <= rows
+            if local_window is not None:
+                mask &= cols > rows - local_window
+            sc = jnp.where(mask, sc, NEG)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vblk.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))
+    # outs: [nq, B, Hkv, G, qc, D] -> [B, Hq, S, D]
+    out = jnp.moveaxis(outs, 0, 3).reshape(b, hkv, group, s, d)
+    return out.reshape(b, hq, s, d)
+
+
+def attention(q, k, v, *, causal: bool = True, local_window: Optional[int] = None,
+              backend: Optional[str] = None, q_chunk: int = 512, kv_chunk: int = 512):
+    """Unified entry: backend in {None (auto), 'pallas', 'flash_jnp', 'naive'}."""
+    if backend is None:
+        backend = "pallas" if (
+            jax.default_backend() == "tpu" and local_window is None
+            and q.shape[2] % 512 == 0
+        ) else ("flash_jnp" if q.shape[2] > 1024 else "naive")
+    if backend == "pallas":
+        from repro.kernels.flash_attention.flash_attention import flash_attention
+
+        return flash_attention(q, k, v, causal=causal)
+    if backend == "flash_jnp":
+        return flash_jnp(q, k, v, causal=causal, local_window=local_window,
+                         q_chunk=q_chunk, kv_chunk=kv_chunk)
+    from repro.kernels.flash_attention.ref import mha_ref
+
+    return mha_ref(q, k, v, causal=causal, local_window=local_window)

@@ -1,0 +1,233 @@
+"""GNN zoo on the segment-reduce substrate (DESIGN.md §4).
+
+Message passing is everywhere the *same primitive the paper's query plan
+uses*: gather rows by edge endpoint, segment-reduce into the destination —
+so GCN / GraphSAGE / GAT / MeshGraphNet all ride
+``jax.ops.segment_sum`` (XLA) or the Pallas tiled plan (TPU, static graphs).
+
+Inputs are padded edge lists (``DeviceGraph`` layout: edges sorted by dst,
+padding edges point at the sink row ``n``) so every step is pjit-static.
+
+Integration of the paper's technique: ``khop_aggregate`` evaluates a k-hop
+window sum over node features using a prebuilt DBIndex plan — GraphSAGE-like
+neighborhood statistics at the cost of two segment-sums instead of a k-step
+propagation (used by the graphsage config's window-feature variant and
+benchmarked in §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    kind: str  # gcn | gat | sage | meshgraphnet
+    n_layers: int
+    d_in: int
+    d_hidden: int
+    d_out: int
+    n_heads: int = 1
+    aggregator: str = "mean"  # mean | sum | attn
+    mlp_layers: int = 2
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+
+def _constrain(x, spec):
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ------------------------- message passing ----------------------------- #
+def scatter_mean(messages, dst, n):
+    s = jax.ops.segment_sum(messages, dst, num_segments=n + 1)[:n]
+    cnt = jax.ops.segment_sum(jnp.ones_like(dst, messages.dtype), dst, num_segments=n + 1)[:n]
+    return s / jnp.maximum(cnt[:, None], 1.0)
+
+
+def scatter_sum(messages, dst, n):
+    return jax.ops.segment_sum(messages, dst, num_segments=n + 1)[:n]
+
+
+def edge_softmax(scores, dst, n):
+    """scores: [E, H] -> softmax over incoming edges per (dst, head)."""
+    m = jax.ops.segment_max(scores, dst, num_segments=n + 1)[:n]
+    m = jnp.nan_to_num(jnp.take(m, jnp.minimum(dst, n - 1), axis=0), neginf=0.0)
+    e = jnp.exp(scores - m)
+    z = jax.ops.segment_sum(e, dst, num_segments=n + 1)[:n]
+    z = jnp.take(z, jnp.minimum(dst, n - 1), axis=0)
+    return e / jnp.maximum(z, 1e-16)
+
+
+# ------------------------------ models --------------------------------- #
+def gcn_init(key, cfg: GNNConfig):
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.d_out]
+    ks = jax.random.split(key, cfg.n_layers)
+    return {"w": [L.dense_init(k, a, b, cfg.pdtype) for k, a, b in zip(ks, dims[:-1], dims[1:])]}
+
+
+def gcn_forward(params, feats, edge_src, edge_dst, edge_w, n, cfg: GNNConfig,
+                node_spec=None):
+    """Sym-normalized GCN.  edge_w = 1/sqrt(deg_s * deg_d) precomputed."""
+    h = feats.astype(cfg.cdtype)
+    for i, w in enumerate(params["w"]):
+        msg = jnp.take(h, jnp.minimum(edge_src, n - 1), axis=0) * edge_w[:, None]
+        agg = scatter_sum(jnp.where((edge_dst < n)[:, None], msg, 0), jnp.minimum(edge_dst, n), n)
+        h = _constrain(agg @ w.astype(cfg.cdtype), node_spec)
+        if i < len(params["w"]) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def sage_init(key, cfg: GNNConfig):
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.d_out]
+    ks = jax.random.split(key, 2 * cfg.n_layers)
+    return {
+        "w_self": [L.dense_init(k, a, b, cfg.pdtype) for k, a, b in zip(ks[::2], dims[:-1], dims[1:])],
+        "w_nbr": [L.dense_init(k, a, b, cfg.pdtype) for k, a, b in zip(ks[1::2], dims[:-1], dims[1:])],
+    }
+
+
+def sage_forward(params, feats, edge_src, edge_dst, n, cfg: GNNConfig,
+                 node_spec=None):
+    h = feats.astype(cfg.cdtype)
+    for i, (ws, wn) in enumerate(zip(params["w_self"], params["w_nbr"])):
+        msg = jnp.take(h, jnp.minimum(edge_src, n - 1), axis=0)
+        msg = jnp.where((edge_dst < n)[:, None], msg, 0)
+        agg = scatter_mean(msg, jnp.minimum(edge_dst, n), n)
+        h = _constrain(h @ ws.astype(cfg.cdtype) + agg @ wn.astype(cfg.cdtype), node_spec)
+        if i < len(params["w_self"]) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def gat_init(key, cfg: GNNConfig):
+    ks = jax.random.split(key, 3 * cfg.n_layers)
+    ws, al, ar = [], [], []
+    d_in = cfg.d_in
+    for i in range(cfg.n_layers):
+        d_out = cfg.d_out if i == cfg.n_layers - 1 else cfg.d_hidden
+        ws.append(L.dense_init(ks[3 * i], d_in, cfg.n_heads * d_out, cfg.pdtype))
+        al.append(L.dense_init(ks[3 * i + 1], d_out, cfg.n_heads, cfg.pdtype, scale=0.1))
+        ar.append(L.dense_init(ks[3 * i + 2], d_out, cfg.n_heads, cfg.pdtype, scale=0.1))
+        d_in = cfg.n_heads * d_out if i < cfg.n_layers - 1 else d_out
+    return {"w": ws, "a_l": al, "a_r": ar}
+
+
+def gat_forward(params, feats, edge_src, edge_dst, n, cfg: GNNConfig,
+                node_spec=None):
+    h = feats.astype(cfg.cdtype)
+    nl = len(params["w"])
+    for i in range(nl):
+        d_out = cfg.d_out if i == nl - 1 else cfg.d_hidden
+        hw = (h @ params["w"][i].astype(cfg.cdtype)).reshape(n, cfg.n_heads, d_out)
+        # a_l/a_r: [d_out, H] -> per-(node, head) scalars
+        sl = jnp.einsum("nhd,dh->nh", hw, params["a_l"][i].astype(cfg.cdtype))
+        sr = jnp.einsum("nhd,dh->nh", hw, params["a_r"][i].astype(cfg.cdtype))
+        es = jnp.minimum(edge_src, n - 1)
+        ed = jnp.minimum(edge_dst, n - 1)
+        scores = jax.nn.leaky_relu(
+            jnp.take(sl, es, axis=0) + jnp.take(sr, ed, axis=0), 0.2
+        )
+        valid = (edge_dst < n)[:, None]
+        scores = jnp.where(valid, scores, -1e30)
+        alpha = edge_softmax(scores, ed, n)  # [E, H]
+        msg = jnp.take(hw, es, axis=0) * alpha[..., None]
+        msg = jnp.where(valid[..., None], msg, 0)
+        agg = jax.ops.segment_sum(
+            msg.reshape(-1, cfg.n_heads * d_out), ed, num_segments=n
+        )
+        agg = _constrain(agg, node_spec)
+        if i < nl - 1:
+            h = jax.nn.elu(agg)
+        else:
+            h = agg.reshape(n, cfg.n_heads, d_out).mean(axis=1)
+    return h
+
+
+def mgn_init(key, cfg: GNNConfig, d_edge: int = 3):
+    """MeshGraphNet: encoder/decoder MLPs + `n_layers` processor steps
+    (stacked for lax.scan)."""
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    hid = cfg.d_hidden
+    mk = lambda k, dims: L.mlp_init(k, dims, cfg.pdtype)
+    proc_keys = jax.random.split(k3, cfg.n_layers)
+
+    def proc_init(k):
+        ka, kb = jax.random.split(k)
+        return {
+            "edge_mlp": mk(ka, [3 * hid, hid, hid]),
+            "node_mlp": mk(kb, [2 * hid, hid, hid]),
+        }
+
+    stacked = jax.vmap(proc_init)(proc_keys)
+    return {
+        "node_enc": mk(k1, [cfg.d_in, hid, hid]),
+        "edge_enc": mk(k2, [d_edge, hid, hid]),
+        "proc": stacked,
+        "node_dec": mk(k4, [hid, hid, cfg.d_out]),
+    }
+
+
+def mgn_forward(params, feats, edge_feats, edge_src, edge_dst, n, cfg: GNNConfig,
+                remat_chunk: int = 3, node_spec=None):
+    h = L.mlp_apply(params["node_enc"], feats.astype(cfg.cdtype))
+    e = L.mlp_apply(params["edge_enc"], edge_feats.astype(cfg.cdtype))
+    es = jnp.minimum(edge_src, n - 1)
+    ed = jnp.minimum(edge_dst, n - 1)
+    valid = (edge_dst < n)[:, None]
+
+    def step(carry, lp):
+        h, e = carry
+        inp = jnp.concatenate([e, jnp.take(h, es, axis=0), jnp.take(h, ed, axis=0)], -1)
+        e2 = e + L.mlp_apply(lp["edge_mlp"], inp)
+        agg = scatter_sum(jnp.where(valid, e2, 0), ed, n)
+        h2 = _constrain(h + L.mlp_apply(lp["node_mlp"], jnp.concatenate([h, agg], -1)),
+                        node_spec)
+        return (h2, e2), None
+
+    # nested remat: the (h, e) carry of every processor step is the bwd
+    # footprint (e alone is |E|*d floats); checkpointing chunks of
+    # `remat_chunk` steps keeps only every 3rd carry and recomputes the
+    # rest (-13x temp on meshgraphnet x ogb_products; §Perf iteration A1).
+    nl = cfg.n_layers
+    chunk = remat_chunk if nl % remat_chunk == 0 else 1
+    if chunk > 1:
+        stacked = jax.tree_util.tree_map(
+            lambda x: x.reshape(nl // chunk, chunk, *x.shape[1:]), params["proc"]
+        )
+
+        @jax.checkpoint
+        def chunk_step(carry, lps):
+            return jax.lax.scan(step, carry, lps)
+
+        (h, e), _ = jax.lax.scan(chunk_step, (h, e), stacked)
+    else:
+        (h, e), _ = jax.lax.scan(jax.checkpoint(step), (h, e), params["proc"])
+    return L.mlp_apply(params["node_dec"], h)
+
+
+# ---------------- paper-technique integration ------------------------- #
+def khop_aggregate(plan, node_values):
+    """k-hop window SUM of node features via the DBIndex plan — the paper's
+    shared two-stage aggregation as a GNN feature operator."""
+    from repro.core.engine_jax import query_dbindex
+
+    return query_dbindex(plan, node_values, "sum", use_pallas=False)

@@ -1,0 +1,282 @@
+"""Dense decoder-only transformer: GQA + RoPE + SwiGLU (+ optional qk-norm).
+
+Covers minitron-4b/8b and qwen3-0.6b exactly (their public configs) and is
+the backbone the MoE models extend.  Layer params are *stacked* [L, ...] and
+the forward pass is a ``lax.scan`` over layers — compile time and HLO size
+stay flat in depth, and remat policy wraps the scan body.
+
+Functional API:
+    params = init(key, cfg)                  (eval_shape-safe)
+    logits = forward(params, tokens, cfg)     [B, S, V]
+    loss   = loss_fn(params, batch, cfg)
+    kv, logits = prefill(params, tokens, cfg)
+    logits, kv = decode_step(params, token, kv, pos, cfg)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.attention import attention
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    max_seq: int = 32768 * 16 + 4096
+    tie_embeddings: bool = False
+    local_window: Optional[int] = None  # sliding-window attention (bonus)
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    z_loss: float = 1e-4
+    # flash-attention chunking: bwd saves the (m,l,acc) carry per kv chunk,
+    # so nk scales the per-layer bwd footprint; large-d models use bigger
+    # kv chunks (grok-1: 2048 -> 4x fewer saved carries; §Perf)
+    attn_q_chunk: int = 512
+    attn_kv_chunk: int = 512
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def n_params(self) -> int:
+        d, f, v, l = self.d_model, self.d_ff, self.vocab, self.n_layers
+        hd = self.head_dim
+        attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) + (self.n_heads * hd) * d
+        ffn = 3 * d * f
+        per_layer = attn + ffn + 2 * d
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return l * per_layer + emb + d
+
+
+def layer_init(key, cfg: TransformerConfig):
+    ks = jax.random.split(key, 8)
+    d, hd = cfg.d_model, cfg.head_dim
+    p = {
+        "ln1": L.rmsnorm_init(d, cfg.pdtype),
+        "ln2": L.rmsnorm_init(d, cfg.pdtype),
+        "wq": L.dense_init(ks[0], d, cfg.n_heads * hd, cfg.pdtype),
+        "wk": L.dense_init(ks[1], d, cfg.n_kv_heads * hd, cfg.pdtype),
+        "wv": L.dense_init(ks[2], d, cfg.n_kv_heads * hd, cfg.pdtype),
+        "wo": L.dense_init(ks[3], cfg.n_heads * hd, d, cfg.pdtype),
+        "w_gate": L.dense_init(ks[4], d, cfg.d_ff, cfg.pdtype),
+        "w_up": L.dense_init(ks[5], d, cfg.d_ff, cfg.pdtype),
+        "w_down": L.dense_init(ks[6], cfg.d_ff, d, cfg.pdtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.rmsnorm_init(hd, cfg.pdtype)
+        p["k_norm"] = L.rmsnorm_init(hd, cfg.pdtype)
+    return p
+
+
+def init(key, cfg: TransformerConfig):
+    k_emb, k_layers, k_out = jax.random.split(key, 3)
+    stacked = jax.vmap(lambda k: layer_init(k, cfg))(
+        jax.random.split(k_layers, cfg.n_layers)
+    )
+    params = {
+        "embed": L.embed_init(k_emb, cfg.vocab, cfg.d_model, cfg.pdtype),
+        "layers": stacked,
+        "ln_f": L.rmsnorm_init(cfg.d_model, cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(k_out, cfg.d_model, cfg.vocab, cfg.pdtype)
+    return params
+
+
+def _qkv(lp, x, cfg: TransformerConfig, positions, cos, sin):
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    xn = L.rmsnorm(x, lp["ln1"])
+    q = (xn @ lp["wq"].astype(cfg.cdtype)).reshape(b, s, cfg.n_heads, hd)
+    k = (xn @ lp["wk"].astype(cfg.cdtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (xn @ lp["wv"].astype(cfg.cdtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, lp["q_norm"])
+        k = L.rmsnorm(k, lp["k_norm"])
+    q = L.apply_rope(q.swapaxes(1, 2), cos, sin, positions)  # [B, H, S, D]
+    k = L.apply_rope(k.swapaxes(1, 2), cos, sin, positions)
+    return q, k, v.swapaxes(1, 2), xn
+
+
+def layer_fwd(lp, x, cfg: TransformerConfig, cos, sin, positions=None,
+              attn_backend: Optional[str] = None):
+    q, k, v, _ = _qkv(lp, x, cfg, positions, cos, sin)
+    o = attention(q, k, v, causal=True, local_window=cfg.local_window,
+                  backend=attn_backend, q_chunk=cfg.attn_q_chunk,
+                  kv_chunk=cfg.attn_kv_chunk)
+    b, s = x.shape[:2]
+    o = o.swapaxes(1, 2).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    x = x + o @ lp["wo"].astype(cfg.cdtype)
+    xn = L.rmsnorm(x, lp["ln2"])
+    x = x + L.swiglu(
+        xn,
+        lp["w_gate"].astype(cfg.cdtype),
+        lp["w_up"].astype(cfg.cdtype),
+        lp["w_down"].astype(cfg.cdtype),
+    )
+    return x
+
+
+def forward(params, tokens, cfg: TransformerConfig, layer_fn=layer_fwd,
+            attn_backend: Optional[str] = None, acts=None):
+    """tokens: int32 [B, S] -> logits f32 [B, S, V]."""
+    from repro.distributed.actshard import constrain
+
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
+    x = constrain(x, acts, "res")
+    s = tokens.shape[1]
+    cos, sin = L.rope_freqs(cfg.head_dim, s, cfg.rope_theta)
+
+    def body(x, lp):
+        return constrain(
+            layer_fn(lp, x, cfg, cos, sin, attn_backend=attn_backend), acts, "res"
+        ), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(x, params["ln_f"])
+    unemb = params.get("unembed", None)
+    w = unemb if unemb is not None else params["embed"].T
+    logits = (x @ w.astype(cfg.cdtype)).astype(jnp.float32)
+    return constrain(logits, acts, "logits")
+
+
+def forward_hidden(params, tokens, cfg: TransformerConfig, layer_fn=layer_fwd,
+                   attn_backend: Optional[str] = None, acts=None):
+    """tokens -> final hidden states [B, S, D] (pre-unembed)."""
+    from repro.distributed.actshard import constrain
+
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
+    x = constrain(x, acts, "res")
+    s = tokens.shape[1]
+    cos, sin = L.rope_freqs(cfg.head_dim, s, cfg.rope_theta)
+
+    def body(x, lp):
+        return constrain(
+            layer_fn(lp, x, cfg, cos, sin, attn_backend=attn_backend), acts, "res"
+        ), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.rmsnorm(x, params["ln_f"])
+
+
+def loss_fn(params, batch, cfg: TransformerConfig, layer_fn=layer_fwd, acts=None):
+    x = forward_hidden(params, batch["tokens"], cfg, layer_fn=layer_fn, acts=acts)
+    unemb = params.get("unembed", None)
+    w = unemb if unemb is not None else params["embed"].T
+    return L.lm_loss_fused(
+        x[:, :-1], w, batch["labels"][:, 1:], cfg.z_loss, acts=acts
+    )
+
+
+
+
+def cache_update_add(cache, new, pos):
+    """Write `new` [B, H, D] into `cache` [B, H, S, D] at position `pos`.
+
+    Implemented as a one-hot masked add instead of dynamic_update_slice:
+    DUS on a sequence-sharded cache makes GSPMD gather the whole cache
+    (-9 GiB/device on grok-1 decode_32k when switched; EXPERIMENTS §Perf).
+    Contract: unwritten cache slots are zero-initialized.
+    """
+    s = cache.shape[2]
+    onehot = (jnp.arange(s) == pos).astype(cache.dtype)
+    return cache + new[:, :, None, :] * onehot[None, None, :, None]
+
+
+# ---------------------------- serving ---------------------------------- #
+def prefill(params, tokens, cfg: TransformerConfig, acts=None):
+    """Run the prompt, return (kv_cache, last-token logits).
+
+    kv cache: dict of k/v stacked [L, B, Hkv, S, D] (layer-major for scan).
+    """
+    from repro.distributed.actshard import constrain
+
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
+    x = constrain(x, acts, "res")
+    b, s = tokens.shape
+    cos, sin = L.rope_freqs(cfg.head_dim, s, cfg.rope_theta)
+
+    def body(x, lp):
+        q, k, v, _ = _qkv(lp, x, cfg, None, cos, sin)
+        o = attention(q, k, v, causal=True, local_window=cfg.local_window,
+                      q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk)
+        o = o.swapaxes(1, 2).reshape(b, s, cfg.n_heads * cfg.head_dim)
+        x = x + o @ lp["wo"].astype(cfg.cdtype)
+        xn = L.rmsnorm(x, lp["ln2"])
+        x = x + L.swiglu(xn, lp["w_gate"].astype(cfg.cdtype),
+                         lp["w_up"].astype(cfg.cdtype), lp["w_down"].astype(cfg.cdtype))
+        return constrain(x, acts, "res"), (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(x, params["ln_f"])
+    unemb = params.get("unembed", None)
+    w = unemb if unemb is not None else params["embed"].T
+    logits = (x[:, -1] @ w.astype(cfg.cdtype)).astype(jnp.float32)
+    return {"k": ks, "v": vs}, constrain(logits, acts, "logits")
+
+
+def decode_step(params, token, kv, pos, cfg: TransformerConfig, acts=None):
+    """One token for the whole batch against a full KV cache.
+
+    token: int32 [B]; kv: {"k","v": [L, B, Hkv, S, D]}; pos: int32 scalar
+    (current length).  Returns (logits [B, V], updated kv).
+    """
+    from repro.distributed.actshard import constrain
+    from repro.kernels.flash_attention.ref import decode_ref
+
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0).astype(cfg.cdtype)[:, None, :]
+    x = constrain(x, acts, "res")
+    smax = kv["k"].shape[3]
+    cos, sin = L.rope_freqs(cfg.head_dim, smax, cfg.rope_theta)
+    positions = jnp.full((1,), pos, jnp.int32)
+
+    def body(carry, inp):
+        x = carry
+        lp, kc, vc = inp
+        q, k, v, _ = _qkv(lp, x, cfg, positions, cos, sin)
+        kc = cache_update_add(kc, k[:, :, 0], pos)
+        vc = cache_update_add(vc, v[:, :, 0], pos)
+        o = decode_ref(q[:, :, 0], kc, vc, pos + 1, window=cfg.local_window)
+        o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+        x = x + o @ lp["wo"].astype(cfg.cdtype)
+        xn = L.rmsnorm(x, lp["ln2"])
+        x = x + L.swiglu(xn, lp["w_gate"].astype(cfg.cdtype),
+                         lp["w_up"].astype(cfg.cdtype), lp["w_down"].astype(cfg.cdtype))
+        return constrain(x, acts, "res"), (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], kv["k"], kv["v"]))
+    x = L.rmsnorm(x, params["ln_f"])
+    unemb = params.get("unembed", None)
+    w = unemb if unemb is not None else params["embed"].T
+    logits = (x[:, 0] @ w.astype(cfg.cdtype)).astype(jnp.float32)
+    return constrain(logits, acts, "logits"), {"k": ks, "v": vs}

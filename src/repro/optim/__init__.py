@@ -1,0 +1,5 @@
+"""Optimizers, schedules, gradient transformations."""
+
+from repro.optim.optimizers import adamw, adafactor, sgd, apply_updates  # noqa: F401
+from repro.optim.schedules import cosine_schedule, linear_warmup  # noqa: F401
+from repro.optim.grad_compress import int8_compress_hook  # noqa: F401

@@ -1,0 +1,203 @@
+"""Minimal-but-production optimizer stack (optax-style pure transforms).
+
+Distributed-training posture:
+
+* **AdamW with bf16 moments** (`moment_dtype=jnp.bfloat16`) — halves the
+  optimizer-state HBM footprint, the difference between fitting and OOMing
+  grok-1-314b on a 256-chip pod (DESIGN.md §5).  Moments are upcast for the
+  update math, so the trajectory error is bounded by bf16 rounding of the
+  *state*, not of the *update*.
+* **Adafactor** — sub-linear memory (row/col factors) for the largest archs.
+* Global-norm clipping fused into the update (one extra psum under pjit).
+
+All transforms are pure pytree->pytree functions: they shard the same way
+params shard, so FSDP sharding of the optimizer state is just "reuse the
+param PartitionSpec".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any  # pytree like params (moment_dtype)
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw(
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    moment_dtype=jnp.bfloat16,
+    clip_norm: Optional[float] = 1.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(grads, state, params):
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = _global_norm(grads)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+        lr_t = lr_fn(step)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mhat = m32 / c1
+            vhat = v32 / c2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (
+                (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype),
+                m32.astype(moment_dtype),
+                v32.astype(moment_dtype),
+            )
+
+        out = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu), gnorm
+
+    return Optimizer(init=init, update=update)
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    row: Any
+    col: Any
+    full: Any  # for <2D params
+
+
+def adafactor(
+    lr: Callable | float = 1e-3,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_norm: Optional[float] = 1.0,
+) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern) — O(rows+cols)
+    state for matrices, the memory floor for 314B-param training."""
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        def rowcol(p):
+            if p.ndim >= 2:
+                return (
+                    jnp.zeros(p.shape[:-1], jnp.float32),
+                    jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                    jnp.zeros((1,), jnp.float32),
+                )
+            return (jnp.zeros((1,), jnp.float32),) * 2 + (jnp.zeros(p.shape, jnp.float32),)
+
+        trip = jax.tree_util.tree_map(rowcol, params)
+        pick = lambda i: jax.tree_util.tree_map(
+            lambda t: t[i], trip, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return AdafactorState(jnp.zeros((), jnp.int32), pick(0), pick(1), pick(2))
+
+    def update(grads, state, params):
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = _global_norm(grads)
+        step = state.step + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, r, c, f, p):
+            g32 = g.astype(jnp.float32)
+            if p.ndim >= 2:
+                r2 = beta * r + (1 - beta) * jnp.mean(g32 * g32, axis=-1)
+                c2 = beta * c + (1 - beta) * jnp.mean(g32 * g32, axis=-2)
+                rmean = jnp.mean(r2, axis=-1, keepdims=True)
+                v = (r2[..., None] * c2[..., None, :]) / jnp.maximum(rmean[..., None], eps)
+                delta = g32 / jnp.maximum(jnp.sqrt(v), eps)
+                return ((p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), r2, c2, f)
+            f2 = beta * f + (1 - beta) * g32 * g32
+            delta = g32 / jnp.maximum(jnp.sqrt(f2), eps)
+            return ((p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), r, c, f2)
+
+        out = jax.tree_util.tree_map(upd, grads, state.row, state.col, state.full, params)
+        pick = lambda i: jax.tree_util.tree_map(
+            lambda o: o[i], out, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return pick(0), AdafactorState(step, pick(1), pick(2), pick(3)), gnorm
+
+    return Optimizer(init=init, update=update)
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: Any
+
+
+def sgd(lr: Callable | float = 1e-2, momentum: float = 0.9,
+        clip_norm: Optional[float] = None) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        return SGDState(
+            jnp.zeros((), jnp.int32),
+            jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        )
+
+    def update(grads, state, params):
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = _global_norm(grads)
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, m, p):
+            m2 = momentum * m + g.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr_t * m2).astype(p.dtype), m2)
+
+        out = jax.tree_util.tree_map(upd, grads, state.momentum, params)
+        pick = lambda i: jax.tree_util.tree_map(
+            lambda o: o[i], out, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return pick(0), SGDState(step, pick(1)), gnorm
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype), params, updates)

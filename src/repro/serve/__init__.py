@@ -1,0 +1,3 @@
+"""Serving: batched request engine over prefill/decode step functions."""
+
+from repro.serve.engine import ServeEngine  # noqa: F401

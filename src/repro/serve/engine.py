@@ -1,0 +1,71 @@
+"""Batched serving engine (continuous-batching-lite).
+
+Request lifecycle: enqueue -> batched prefill (padded to the bucket) ->
+token-by-token batched decode against a preallocated KV cache -> detach on
+EOS/max-tokens.  The same ``prefill``/``decode_step`` functions the
+multi-pod dry-run lowers are used here, jit'd for the local device.
+
+Scale posture: slots are a fixed-size batch (decode batch never reshapes,
+so the compiled step is reused); the cache contract is zero-initialized
+free space (see ``cache_update_add``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # int32 [S]
+    max_new: int = 16
+    out: Optional[np.ndarray] = None
+
+
+class ServeEngine:
+    def __init__(self, params, cfg, module, max_seq: int = 256, slots: int = 8):
+        """module: repro.models.transformer or .moe (prefill/decode_step)."""
+        self.params = params
+        self.cfg = cfg
+        self.mod = module
+        self.max_seq = max_seq
+        self.slots = slots
+        self._decode = jax.jit(
+            lambda p, tok, kv, pos: module.decode_step(p, tok, kv, pos, cfg),
+            static_argnames=("pos",),
+        )
+        self._prefill = jax.jit(lambda p, t: module.prefill(p, t, cfg))
+
+    def generate(self, requests: List[Request], greedy: bool = True) -> Dict[int, np.ndarray]:
+        """Batched generation for <= slots requests of equal prompt bucket."""
+        assert len(requests) <= self.slots
+        live = list(requests)
+        plen = max(r.prompt.size for r in live)
+        b = len(live)
+        prompts = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(live):
+            prompts[i, : r.prompt.size] = r.prompt
+        kv, logits = self._prefill(self.params, jnp.asarray(prompts))
+        # grow cache to max_seq (zero-initialized free space)
+        pad = self.max_seq - plen
+        kv = {k: jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+              for k, v in kv.items()}
+        outs = [[] for _ in live]
+        tok = jnp.argmax(logits, axis=-1)
+        max_new = max(r.max_new for r in live)
+        for step in range(max_new):
+            for i in range(b):
+                if step < live[i].max_new:
+                    outs[i].append(int(tok[i]))
+            pos = plen + step
+            if pos >= self.max_seq - 1 or step == max_new - 1:
+                break
+            logits, kv = self._decode(self.params, tok, kv, pos)
+            tok = jnp.argmax(logits, axis=-1)
+        return {r.rid: np.array(o[: r.max_new], np.int32) for r, o in zip(live, outs)}

@@ -1,0 +1,4 @@
+"""Training substrate: trainer loop, checkpointing, fault tolerance."""
+
+from repro.train.checkpoints import CheckpointManager  # noqa: F401
+from repro.train.trainer import Trainer, TrainConfig  # noqa: F401

@@ -1,0 +1,33 @@
+import numpy as np
+import pytest
+
+from repro.core.graph import Graph
+from repro.graphs.generators import erdos_renyi, random_dag, with_random_attrs
+
+
+@pytest.fixture(scope="session")
+def small_undirected():
+    return with_random_attrs(erdos_renyi(300, 6.0, directed=False, seed=1), seed=2)
+
+
+@pytest.fixture(scope="session")
+def small_directed():
+    return with_random_attrs(erdos_renyi(300, 5.0, directed=True, seed=3), seed=4)
+
+
+@pytest.fixture(scope="session")
+def small_dag():
+    return with_random_attrs(random_dag(350, 3.0, seed=5), seed=6)
+
+
+@pytest.fixture(scope="session")
+def paper_social_graph():
+    """The paper's Fig. 1 running example (6 users A..F)."""
+    # edges from Fig 1/3: windows W(B)={A,B,D,F}, W(C)={A,C,D,E,F},
+    # W(E)={A,C,E}, 2-hop W(E)={A,B,C,D,E,F}
+    # A-B, A-C, A-E, B-D, B-F, C-D, C-E, C-F, D-F
+    src = np.array([0, 0, 0, 1, 1, 2, 2, 2, 3], dtype=np.int32)
+    dst = np.array([1, 2, 4, 3, 5, 3, 4, 5, 5], dtype=np.int32)
+    g = Graph(n=6, src=src, dst=dst, directed=False)
+    posts = np.array([12, 15, 28, 23, 26, 14], dtype=np.float64)
+    return g.with_attr("val", posts)

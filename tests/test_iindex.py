@@ -1,0 +1,103 @@
+"""I-Index: inheritance invariants, query equality, updates, device plans."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine_jax as ej
+from repro.core import updates
+from repro.core.iindex import build_iindex
+from repro.core.query import brute_force
+from repro.core.windows import TopologicalWindow, topological_window_single
+from repro.graphs.generators import random_dag, with_random_attrs
+
+
+def test_reconstruction(small_dag):
+    g = small_dag
+    ii = build_iindex(g)
+    for v in range(0, g.n, 9):
+        assert np.array_equal(ii.window_of(v), topological_window_single(g, v)), v
+
+
+def test_pid_is_parent_with_max_window(small_dag):
+    g = small_dag
+    ii = build_iindex(g)
+    from repro.core.windows import topological_windows
+
+    wins = topological_windows(g)
+    sizes = np.array([w.size for w in wins])
+    for v in range(g.n):
+        parents = g.in_neighbors(v)
+        if parents.size == 0:
+            assert ii.pid[v] == -1
+        else:
+            assert sizes[ii.pid[v]] == sizes[parents].max()
+
+
+@pytest.mark.parametrize("agg", ["sum", "count", "min", "max", "avg"])
+def test_query_aggregates(small_dag, agg):
+    g = small_dag
+    ii = build_iindex(g)
+    ref = brute_force(g, TopologicalWindow(), g.attrs["val"], agg)
+    assert np.allclose(ii.query(g.attrs["val"], agg), ref)
+
+
+def test_paper_pathway_example():
+    """Fig. 2/5: W_t(E)={A,B,C,D,E}, W_t(H)={A,B,D,H} (ids A=0..H=7).
+
+    Edges: A->B? — from the paper: D's window {A,B,D}; E's {A,B,C,D,E};
+    H's {A,B,D,H}.  A DAG consistent with those: A->B, B->D, C->E, D->E,
+    D->H.
+    """
+    from repro.core.graph import Graph
+
+    g = Graph(n=8, src=np.array([0, 1, 2, 3, 3], np.int32),
+              dst=np.array([1, 3, 4, 4, 7], np.int32), directed=True)
+    ii = build_iindex(g)
+    assert set(ii.window_of(4).tolist()) == {0, 1, 2, 3, 4}
+    assert set(ii.window_of(7).tolist()) == {0, 1, 3, 7}
+
+
+def test_update_insert(small_dag):
+    g = small_dag
+    ii = build_iindex(g)
+    order = g.topological_order()
+    s, t = int(order[0]), int(order[-1])
+    g2 = updates.insert_edge(g, s, t)
+    ii2 = updates.update_iindex(ii, g2, s, t)
+    ref = brute_force(g2, TopologicalWindow(), g2.attrs["val"], "sum")
+    assert np.allclose(ii2.query(g2.attrs["val"], "sum"), ref)
+
+
+def test_update_delete(small_dag):
+    g = small_dag
+    ii = build_iindex(g)
+    s, t = int(g.src[3]), int(g.dst[3])
+    g2 = updates.delete_edge(g, s, t)
+    ii2 = updates.update_iindex(ii, g2, s, t)
+    ref = brute_force(g2, TopologicalWindow(), g2.attrs["val"], "sum")
+    assert np.allclose(ii2.query(g2.attrs["val"], "sum"), ref)
+
+
+@pytest.mark.parametrize("schedule", ["level", "doubling"])
+def test_device_plan(small_dag, schedule):
+    g = small_dag
+    ii = build_iindex(g)
+    plan = ej.plan_from_iindex(ii)
+    ref = brute_force(g, TopologicalWindow(), g.attrs["val"], "sum")
+    got = np.asarray(ej.query_iindex(plan, g.attrs["val"], schedule=schedule))
+    assert np.allclose(got, ref, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(15, 100), st.integers(1, 5), st.integers(0, 99999))
+def test_property_iindex(n, deg, seed):
+    g = with_random_attrs(random_dag(n, float(deg), seed=seed), seed=seed + 1)
+    ii = build_iindex(g)
+    ref = brute_force(g, TopologicalWindow(), g.attrs["val"], "sum")
+    assert np.allclose(ii.query(g.attrs["val"], "sum"), ref)
+    # containment chain: WD sizes sum to total window content
+    total = sum(
+        topological_window_single(g, v).size for v in range(g.n)
+    )
+    assert ii.wd_members.size <= total  # inheritance never stores more

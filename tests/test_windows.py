@@ -1,0 +1,89 @@
+"""Window semantics: batched bitset BFS == per-vertex BFS == paper examples."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import Graph
+from repro.core.windows import (
+    KHopWindow,
+    TopologicalWindow,
+    khop_window_single,
+    khop_windows,
+    topological_window_single,
+    topological_windows,
+)
+from repro.graphs.generators import erdos_renyi, random_dag
+
+
+def test_paper_example_1hop(paper_social_graph):
+    g = paper_social_graph
+    wins = khop_windows(g, 1)
+    # W(E) = {A, C, E} (paper §3); ids: A=0..F=5, E=4
+    assert set(wins[4].tolist()) == {0, 2, 4}
+    # W(B) = {A, B, D, F}
+    assert set(wins[1].tolist()) == {0, 1, 3, 5}
+    # W(C) = {A, C, D, E, F}
+    assert set(wins[2].tolist()) == {0, 2, 3, 4, 5}
+
+
+def test_paper_example_2hop(paper_social_graph):
+    wins = khop_windows(paper_social_graph, 2)
+    # 2-hop window of E is everything (paper §3)
+    assert set(wins[4].tolist()) == {0, 1, 2, 3, 4, 5}
+
+
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_khop_batched_equals_single(small_undirected, k):
+    g = small_undirected
+    wins = khop_windows(g, k)
+    for v in range(0, g.n, 17):
+        assert np.array_equal(wins[v], khop_window_single(g, k, v)), v
+
+
+@pytest.mark.parametrize("k", [1, 2])
+def test_khop_directed(small_directed, k):
+    g = small_directed
+    wins = khop_windows(g, k)
+    for v in range(0, g.n, 23):
+        assert np.array_equal(wins[v], khop_window_single(g, k, v)), v
+
+
+def test_topological_windows(small_dag):
+    g = small_dag
+    wins = topological_windows(g)
+    for v in range(0, g.n, 13):
+        assert np.array_equal(wins[v], topological_window_single(g, v)), v
+
+
+def test_window_contains_self(small_undirected):
+    wins = khop_windows(small_undirected, 1)
+    for v in range(small_undirected.n):
+        assert v in wins[v]
+
+
+def test_topo_containment_theorem(small_dag):
+    """Theorem 5.1: W_t(parent) subset of W_t(child)."""
+    g = small_dag
+    wins = topological_windows(g)
+    for e in range(0, g.n_edges, 7):
+        u, v = int(g.src[e]), int(g.dst[e])
+        assert set(wins[u].tolist()) <= set(wins[v].tolist())
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(20, 80), st.integers(2, 6), st.integers(0, 10_000))
+def test_khop_property_random_graphs(n, deg, seed):
+    g = erdos_renyi(n, float(deg), directed=False, seed=seed)
+    wins = khop_windows(g, 2)
+    for v in range(0, n, max(n // 5, 1)):
+        assert np.array_equal(wins[v], khop_window_single(g, 2, v))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(20, 80), st.integers(1, 4), st.integers(0, 10_000))
+def test_topo_property_random_dags(n, deg, seed):
+    g = random_dag(n, float(deg), seed=seed)
+    wins = topological_windows(g)
+    for v in range(0, n, max(n // 5, 1)):
+        assert np.array_equal(wins[v], topological_window_single(g, v))
