@@ -1,12 +1,15 @@
-"""Benchmark harness utilities: timing + CSV emission.
+"""Benchmark harness utilities: timing + CSV/JSON emission.
 
 Output contract (benchmarks/run.py): ``name,us_per_call,derived`` rows.
+Benchmarks that need structured results (e.g. ``bench_updates`` →
+``BENCH_updates.json``) additionally call :func:`emit_json`.
 """
 
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 ROWS: List[Tuple[str, float, str]] = []
 
@@ -27,6 +30,14 @@ def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
 def emit(name: str, us: float, derived: str = ""):
     ROWS.append((name, us, derived))
     print(f"{name},{us:.1f},{derived}")
+
+
+def emit_json(path: str, payload: Dict) -> None:
+    """Write a structured benchmark result file (sorted keys, trailing NL)."""
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}")
 
 
 def flush_csv(path: str = None):

@@ -24,6 +24,7 @@ def main(argv=None) -> None:
         bench_mc_emc,
         bench_nonindex_gap,
         bench_scalability,
+        bench_updates,
     )
     from benchmarks.common import flush_csv
 
@@ -37,6 +38,7 @@ def main(argv=None) -> None:
         "iindex": lambda: bench_iindex.run(fast=args.fast),
         "nonindex_gap": lambda: bench_nonindex_gap.run(n=5_000 if args.fast else 8_000),
         "kernels": bench_kernels.run,
+        "updates": lambda: bench_updates.run(n=20_000 if args.fast else 100_000),
     }
     only = set(args.only.split(",")) if args.only else None
     for name, fn in mods.items():

@@ -27,7 +27,12 @@ import numpy as np
 
 from repro.core.dbindex import DBIndex
 from repro.core.iindex import IIndex
-from repro.kernels.segment_reduce.ops import TilePlan, build_tile_plan, segment_sum
+from repro.kernels.segment_reduce.ops import (
+    TilePlan,
+    build_tile_plan,
+    patch_tile_plan,
+    segment_sum,
+)
 
 
 # ---------------------------------------------------------------------- #
@@ -35,23 +40,29 @@ from repro.kernels.segment_reduce.ops import TilePlan, build_tile_plan, segment_
 # ---------------------------------------------------------------------- #
 @dataclasses.dataclass(frozen=True)
 class DBIndexPlan:
+    """Device plan.  ``block_capacity >= num_blocks`` pads the block-partial
+    vector ``T`` so that streamed updates appending secondary blocks keep
+    static shapes (capacity grows by powers of two → O(log) recompiles over
+    a stream instead of one per batch)."""
+
     n: int
     num_blocks: int
+    block_capacity: int
     pass1: TilePlan  # members -> block partials
     pass2: TilePlan  # block partials -> owner windows
-    block_sizes: jnp.ndarray  # f32 [num_blocks] (for count/avg)
+    block_sizes: jnp.ndarray  # f32 [block_capacity] (for count/avg)
     link_counts: jnp.ndarray  # f32 [n]
 
     def tree_flatten(self):
         return (
             (self.pass1, self.pass2, self.block_sizes, self.link_counts),
-            (self.n, self.num_blocks),
+            (self.n, self.num_blocks, self.block_capacity),
         )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         p1, p2, bs, lc = children
-        return cls(aux[0], aux[1], p1, p2, bs, lc)
+        return cls(aux[0], aux[1], aux[2], p1, p2, bs, lc)
 
 
 jax.tree_util.register_pytree_node(
@@ -59,19 +70,77 @@ jax.tree_util.register_pytree_node(
 )
 
 
-def plan_from_dbindex(index: DBIndex, tm: int = 512, ts: int = 512) -> DBIndexPlan:
+def _block_sizes_padded(index: DBIndex, capacity: int) -> np.ndarray:
+    sizes = np.zeros(capacity, np.float32)
+    sizes[: index.num_blocks] = np.diff(index.block_offsets)
+    return sizes
+
+
+def plan_from_dbindex(
+    index: DBIndex, tm: int = 512, ts: int = 512,
+    block_capacity: Optional[int] = None,
+) -> DBIndexPlan:
+    cap = max(int(block_capacity or 0), index.num_blocks, 1)
     member_block = np.asarray(index.member_block_ids, np.int64)
-    pass1 = build_tile_plan(index.block_members, member_block, index.num_blocks, tm, ts)
+    pass1 = build_tile_plan(index.block_members, member_block, cap, tm, ts)
     owner_ids = np.asarray(index.link_owner_ids, np.int64)
     pass2 = build_tile_plan(index.link_block, owner_ids, index.n, tm, ts)
-    sizes = np.diff(index.block_offsets).astype(np.float32)
     links = np.diff(index.link_owner_offsets).astype(np.float32)
     return DBIndexPlan(
         n=index.n,
         num_blocks=index.num_blocks,
+        block_capacity=cap,
         pass1=pass1,
         pass2=pass2,
-        block_sizes=jnp.asarray(sizes),
+        block_sizes=jnp.asarray(_block_sizes_padded(index, cap)),
+        link_counts=jnp.asarray(links),
+    )
+
+
+def patch_plan_dbindex(
+    plan: DBIndexPlan, index: DBIndex, changed_owners: np.ndarray
+) -> DBIndexPlan:
+    """Incremental plan maintenance after ``update_dbindex_batch``.
+
+    The merged index keeps the primary block prefix intact and appends
+    secondary blocks, so pass 1 only re-lays-out the tile groups holding
+    appended block ids; pass 2 re-lays-out the groups containing
+    ``changed_owners`` (the batch's affected owner set).  Everything else
+    is spliced from the live plan.
+
+    When the updater fell back to a full rebuild (``last_full_rebuild``
+    stat), the appended-prefix invariant does not hold and splicing would
+    silently reuse stale tiles — build a fresh plan instead.
+    """
+    cap = plan.block_capacity
+    if index.num_blocks > cap:
+        cap = 1 << (index.num_blocks - 1).bit_length()
+    if index.stats.get("last_full_rebuild"):
+        return plan_from_dbindex(index, plan.pass1.tm, plan.pass1.ts,
+                                 block_capacity=cap)
+    new_blocks = np.arange(plan.num_blocks, index.num_blocks, dtype=np.int64)
+    pass1 = patch_tile_plan(
+        plan.pass1,
+        index.block_members,
+        np.asarray(index.member_block_ids, np.int64),
+        cap,
+        new_blocks,
+    )
+    pass2 = patch_tile_plan(
+        plan.pass2,
+        index.link_block,
+        np.asarray(index.link_owner_ids, np.int64),
+        index.n,
+        np.asarray(changed_owners, np.int64),
+    )
+    links = np.diff(index.link_owner_offsets).astype(np.float32)
+    return DBIndexPlan(
+        n=index.n,
+        num_blocks=index.num_blocks,
+        block_capacity=cap,
+        pass1=pass1,
+        pass2=pass2,
+        block_sizes=jnp.asarray(_block_sizes_padded(index, cap)),
         link_counts=jnp.asarray(links),
     )
 
@@ -190,6 +259,30 @@ def plan_from_iindex(index: IIndex, tm: int = 512, ts: int = 512) -> IIndexPlan:
     sizes = np.diff(index.wd_offsets)
     owner = np.repeat(np.arange(index.n, dtype=np.int64), sizes)
     wd_plan = build_tile_plan(index.wd_members, owner, index.n, tm, ts)
+    return IIndexPlan(
+        n=index.n,
+        max_level=int(index.level.max()) if index.n else 0,
+        wd_plan=wd_plan,
+        pid=jnp.asarray(index.pid),
+        level=jnp.asarray(index.level),
+    )
+
+
+def patch_plan_iindex(
+    plan: IIndexPlan, index: IIndex, changed_owners: np.ndarray
+) -> IIndexPlan:
+    """Incremental plan maintenance after ``update_iindex_batch``: only the
+    WD tile groups holding cone vertices are re-laid-out; the PID forest and
+    levels are small [n] arrays and are simply re-uploaded."""
+    sizes = np.diff(index.wd_offsets)
+    owner = np.repeat(np.arange(index.n, dtype=np.int64), sizes)
+    wd_plan = patch_tile_plan(
+        plan.wd_plan,
+        index.wd_members,
+        owner,
+        index.n,
+        np.asarray(changed_owners, np.int64),
+    )
     return IIndexPlan(
         n=index.n,
         max_level=int(index.level.max()) if index.n else 0,

@@ -105,6 +105,23 @@ class Graph:
             attrs=dict(self.attrs),
         )
 
+    # --------------------------- edge keys ---------------------------- #
+    def edge_keys(self, src: Optional[Array] = None, dst: Optional[Array] = None) -> Array:
+        """Canonical int64 key per edge (orientation-insensitive when
+        undirected).  Defaults to the graph's own edge list — the batch
+        update machinery uses these for vectorized membership/deletion."""
+        src = self.src if src is None else np.asarray(src, np.int64)
+        dst = self.dst if dst is None else np.asarray(dst, np.int64)
+        s = src.astype(np.int64)
+        d = dst.astype(np.int64)
+        if not self.directed:
+            s, d = np.minimum(s, d), np.maximum(s, d)
+        return s * np.int64(self.n) + d
+
+    def contains_edges(self, src: Array, dst: Array) -> Array:
+        """Boolean mask: is each (src[i], dst[i]) present in the edge list?"""
+        return np.isin(self.edge_keys(src, dst), self.edge_keys())
+
     # ------------------------------ DAG ------------------------------- #
     def topological_order(self) -> Array:
         """Kahn's algorithm. Raises ValueError on cycles. Directed only."""

@@ -1,0 +1,206 @@
+"""Streaming dynamic-update engine (paper §4.3 Phase 1 + Phase 2 policy).
+
+Ties the batched maintenance path into one stateful object:
+
+    engine = StreamingEngine(g, KHopWindow(2))
+    for batch in stream:                # UpdateBatch per tick
+        engine.apply(batch)             # graph + index + device plan, all
+        ans = engine.query("sum")       #   maintained incrementally
+
+Each ``apply`` is: vectorized graph edit → batched index maintenance (one
+multi-source BFS for the whole batch) → incremental device-plan patch
+(only the tile groups whose blocks / owner links / WD segments changed).
+
+Phase 2 (reorganization) is driven by :class:`StalenessPolicy`: the merged
+index after phase-1 updates is exact but *less shared* — links and garbage
+blocks accumulate.  When sharing loss crosses the configured ratio, the
+engine rebuilds from scratch and re-baselines.  The I-Index maintenance is
+a localized exact rebuild (no sharing loss), so the policy only arms for
+DBIndex engines.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.dbindex import DBIndex, build_dbindex
+from repro.core.graph import Graph
+from repro.core.iindex import IIndex, build_iindex
+from repro.core.updates import (
+    UpdateBatch,
+    apply_batch,
+    update_dbindex_batch,
+    update_iindex_batch,
+)
+from repro.core.windows import KHopWindow, TopologicalWindow
+
+
+@dataclasses.dataclass(frozen=True)
+class StalenessPolicy:
+    """Reorganize when phase-1 sharing loss exceeds a threshold.
+
+    ``max_link_ratio``: rebuild when ``num_links`` exceeds this multiple of
+    the last full build's link count (links are the pass-2 work and the
+    paper's sharing metric).  ``max_block_ratio``: same for block count
+    (appended secondary + garbage blocks).  ``min_batches`` delays the
+    first check so bursts amortize.
+    """
+
+    max_link_ratio: float = 1.5
+    max_block_ratio: float = 2.0
+    min_batches: int = 1
+
+    def should_reorganize(
+        self, index: DBIndex, base_links: int, base_blocks: int, batches_since: int
+    ) -> bool:
+        if batches_since < self.min_batches:
+            return False
+        links = int(index.stats.get("num_links", 0))
+        return (
+            links > self.max_link_ratio * max(base_links, 1)
+            or index.num_blocks > self.max_block_ratio * max(base_blocks, 1)
+        )
+
+
+class StreamingEngine:
+    """Stateful graph + index + device plan under a stream of UpdateBatches.
+
+    ``index_kind``: "dbindex" (k-hop or topological windows) or "iindex"
+    (topological only).  ``device=False`` keeps everything host-side
+    (NumPy query executor) — useful for oracles and JAX-free paths.
+    """
+
+    def __init__(
+        self,
+        g: Graph,
+        window,
+        *,
+        index_kind: str = "dbindex",
+        method: str = "emc",
+        policy: Optional[StalenessPolicy] = None,
+        device: bool = True,
+        tm: int = 512,
+        ts: int = 512,
+        use_pallas: bool = True,
+        interpret: Optional[bool] = None,
+    ):
+        assert index_kind in ("dbindex", "iindex")
+        if index_kind == "iindex":
+            assert isinstance(window, TopologicalWindow), "I-Index is topological-only"
+        if isinstance(window, TopologicalWindow) and method == "emc":
+            method = "mc"  # EMC is k-hop only (paper §4.2.2)
+        self.graph = g
+        self.window = window
+        self.index_kind = index_kind
+        self.method = method
+        self.policy = policy or StalenessPolicy()
+        self.device = device
+        self.tm, self.ts = tm, ts
+        self.use_pallas, self.interpret = use_pallas, interpret
+        self.batches_applied = 0
+        self.edits_applied = 0
+        self.reorg_count = 0
+        self.batches_since_reorg = 0
+        self._build(initial=True)
+
+    # ------------------------------------------------------------------ #
+    def _build(self, initial: bool = False) -> None:
+        if self.index_kind == "dbindex":
+            self.index: object = build_dbindex(self.graph, self.window, method=self.method)
+            self._base_links = int(self.index.stats.get("num_links", 0))
+            self._base_blocks = int(self.index.num_blocks)
+        else:
+            self.index = build_iindex(self.graph)
+            self._base_links = self._base_blocks = 0
+        self.plan = None
+        if self.device:
+            from repro.core import engine_jax as ej
+
+            if self.index_kind == "dbindex":
+                self.plan = ej.plan_from_dbindex(self.index, self.tm, self.ts)
+            else:
+                self.plan = ej.plan_from_iindex(self.index, self.tm, self.ts)
+        self.batches_since_reorg = 0
+        if not initial:
+            self.reorg_count += 1
+
+    # ------------------------------------------------------------------ #
+    def apply(self, batch: UpdateBatch) -> Dict:
+        """Apply one batch; returns a timing/size report."""
+        t0 = time.perf_counter()
+        g2 = apply_batch(self.graph, batch)
+        if self.index_kind == "dbindex":
+            idx2, changed = update_dbindex_batch(self.index, g2, self.window, batch)
+        else:
+            idx2, changed = update_iindex_batch(self.index, g2, batch)
+        self.graph, self.index = g2, idx2
+        t_index = time.perf_counter() - t0
+        self.batches_applied += 1
+        self.batches_since_reorg += 1
+        self.edits_applied += batch.size
+
+        reorganized = False
+        if self.index_kind == "dbindex" and idx2.stats.get("last_full_rebuild"):
+            # the updater rebuilt outright (affected set > n/2): the index is
+            # as fresh as a phase-2 pass, so re-baseline the staleness policy
+            self._base_links = int(idx2.stats.get("num_links", 0))
+            self._base_blocks = int(idx2.num_blocks)
+            self.batches_since_reorg = 0
+        t1 = time.perf_counter()
+        if self.index_kind == "dbindex" and self.policy.should_reorganize(
+            idx2, self._base_links, self._base_blocks, self.batches_since_reorg
+        ):
+            self._build()
+            reorganized = True
+        elif self.device:
+            from repro.core import engine_jax as ej
+
+            if self.index_kind == "dbindex":
+                self.plan = ej.patch_plan_dbindex(self.plan, idx2, changed)
+            else:
+                self.plan = ej.patch_plan_iindex(self.plan, idx2, changed)
+        t_plan = time.perf_counter() - t1
+        return {
+            "batch_size": batch.size,
+            "affected": int(np.asarray(changed).size),
+            "t_index_s": t_index,
+            "t_plan_s": t_plan,
+            "reorganized": reorganized,
+        }
+
+    # ------------------------------------------------------------------ #
+    def query(self, agg: str = "sum", values=None, **kw) -> np.ndarray:
+        if values is None:
+            values = self.graph.attrs["val"]
+        if not self.device:
+            return self.index.query(np.asarray(values), agg)
+        from repro.core import engine_jax as ej
+
+        if self.index_kind == "dbindex":
+            out = ej.query_dbindex(
+                self.plan, values, agg,
+                use_pallas=self.use_pallas, interpret=self.interpret, **kw,
+            )
+        else:
+            assert agg == "sum", "device I-Index path is SUM (paper §6)"
+            out = ej.query_iindex(
+                self.plan, values,
+                use_pallas=self.use_pallas, interpret=self.interpret, **kw,
+            )
+        return np.asarray(out)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def staleness(self) -> Dict:
+        """Sharing-loss telemetry for the phase-2 policy."""
+        if self.index_kind != "dbindex":
+            return {"link_ratio": 1.0, "block_ratio": 1.0}
+        return {
+            "link_ratio": int(self.index.stats.get("num_links", 0))
+            / max(self._base_links, 1),
+            "block_ratio": self.index.num_blocks / max(self._base_blocks, 1),
+        }

@@ -1,25 +1,40 @@
-"""Dynamic-graph updates (paper §4.3 and §5.3).
+"""Dynamic-graph updates (paper §4.3 and §5.3), single-edge and streaming.
 
 Attribute updates never touch either index (both are structure-only).
 
-Structural updates:
+Structural updates come in two granularities:
 
-* **DBIndex** — two-phase maintenance (§4.3).  Phase 1 (here): identify the
-  owner set ``S`` whose windows changed, drop their links from the primary
-  index, build a *secondary* DBIndex over their new windows, and merge.  The
-  merged index is exactly correct but possibly less shared than a fresh
-  build.  Phase 2: :func:`reorganize` = full rebuild (run periodically).
-* **I-Index** — localized rebuild of the affected descendant cone (§5.3's
-  four cases collapse to: every vertex whose ancestor set may change is a
-  descendant of the edge head ``t``; we recompute PID/WD for exactly that
-  cone, reusing untouched entries).  The paper defers efficient update
-  algorithms to future work; this is the correct localized variant.
+* **Single edge** — :func:`insert_edge` / :func:`delete_edge` plus
+  :func:`update_dbindex` / :func:`update_iindex`, kept as thin wrappers over
+  the batched path below.
+* **Batched streams** — :class:`UpdateBatch` (vectorized edge insert/delete
+  sets, optionally timestamped) applied atomically with :func:`apply_batch`.
+  :func:`update_dbindex_batch` / :func:`update_iindex_batch` compute the
+  affected owner set / descendant cone for the *whole batch* with one
+  multi-source bitset BFS instead of one traversal per edge, so maintenance
+  cost is proportional to the touched region, not to the batch size times
+  the graph.
+
+DBIndex maintenance is the paper's two-phase scheme (§4.3): Phase 1 drops
+the affected owners' links from the primary index, builds a *secondary*
+index over their new windows, and merges — exactly correct but possibly
+less shared than a fresh build.  Phase 2 (:func:`reorganize`) is the
+periodic full rebuild; :mod:`repro.core.streaming` decides *when* via a
+sharing-loss staleness policy.
+
+I-Index maintenance localizes §5.3's four cases to the descendant cone of
+the touched edge heads: every vertex whose ancestor set may change is a
+descendant of some head ``t``, so PID/WD/level are recomputed for exactly
+that cone.  Cone windows are rebuilt by a cone-restricted topological
+sweep whose out-of-cone parents are seeded from the *old* index's windows
+(unchanged by definition of the cone) — maintenance never traverses the
+graph outside the cone, and is depth-independent.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Set, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -29,11 +44,113 @@ from repro.core.iindex import IIndex, build_iindex
 from repro.core.windows import (
     KHopWindow,
     TopologicalWindow,
+    descendants_multi,
     khop_reach_bitsets,
     khop_windows,
 )
 
 Array = np.ndarray
+
+
+# ---------------------------------------------------------------------- #
+#  Update batches
+# ---------------------------------------------------------------------- #
+OP_INSERT = np.int8(1)
+OP_DELETE = np.int8(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateBatch:
+    """A vectorized set of edge insertions/deletions, applied atomically.
+
+    ``op[i]`` is +1 (insert) or -1 (delete).  ``ts`` is an optional
+    per-edit timestamp used by stream replay (not by maintenance).
+    Semantics of :func:`apply_batch`: deletions are resolved against the
+    *pre-batch* edge list first, then insertions are appended.
+    """
+
+    src: Array  # int32 [B]
+    dst: Array  # int32 [B]
+    op: Array  # int8  [B]
+    ts: Optional[Array] = None  # float64 [B] or None
+
+    def __post_init__(self):
+        object.__setattr__(self, "src", np.asarray(self.src, np.int32))
+        object.__setattr__(self, "dst", np.asarray(self.dst, np.int32))
+        object.__setattr__(self, "op", np.asarray(self.op, np.int8))
+        assert self.src.shape == self.dst.shape == self.op.shape
+        if self.ts is not None:
+            object.__setattr__(self, "ts", np.asarray(self.ts, np.float64))
+            assert self.ts.shape == self.src.shape
+
+    @property
+    def size(self) -> int:
+        return int(self.src.size)
+
+    @staticmethod
+    def inserts(src: Sequence[int], dst: Sequence[int], ts=None) -> "UpdateBatch":
+        src = np.asarray(src, np.int32)
+        return UpdateBatch(src, np.asarray(dst, np.int32),
+                           np.full(src.size, OP_INSERT), ts)
+
+    @staticmethod
+    def deletes(src: Sequence[int], dst: Sequence[int], ts=None) -> "UpdateBatch":
+        src = np.asarray(src, np.int32)
+        return UpdateBatch(src, np.asarray(dst, np.int32),
+                           np.full(src.size, OP_DELETE), ts)
+
+    @staticmethod
+    def concat(batches: Sequence["UpdateBatch"]) -> "UpdateBatch":
+        ts = None
+        if batches and all(b.ts is not None for b in batches):
+            ts = np.concatenate([b.ts for b in batches])
+        return UpdateBatch(
+            np.concatenate([b.src for b in batches]) if batches else np.empty(0, np.int32),
+            np.concatenate([b.dst for b in batches]) if batches else np.empty(0, np.int32),
+            np.concatenate([b.op for b in batches]) if batches else np.empty(0, np.int8),
+            ts,
+        )
+
+
+def apply_batch(g: Graph, batch: UpdateBatch) -> Graph:
+    """Apply a whole batch in O(E + B log B): vectorized key-matched
+    deletions (first occurrence per requested multiplicity) + appended
+    insertions.  Raises KeyError if a deletion has no matching edge."""
+    if batch.size == 0:
+        return g
+    ins = batch.op > 0
+    dels = batch.op < 0
+    new_src, new_dst = g.src, g.dst
+    if dels.any():
+        del_keys = g.edge_keys(batch.src[dels], batch.dst[dels])
+        uk, req = np.unique(del_keys, return_counts=True)
+        keys = g.edge_keys()
+        order = np.argsort(keys, kind="stable")
+        sk = keys[order]
+        lo = np.searchsorted(sk, uk, "left")
+        hi = np.searchsorted(sk, uk, "right")
+        avail = hi - lo
+        if (avail < req).any():
+            missing = uk[avail < req]
+            raise KeyError(
+                f"{missing.size} deleted edge(s) not present "
+                f"(first key {int(missing[0])})"
+            )
+        # occurrence rank of every edge within its key group
+        grp_starts = np.flatnonzero(np.diff(sk, prepend=np.int64(-1)) != 0)
+        grp_len = np.diff(np.append(grp_starts, sk.size))
+        rank = np.empty(g.n_edges, np.int64)
+        rank[order] = np.arange(g.n_edges) - np.repeat(grp_starts, grp_len)
+        pos = np.searchsorted(uk, keys)
+        pos_c = np.clip(pos, 0, uk.size - 1)
+        matched = (pos < uk.size) & (uk[pos_c] == keys)
+        remove = matched & (rank < req[pos_c])
+        keep = ~remove
+        new_src, new_dst = new_src[keep], new_dst[keep]
+    if ins.any():
+        new_src = np.append(new_src, batch.src[ins])
+        new_dst = np.append(new_dst, batch.dst[ins])
+    return g.with_edges(new_src, new_dst)
 
 
 # --------------------------- graph edits ------------------------------ #
@@ -53,57 +170,103 @@ def delete_edge(g: Graph, s: int, t: int) -> Graph:
 
 
 # ------------------------ affected-owner sets ------------------------- #
+def affected_owners_khop_multi(g_new: Graph, k: int, seeds: Array) -> Array:
+    """Owners whose k-hop window may change after a batch touching edges
+    with the given seed endpoints: every vertex that reaches *any* seed
+    within k-1 hops (plus the seeds).  One multi-source reverse bitset BFS
+    for the whole batch."""
+    seeds = np.unique(np.asarray(seeds, np.int64))
+    if seeds.size == 0:
+        return np.empty(0, np.int32)
+    rg = (
+        Graph(n=g_new.n, src=g_new.dst, dst=g_new.src, directed=True)
+        if g_new.directed
+        else g_new
+    )
+    out = [seeds]
+    for lo in range(0, seeds.size, 4096):
+        chunk = seeds[lo : lo + 4096].astype(np.int32)
+        reach = khop_reach_bitsets(rg, max(k - 1, 0), chunk)
+        out.append(np.flatnonzero((reach != 0).any(axis=1)))
+    return np.unique(np.concatenate(out)).astype(np.int32)
+
+
 def affected_owners_khop(g_new: Graph, k: int, s: int, t: int) -> Array:
-    """Owners whose k-hop window may change after touching edge (s,t):
-    vertices that reach `s` within k-1 hops (plus s itself), on either
-    endpoint for undirected graphs."""
-    rg = Graph(
-        n=g_new.n, src=g_new.dst, dst=g_new.src, directed=True
-    ) if g_new.directed else g_new
-    ends = [s] if g_new.directed else [s, t]
-    out: Set[int] = set()
-    for e in ends:
-        reach = khop_reach_bitsets(rg, max(k - 1, 0), np.array([e], np.int32))
-        hit = np.flatnonzero(
-            np.unpackbits(reach.view(np.uint8), axis=1, bitorder="little")[:, 0]
-        )
-        out.update(int(x) for x in hit)
-        out.add(int(e))
-    return np.array(sorted(out), dtype=np.int32)
+    """Single-edge wrapper (kept for compatibility)."""
+    seeds = [s] if g_new.directed else [s, t]
+    return affected_owners_khop_multi(g_new, k, np.asarray(seeds, np.int64))
 
 
 def descendants(g: Graph, t: int) -> Array:
     """t plus all vertices reachable from t (directed)."""
-    seen = np.zeros(g.n, dtype=bool)
-    seen[t] = True
-    stack = [int(t)]
-    while stack:
-        u = stack.pop()
-        for w in g.out_neighbors(u):
-            if not seen[w]:
-                seen[w] = True
-                stack.append(int(w))
-    return np.flatnonzero(seen).astype(np.int32)
+    return descendants_multi(g, np.array([t], np.int64))
+
+
+def _khop_seeds(g: Graph, batch: UpdateBatch) -> Array:
+    """Endpoints whose reverse (k-1)-hop balls cover all affected owners:
+    edge tails for directed graphs, both endpoints for undirected."""
+    if g.directed:
+        return batch.src.astype(np.int64)
+    return np.concatenate([batch.src, batch.dst]).astype(np.int64)
+
+
+# ---------------------- localized cone windows ------------------------ #
+def _pack_members(members: Array, words: int) -> Array:
+    b = np.zeros(words, dtype=np.uint64)
+    m = np.asarray(members, np.int64)
+    np.bitwise_or.at(b, m // 64, np.uint64(1) << (m % 64).astype(np.uint64))
+    return b
+
+
+def _unpack_bits(b: Array, n: int) -> Array:
+    return np.flatnonzero(
+        np.unpackbits(b.view(np.uint8), bitorder="little")[:n]
+    ).astype(np.int32)
+
+
+def _cone_windows_from_old(g_new: Graph, cone: Array, old_window_of, order: Array):
+    """New topological windows for a descendant cone, touching nothing
+    outside it.
+
+    Any vertex whose window changed is *in* the cone, so an out-of-cone
+    parent's window is unchanged — seed it from the existing index
+    (``old_window_of``) instead of re-traversing the graph.  One sweep of
+    the cone in topological order (``order``, computed once by the caller)
+    then rebuilds each member's window as ``{v} ∪ parents' windows`` with
+    packed-bitset unions (Algorithm 4 restricted to the cone).  Returns
+    ``(wins, card)`` dicts over cone ∪ parents(cone): packed window
+    bitsets and their cardinalities.
+    """
+    n = g_new.n
+    words = (n + 63) // 64
+    in_cone = np.zeros(n, dtype=bool)
+    in_cone[cone] = True
+    wins: dict = {}
+    card: dict = {}
+    for v in order:
+        v = int(v)
+        if not in_cone[v]:
+            continue
+        own = np.zeros(words, dtype=np.uint64)
+        own[v // 64] |= np.uint64(1) << np.uint64(v % 64)
+        for p in g_new.in_neighbors(v):
+            p = int(p)
+            if p not in wins:  # out-of-cone parent: old window still exact
+                w = np.asarray(old_window_of(p), np.int64)
+                wins[p] = _pack_members(w, words)
+                card[p] = int(w.size)
+            own |= wins[p]
+        wins[v] = own
+        card[v] = int(
+            np.unpackbits(own.view(np.uint8), bitorder="little")[:n].sum()
+        )
+    return wins, card
 
 
 # ------------------------- DBIndex maintenance ------------------------ #
-def update_dbindex(
-    index: DBIndex, g_new: Graph, window, s: int, t: int
-) -> DBIndex:
-    """Incremental phase-1 maintenance after inserting/deleting edge (s,t)."""
-    if isinstance(window, KHopWindow):
-        owners = affected_owners_khop(g_new, window.k, s, t)
-        wins = khop_windows(g_new, window.k, owners)
-    elif isinstance(window, TopologicalWindow):
-        owners = descendants(g_new, t)
-        # windows of affected owners on the new graph
-        from repro.core.windows import topological_window_single
-
-        wins = [topological_window_single(g_new, int(v)) for v in owners]
-    else:
-        raise TypeError(window)
-
-    # drop links of affected owners from the primary
+def _merge_affected(index: DBIndex, owners: Array, wins: List[Array]) -> DBIndex:
+    """Phase-1 merge: drop affected owners' links, append a secondary index
+    over their new windows (paper §4.3)."""
     affected = np.zeros(index.n, dtype=bool)
     affected[owners] = True
     owner_ids = index.link_owner_ids
@@ -133,7 +296,12 @@ def update_dbindex(
     np.cumsum(np.bincount(lo_, minlength=index.n), out=link_owner_offsets[1:])
     stats = dict(index.stats)
     stats["incremental_updates"] = stats.get("incremental_updates", 0) + 1
+    stats["last_full_rebuild"] = False
     stats["last_affected_owners"] = int(owners.size)
+    stats["last_secondary_blocks"] = int(sec.num_blocks)
+    stats["num_blocks"] = nb0 + sec.num_blocks
+    stats["num_links"] = int(lb.size)
+    stats["num_members"] = int(block_members.size)
     return DBIndex(
         n=index.n,
         num_blocks=nb0 + sec.num_blocks,
@@ -145,6 +313,57 @@ def update_dbindex(
     )
 
 
+def update_dbindex_batch(
+    index: DBIndex, g_new: Graph, window, batch: UpdateBatch
+) -> Tuple[DBIndex, Array]:
+    """Incremental phase-1 maintenance for a whole batch.
+
+    Returns ``(new_index, affected_owners)``; the owner array is what the
+    device-plan patchers need to splice only the changed tiles.  The
+    primary prefix of the block arrays is unchanged by construction — new
+    (secondary) blocks are strictly appended.  Exception: when the batch
+    touches more than half the owners, an incremental merge would cost
+    (and leak sharing) more than phase 2, so the index is rebuilt outright;
+    the result carries ``stats["last_full_rebuild"] = True`` because the
+    appended-prefix invariant does NOT hold then and plan patchers must
+    rebuild rather than splice (``patch_plan_dbindex`` checks the flag).
+    """
+    if batch.size == 0:
+        return index, np.empty(0, np.int32)
+
+    def rebuild():
+        idx = reorganize(g_new, window)
+        idx.stats["last_full_rebuild"] = True
+        return idx, np.arange(index.n, dtype=np.int32)
+
+    if isinstance(window, KHopWindow):
+        owners = affected_owners_khop_multi(g_new, window.k, _khop_seeds(g_new, batch))
+        if owners.size > index.n // 2:
+            return rebuild()
+        wins = khop_windows(g_new, window.k, owners)
+    elif isinstance(window, TopologicalWindow):
+        owners = descendants_multi(g_new, batch.dst.astype(np.int64))
+        if owners.size > index.n // 2:
+            return rebuild()
+        # localized: out-of-cone parents' windows come from the old index's
+        # exact cover, so nothing outside the cone is traversed
+        order = g_new.topological_order()
+        packed, _ = _cone_windows_from_old(g_new, owners, index.window_of, order)
+        wins = [_unpack_bits(packed[int(v)], index.n) for v in owners]
+    else:
+        raise TypeError(window)
+    return _merge_affected(index, owners, wins), owners
+
+
+def update_dbindex(index: DBIndex, g_new: Graph, window, s: int, t: int) -> DBIndex:
+    """Single-edge wrapper over the batched path (op is irrelevant to the
+    affected-owner computation, which only needs the touched endpoints)."""
+    new_index, _ = update_dbindex_batch(
+        index, g_new, window, UpdateBatch.inserts([s], [t])
+    )
+    return new_index
+
+
 def reorganize(g: Graph, window, method: str = "emc", **kw) -> DBIndex:
     """Phase-2 periodic reorganization = fresh build (paper §4.3)."""
     if isinstance(window, TopologicalWindow):
@@ -153,27 +372,35 @@ def reorganize(g: Graph, window, method: str = "emc", **kw) -> DBIndex:
 
 
 # ------------------------- I-Index maintenance ------------------------ #
-def update_iindex(index: IIndex, g_new: Graph, s: int, t: int) -> IIndex:
-    """Localized rebuild of the descendant cone of t on the new graph."""
-    cone = descendants(g_new, t)
-    if cone.size > index.n // 2:
-        return build_iindex(g_new)  # cheaper to rebuild outright
-    from repro.core.windows import topological_window_single
+def update_iindex_batch(
+    index: IIndex, g_new: Graph, batch: UpdateBatch
+) -> Tuple[IIndex, Array]:
+    """Localized rebuild of the union of descendant cones of all touched
+    edge heads.  Returns ``(new_index, cone)``.
+
+    Windows of the cone are rebuilt by one cone-restricted topological
+    sweep seeded from the *old* index's windows for out-of-cone parents
+    (their windows are unchanged by definition of the cone), so the update
+    never traverses the graph outside the cone; PID/WD/level are then
+    recomputed for the cone alone, and the flat WD arrays are spliced
+    vectorized (no per-vertex Python rebuild of untouched entries).
+    """
+    if batch.size == 0:
+        return index, np.empty(0, np.int32)
+    cone = descendants_multi(g_new, batch.dst.astype(np.int64))
+    if cone.size > index.n // 2:  # cheaper to rebuild outright
+        return build_iindex(g_new), np.arange(index.n, dtype=np.int32)
+
+    n = index.n
+    in_cone = np.zeros(n, dtype=bool)
+    in_cone[cone] = True
+    order = g_new.topological_order()  # one Kahn pass, shared with the sweep
+    wins, card = _cone_windows_from_old(g_new, cone, index.window_of, order)
 
     pid = index.pid.copy()
     level = index.level.copy()
-    wd_lists = [index.wd(v) for v in range(index.n)]
-    # recompute in topological order restricted to the cone
-    order = g_new.topological_order()
-    in_cone = np.zeros(index.n, dtype=bool)
-    in_cone[cone] = True
-    win_cache: dict = {}
-
-    def win(v: int) -> Array:
-        if v not in win_cache:
-            win_cache[v] = topological_window_single(g_new, v)
-        return win_cache[v]
-
+    wd_new: List[Array] = []
+    cone_order: List[int] = []
     for v in order:
         v = int(v)
         if not in_cone[v]:
@@ -181,29 +408,53 @@ def update_iindex(index: IIndex, g_new: Graph, s: int, t: int) -> IIndex:
         parents = g_new.in_neighbors(v)
         best, best_c = -1, -1
         for p in parents:
-            c = win(int(p)).size
+            c = card[int(p)]
             if c > best_c:
                 best_c, best = c, int(p)
-        wv = win(v)
         if best != -1:
-            wd = np.setdiff1d(wv, win(best), assume_unique=True)
+            wd = _unpack_bits(wins[v] & ~wins[best], n)
         else:
-            wd = wv
+            wd = _unpack_bits(wins[v], n)
         pid[v] = best
-        wd_lists[v] = wd.astype(np.int32)
         level[v] = 0 if best == -1 else level[best] + 1
+        wd_new.append(wd)
+        cone_order.append(v)
 
-    sizes = np.array([w.size for w in wd_lists], dtype=np.int64)
-    wd_offsets = np.zeros(index.n + 1, dtype=np.int64)
-    np.cumsum(sizes, out=wd_offsets[1:])
+    # vectorized splice: keep untouched owners' WD rows, replace the cone's
+    old_sizes = np.diff(index.wd_offsets)
+    owner_old = np.repeat(np.arange(n, dtype=np.int64), old_sizes)
+    keep = ~in_cone[owner_old]
+    new_sizes = np.array([w.size for w in wd_new], dtype=np.int64)
+    all_owner = np.concatenate(
+        [owner_old[keep], np.repeat(np.asarray(cone_order, np.int64), new_sizes)]
+    )
+    all_members = np.concatenate(
+        [index.wd_members[keep]] + ([np.concatenate(wd_new)] if wd_new else [])
+    ) if all_owner.size else np.empty(0, np.int32)
+    order2 = np.argsort(all_owner, kind="stable")
+    wd_members = all_members[order2].astype(np.int32)
+    wd_offsets = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(np.bincount(all_owner, minlength=n), out=wd_offsets[1:])
+
     stats = dict(index.stats)
     stats["incremental_updates"] = stats.get("incremental_updates", 0) + 1
-    return IIndex(
-        n=index.n,
-        pid=pid,
-        wd_members=np.concatenate(wd_lists).astype(np.int32) if index.n else np.empty(0, np.int32),
-        wd_offsets=wd_offsets,
-        level=level,
-        topo_order=order,
-        stats=stats,
+    stats["last_cone_size"] = int(cone.size)
+    stats["num_wd_entries"] = int(wd_members.size)
+    return (
+        IIndex(
+            n=n,
+            pid=pid,
+            wd_members=wd_members,
+            wd_offsets=wd_offsets,
+            level=level,
+            topo_order=order,
+            stats=stats,
+        ),
+        cone,
     )
+
+
+def update_iindex(index: IIndex, g_new: Graph, s: int, t: int) -> IIndex:
+    """Single-edge wrapper over the batched path."""
+    new_index, _ = update_iindex_batch(index, g_new, UpdateBatch.inserts([s], [t]))
+    return new_index

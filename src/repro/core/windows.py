@@ -222,6 +222,27 @@ def topological_windows(g: Graph, sources: Optional[Array] = None) -> List[Array
     return out
 
 
+def descendants_multi(g: Graph, seeds: Array) -> Array:
+    """Seeds plus everything reachable from any seed (directed, forward).
+
+    One vectorized multi-source BFS (frontier gathers via
+    ``Graph._frontier_out``) — this is the batched replacement for calling
+    :func:`repro.core.updates.descendants` once per edge.
+    """
+    seen = np.zeros(g.n, dtype=bool)
+    seeds = np.unique(np.asarray(seeds, np.int64))
+    seen[seeds] = True
+    frontier = seeds.astype(np.int32)
+    while frontier.size:
+        nbr = g._frontier_out(frontier)
+        if nbr.size == 0:
+            break
+        nbr = np.unique(nbr[~seen[nbr]])
+        seen[nbr] = True
+        frontier = nbr.astype(np.int32)
+    return np.flatnonzero(seen).astype(np.int32)
+
+
 def topological_window_single(g: Graph, v: int) -> Array:
     """Reverse BFS from v over in-edges (brute-force oracle)."""
     seen = np.zeros(g.n, dtype=bool)

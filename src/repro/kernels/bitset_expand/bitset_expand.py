@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
 DEFAULT_TM = 256
 DEFAULT_TS = 256
 
@@ -104,6 +106,6 @@ def bitset_expand_tiled(
         functools.partial(_expand_kernel, ts=ts),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((num_out_tiles * ts, w), jnp.uint32),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=(pltpu.ARBITRARY,)),
+        compiler_params=_CompilerParams(dimension_semantics=(pltpu.ARBITRARY,)),
         interpret=interpret,
     )(m2out, first_visit, seg_ids, gathered_rows, base)

@@ -1,0 +1,12 @@
+"""Pallas API drift shims shared by all kernels.
+
+jax >= 0.5 renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+the toolchain image pins 0.4.x.  Keep every version-compatibility alias
+here so a toolchain upgrade is a one-file change (ROADMAP open item).
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

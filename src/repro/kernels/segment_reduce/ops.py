@@ -118,6 +118,94 @@ def build_tile_plan(
     )
 
 
+def patch_tile_plan(
+    plan: TilePlan,
+    gather_idx: np.ndarray,
+    segment_ids: np.ndarray,
+    num_segments: int,
+    changed_segments: np.ndarray,
+) -> TilePlan:
+    """Incrementally rebuild a tile plan after a sparse segment change.
+
+    ``gather_idx``/``segment_ids`` are the FULL new row arrays (sorted by
+    segment id, same contract as :func:`build_tile_plan`); the caller
+    guarantees that every segment whose row set changed is listed in
+    ``changed_segments``.  Only output-tile groups containing a changed
+    segment are re-laid-out; untouched groups reuse their existing padded
+    rows verbatim.  A changed group keeps its old tile capacity when the
+    new rows still fit (extra tiles are all-padding rows the kernel masks),
+    so steady-state streams produce plans with *identical static shapes* —
+    no XLA recompilation of the jitted query.  ``num_segments`` may grow
+    (e.g. appended secondary blocks); new groups are appended at the end.
+    """
+    gather_idx = np.asarray(gather_idx, np.int32)
+    segment_ids = np.asarray(segment_ids, np.int64)
+    assert gather_idx.shape == segment_ids.shape
+    if segment_ids.size:
+        assert (np.diff(segment_ids) >= 0).all(), "segment_ids must be sorted"
+    tm, ts = plan.tm, plan.ts
+    n_out_old = plan.num_out_tiles
+    n_out_new = max(1, -(-num_segments // ts))
+    if n_out_new < n_out_old:  # shrinking segment space: no reuse story
+        return build_tile_plan(gather_idx, segment_ids, num_segments, tm, ts)
+
+    old_seg = np.asarray(plan.seg_tiles).reshape(-1)
+    old_gather = np.asarray(plan.gather_padded)
+    old_m2out = np.asarray(plan.m2out)
+    old_tiles = np.bincount(old_m2out, minlength=n_out_old).astype(np.int64)
+    old_starts = np.zeros(n_out_old + 1, np.int64)
+    np.cumsum(old_tiles * tm, out=old_starts[1:])
+
+    changed_mask = np.zeros(n_out_new, dtype=bool)
+    cs = np.asarray(changed_segments, np.int64)
+    changed_mask[np.unique(cs[cs < num_segments]) // ts] = True
+    changed_mask[n_out_old:] = True  # appended groups are always new
+
+    # per-group row ranges in the new arrays
+    bounds = np.searchsorted(
+        segment_ids, np.arange(n_out_new + 1, dtype=np.int64) * ts
+    )
+    rows_per_group = np.diff(bounds)
+    tiles_needed = np.maximum(1, -(-rows_per_group // tm))
+    old_tiles_ext = np.zeros(n_out_new, np.int64)
+    old_tiles_ext[:n_out_old] = old_tiles
+    tiles_new = np.where(
+        changed_mask, np.maximum(tiles_needed, old_tiles_ext), old_tiles_ext
+    )
+    new_starts = np.zeros(n_out_new + 1, np.int64)
+    np.cumsum(tiles_new * tm, out=new_starts[1:])
+    total_pad = int(new_starts[-1])
+    nm = int(tiles_new.sum())
+
+    seg_padded = np.full(total_pad, -1, dtype=np.int32)
+    gather_padded = np.zeros(total_pad, dtype=np.int32)
+    for g in range(n_out_new):
+        lo = int(new_starts[g])
+        if changed_mask[g]:
+            r0, r1 = int(bounds[g]), int(bounds[g + 1])
+            seg_padded[lo : lo + (r1 - r0)] = segment_ids[r0:r1]
+            gather_padded[lo : lo + (r1 - r0)] = gather_idx[r0:r1]
+        else:
+            o0 = int(old_starts[g])
+            span = int(old_tiles[g]) * tm
+            seg_padded[lo : lo + span] = old_seg[o0 : o0 + span]
+            gather_padded[lo : lo + span] = old_gather[o0 : o0 + span]
+    m2out = np.repeat(np.arange(n_out_new, dtype=np.int32), tiles_new)
+    first_visit = np.empty(nm, dtype=np.int32)
+    first_visit[0] = 1
+    first_visit[1:] = (np.diff(m2out) != 0).astype(np.int32)
+    return TilePlan(
+        gather_padded=jnp.asarray(gather_padded),
+        seg_tiles=jnp.asarray(seg_padded.reshape(nm, tm)),
+        m2out=jnp.asarray(m2out),
+        first_visit=jnp.asarray(first_visit),
+        num_segments=int(num_segments),
+        num_out_tiles=n_out_new,
+        tm=tm,
+        ts=ts,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
 def segment_sum(
     plan: TilePlan,

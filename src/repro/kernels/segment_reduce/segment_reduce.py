@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
 DEFAULT_TM = 512  # rows per input tile
 DEFAULT_TS = 512  # segment ids per output tile
 
@@ -92,7 +94,7 @@ def segment_sum_tiled(
         functools.partial(_seg_sum_kernel, ts=ts),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((num_out_tiles * ts, d), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=(pltpu.ARBITRARY,)
         ),
         interpret=interpret,

@@ -1,0 +1,189 @@
+"""Offline-safe stand-in for the `hypothesis` subset this suite uses.
+
+The container image has no network, so `pip install hypothesis` is not an
+option; the tier-1 suite must still collect and run.  Test modules import
+the real library when present and fall back to this shim:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+
+Differences from real hypothesis (deliberate, documented):
+
+* **No shrinking** — a failing example is reported as-is.
+* **Deterministic** — the RNG is seeded from the test's qualified name, so
+  every run draws the same examples (CI-reproducible by construction).
+* **Boundary probing** — the first examples pin strategy bounds (hypothesis
+  probes corners too; random-only sampling would miss off-by-one bugs).
+* Only the strategies this repo needs: ``integers``, ``floats``,
+  ``booleans``, ``sampled_from``, ``just``, ``lists``, ``tuples``.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Any, List, Sequence
+
+
+# ----------------------------- strategies ----------------------------- #
+class SearchStrategy:
+    """A value generator: ``example(rng, i)`` draws the i-th example."""
+
+    def example(self, rng: random.Random, i: int = 0) -> Any:
+        raise NotImplementedError
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value=None, max_value=None):
+        self.lo = -(2**31) if min_value is None else int(min_value)
+        self.hi = 2**31 - 1 if max_value is None else int(max_value)
+        assert self.lo <= self.hi
+
+    def example(self, rng, i=0):
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value=0.0, max_value=1.0, **_):
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def example(self, rng, i=0):
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Booleans(SearchStrategy):
+    def example(self, rng, i=0):
+        return bool(i % 2) if i < 2 else rng.random() < 0.5
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements: Sequence):
+        self.elements = list(elements)
+        assert self.elements
+
+    def example(self, rng, i=0):
+        if i < len(self.elements):
+            return self.elements[i]
+        return rng.choice(self.elements)
+
+
+class _Just(SearchStrategy):
+    def __init__(self, value):
+        self.value = value
+
+    def example(self, rng, i=0):
+        return self.value
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elem: SearchStrategy, min_size=0, max_size=10):
+        self.elem, self.min_size, self.max_size = elem, min_size, max_size
+
+    def example(self, rng, i=0):
+        size = self.min_size if i == 0 else rng.randint(self.min_size, self.max_size)
+        return [self.elem.example(rng, 2) for _ in range(size)]
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, *elems: SearchStrategy):
+        self.elems = elems
+
+    def example(self, rng, i=0):
+        return tuple(e.example(rng, i) for e in self.elems)
+
+
+class _Strategies:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    SearchStrategy = SearchStrategy
+
+    @staticmethod
+    def integers(min_value=None, max_value=None):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **kw):
+        return _Floats(min_value, max_value, **kw)
+
+    @staticmethod
+    def booleans():
+        return _Booleans()
+
+    @staticmethod
+    def sampled_from(elements):
+        return _SampledFrom(elements)
+
+    @staticmethod
+    def just(value):
+        return _Just(value)
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=10):
+        return _Lists(elem, min_size, max_size)
+
+    @staticmethod
+    def tuples(*elems):
+        return _Tuples(*elems)
+
+
+strategies = _Strategies()
+
+
+# --------------------------- given / settings ------------------------- #
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class _SettingsTag:
+    def __init__(self, max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+        self.max_examples = int(max_examples)
+
+    def __call__(self, f):
+        f._shim_settings = self
+        return f
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **kw):
+    """Decorator factory: ``@settings(max_examples=..., deadline=...)``."""
+    return _SettingsTag(max_examples=max_examples, deadline=deadline, **kw)
+
+
+def given(*strategies_pos: SearchStrategy, **strategies_kw: SearchStrategy):
+    """Run the test once per drawn example (no shrinking, deterministic).
+
+    Works with ``@settings`` stacked above or below.  The wrapper takes no
+    arguments so pytest does not mistake strategy parameters for fixtures.
+    """
+
+    def decorate(f):
+        def wrapper():
+            tag = getattr(wrapper, "_shim_settings", None) or getattr(
+                f, "_shim_settings", None
+            )
+            n = tag.max_examples if tag else _DEFAULT_MAX_EXAMPLES
+            rng = random.Random(f.__qualname__)
+            for i in range(n):
+                args = [s.example(rng, i) for s in strategies_pos]
+                kwargs = {k: s.example(rng, i) for k, s in strategies_kw.items()}
+                try:
+                    f(*args, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i}: args={args} kwargs={kwargs}: {e}"
+                    ) from e
+
+        wrapper.__name__ = f.__name__
+        wrapper.__qualname__ = f.__qualname__
+        wrapper.__module__ = f.__module__
+        wrapper.__doc__ = f.__doc__
+        return wrapper
+
+    return decorate

@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: use the local shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import engine_jax as ej
 from repro.core import updates

@@ -1,0 +1,279 @@
+"""Streaming updates: batched maintenance == fresh build == brute force.
+
+Differential tests drive random insert/delete edge streams through
+``update_dbindex_batch`` / ``update_iindex_batch`` and check every batch
+against two independent oracles: a fresh ``build_*`` on the updated graph
+and the per-vertex BFS ``brute_force``.  Covers k-hop (DBIndex) and
+topological (I-Index + DBIndex) windows, insertions and deletions, the
+batch-application semantics, and the staleness-driven reorganize policy.
+Runs fully offline (the property tests use the `_hypothesis_compat` shim
+when hypothesis is absent).
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: use the local shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import updates as U
+from repro.core.dbindex import build_dbindex
+from repro.core.graph import Graph
+from repro.core.iindex import build_iindex
+from repro.core.query import brute_force
+from repro.core.streaming import StalenessPolicy, StreamingEngine
+from repro.core.updates import UpdateBatch
+from repro.core.windows import KHopWindow, TopologicalWindow
+from repro.graphs.generators import erdos_renyi, random_dag, with_random_attrs
+
+AGGS = ("sum", "count", "avg")
+
+
+# --------------------------- stream helpers --------------------------- #
+def random_insert_batch(g: Graph, rng, size: int) -> UpdateBatch:
+    """`size` fresh (absent, non-loop, batch-unique) edges."""
+    s = rng.integers(0, g.n, size * 4).astype(np.int32)
+    d = rng.integers(0, g.n, size * 4).astype(np.int32)
+    ok = (s != d) & ~g.contains_edges(s, d)
+    _, first = np.unique(g.edge_keys(s, d), return_index=True)
+    pick = np.intersect1d(np.flatnonzero(ok), first)[:size]
+    return UpdateBatch.inserts(s[pick], d[pick])
+
+
+def random_delete_batch(g: Graph, rng, size: int) -> UpdateBatch:
+    ei = rng.choice(g.n_edges, min(size, g.n_edges), replace=False)
+    return UpdateBatch.deletes(g.src[ei], g.dst[ei])
+
+
+def random_dag_insert_batch(g: Graph, rng, size: int) -> UpdateBatch:
+    """Acyclicity-preserving inserts: lower topo rank -> higher."""
+    order = g.topological_order()
+    rank = np.empty(g.n, np.int64)
+    rank[order] = np.arange(g.n)
+    s = rng.integers(0, g.n, size * 6)
+    d = rng.integers(0, g.n, size * 6)
+    lo = np.where(rank[s] < rank[d], s, d).astype(np.int32)
+    hi = np.where(rank[s] < rank[d], d, s).astype(np.int32)
+    ok = (rank[lo] < rank[hi]) & ~g.contains_edges(lo, hi)
+    _, first = np.unique(g.edge_keys(lo, hi), return_index=True)
+    pick = np.intersect1d(np.flatnonzero(ok), first)[:size]
+    return UpdateBatch.inserts(lo[pick], hi[pick])
+
+
+def mixed(g, rng, n_ins, n_del, dag=False):
+    ins = random_dag_insert_batch(g, rng, n_ins) if dag else random_insert_batch(g, rng, n_ins)
+    return UpdateBatch.concat([ins, random_delete_batch(g, rng, n_del)])
+
+
+# ------------------------- batch application -------------------------- #
+def test_apply_batch_matches_sequential():
+    rng = np.random.default_rng(0)
+    g = erdos_renyi(60, 4.0, directed=False, seed=3)
+    b = mixed(g, rng, 8, 5)
+    g_batch = U.apply_batch(g, b)
+    g_seq = g
+    for s, t, op in zip(b.src, b.dst, b.op):
+        # deletes first (apply_batch resolves them against the pre-batch list)
+        if op < 0:
+            g_seq = U.delete_edge(g_seq, int(s), int(t))
+    for s, t, op in zip(b.src, b.dst, b.op):
+        if op > 0:
+            g_seq = U.insert_edge(g_seq, int(s), int(t))
+    assert np.array_equal(np.sort(g_batch.edge_keys()), np.sort(g_seq.edge_keys()))
+
+
+def test_apply_batch_missing_delete_raises():
+    g = erdos_renyi(30, 3.0, directed=True, seed=4)
+    absent = ~g.contains_edges(np.arange(29), np.arange(1, 30))
+    s = int(np.flatnonzero(absent)[0])
+    with pytest.raises(KeyError):
+        U.apply_batch(g, UpdateBatch.deletes([s], [s + 1]))
+
+
+def test_apply_batch_undirected_orientation_insensitive():
+    g = Graph(n=4, src=np.array([0, 1], np.int32), dst=np.array([1, 2], np.int32),
+              directed=False)
+    g2 = U.apply_batch(g, UpdateBatch.deletes([1], [0]))  # reversed orientation
+    assert g2.n_edges == 1 and g2.contains_edges([1], [2]).all()
+
+
+def test_apply_batch_duplicate_edge_multiplicity():
+    g = Graph(n=3, src=np.array([0, 0], np.int32), dst=np.array([1, 1], np.int32),
+              directed=True)
+    g2 = U.apply_batch(g, UpdateBatch.deletes([0], [1]))
+    assert g2.n_edges == 1  # one of the two copies removed
+    g3 = U.apply_batch(g, UpdateBatch.deletes([0, 0], [1, 1]))
+    assert g3.n_edges == 0
+
+
+def test_empty_batch_is_identity(small_undirected):
+    g = small_undirected
+    w = KHopWindow(1)
+    idx = build_dbindex(g, w, method="emc")
+    idx2, owners = U.update_dbindex_batch(idx, g, w, UpdateBatch.inserts([], []))
+    assert owners.size == 0 and idx2 is idx
+
+
+# ---------------------- DBIndex k-hop differential -------------------- #
+@pytest.mark.parametrize("k", [1, 2])
+@pytest.mark.parametrize("directed", [False, True])
+def test_dbindex_khop_stream(k, directed):
+    rng = np.random.default_rng(10 * k + directed)
+    g = with_random_attrs(
+        erdos_renyi(150, 4.0, directed=directed, seed=k), seed=k + 1
+    )
+    w = KHopWindow(k)
+    idx = build_dbindex(g, w, method="emc")
+    for step in range(4):
+        b = mixed(g, rng, 12, 6)
+        g = U.apply_batch(g, b)
+        idx, owners = U.update_dbindex_batch(idx, g, w, b)
+        assert owners.size > 0
+        fresh = build_dbindex(g, w, method="emc")
+        for agg in AGGS:
+            ref = brute_force(g, w, g.attrs["val"], agg)
+            assert np.allclose(idx.query(g.attrs["val"], agg), ref), (step, agg)
+            assert np.allclose(fresh.query(g.attrs["val"], agg), ref), (step, agg)
+
+
+def test_dbindex_khop_delete_only_stream():
+    rng = np.random.default_rng(77)
+    g = with_random_attrs(erdos_renyi(120, 5.0, directed=False, seed=9), seed=10)
+    w = KHopWindow(2)
+    idx = build_dbindex(g, w, method="emc")
+    for step in range(3):
+        b = random_delete_batch(g, rng, 15)
+        g = U.apply_batch(g, b)
+        idx, _ = U.update_dbindex_batch(idx, g, w, b)
+        ref = brute_force(g, w, g.attrs["val"], "sum")
+        assert np.allclose(idx.query(g.attrs["val"], "sum"), ref), step
+
+
+# -------------------- topological windows differential ---------------- #
+def test_iindex_stream():
+    rng = np.random.default_rng(21)
+    g = with_random_attrs(random_dag(160, 2.5, seed=11), seed=12)
+    ii = build_iindex(g)
+    for step in range(4):
+        b = mixed(g, rng, 10, 5, dag=True)
+        g = U.apply_batch(g, b)
+        ii, cone = U.update_iindex_batch(ii, g, b)
+        assert cone.size > 0
+        fresh = build_iindex(g)
+        for agg in AGGS:
+            ref = brute_force(g, TopologicalWindow(), g.attrs["val"], agg)
+            assert np.allclose(ii.query(g.attrs["val"], agg), ref), (step, agg)
+            assert np.allclose(fresh.query(g.attrs["val"], agg), ref), (step, agg)
+        # structural invariant: reconstruction still exact after updates
+        for v in range(0, g.n, 37):
+            from repro.core.windows import topological_window_single
+
+            assert np.array_equal(ii.window_of(v), topological_window_single(g, v))
+
+
+def test_iindex_large_cone_falls_back_to_rebuild():
+    g = with_random_attrs(random_dag(80, 2.0, seed=31), seed=32)
+    ii = build_iindex(g)
+    order = g.topological_order()
+    # edge into the topologically-first vertex's successor cone: huge cone
+    s, t = int(order[0]), int(order[1])
+    if g.contains_edges([s], [t]).any():
+        b = UpdateBatch.deletes([s], [t])
+    else:
+        b = UpdateBatch.inserts([s], [t])
+    g2 = U.apply_batch(g, b)
+    ii2, cone = U.update_iindex_batch(ii, g2, b)
+    ref = brute_force(g2, TopologicalWindow(), g2.attrs["val"], "sum")
+    assert np.allclose(ii2.query(g2.attrs["val"], "sum"), ref)
+
+
+def test_dbindex_topological_stream():
+    rng = np.random.default_rng(41)
+    g = with_random_attrs(random_dag(120, 2.0, seed=13), seed=14)
+    w = TopologicalWindow()
+    idx = build_dbindex(g, w, method="mc")
+    for step in range(3):
+        b = mixed(g, rng, 8, 4, dag=True)
+        g = U.apply_batch(g, b)
+        idx, owners = U.update_dbindex_batch(idx, g, w, b)
+        for agg in AGGS:
+            ref = brute_force(g, w, g.attrs["val"], agg)
+            assert np.allclose(idx.query(g.attrs["val"], agg), ref), (step, agg)
+
+
+# -------------------- affected-set batching equivalence --------------- #
+def test_batched_affected_owners_cover_per_edge_union():
+    g = erdos_renyi(100, 4.0, directed=True, seed=51)
+    rng = np.random.default_rng(52)
+    b = random_insert_batch(g, rng, 10)
+    g2 = U.apply_batch(g, b)
+    batched = U.affected_owners_khop_multi(g2, 3, U._khop_seeds(g2, b))
+    per_edge = np.unique(
+        np.concatenate(
+            [U.affected_owners_khop(g2, 3, int(s), int(t))
+             for s, t in zip(b.src, b.dst)]
+        )
+    )
+    assert np.array_equal(batched, per_edge.astype(np.int32))
+
+
+# ----------------------- streaming engine + policy -------------------- #
+def test_streaming_engine_host_correct_and_reorganizes():
+    rng = np.random.default_rng(61)
+    g = with_random_attrs(erdos_renyi(130, 4.0, directed=False, seed=15), seed=16)
+    eng = StreamingEngine(
+        g, KHopWindow(1), device=False,
+        policy=StalenessPolicy(max_link_ratio=1.15, min_batches=2),
+    )
+    saw_reorg = False
+    for step in range(6):
+        b = mixed(eng.graph, rng, 10, 5)
+        rep = eng.apply(b)
+        saw_reorg |= rep["reorganized"]
+        ref = brute_force(eng.graph, eng.window, eng.graph.attrs["val"], "sum")
+        assert np.allclose(eng.query("sum"), ref), step
+    assert saw_reorg and eng.reorg_count >= 1
+    assert eng.staleness["link_ratio"] <= 1.15 * 1.5  # re-baselined after reorg
+
+
+def test_staleness_policy_thresholds():
+    pol = StalenessPolicy(max_link_ratio=1.5, max_block_ratio=2.0, min_batches=3)
+
+    class FakeIdx:
+        num_blocks = 100
+        stats = {"num_links": 200}
+
+    assert not pol.should_reorganize(FakeIdx(), 100, 100, 2)  # too early
+    assert pol.should_reorganize(FakeIdx(), 100, 100, 3)  # links 2x > 1.5x
+    assert not pol.should_reorganize(FakeIdx(), 200, 100, 3)  # under both
+
+
+# -------------------------- property tests ---------------------------- #
+@settings(max_examples=8, deadline=None)
+@given(st.integers(30, 90), st.integers(2, 5), st.integers(0, 9999),
+       st.integers(1, 2))
+def test_property_khop_batch_insert_equals_rebuild(n, deg, seed, k):
+    rng = np.random.default_rng(seed)
+    g = with_random_attrs(erdos_renyi(n, float(deg), seed=seed), seed=seed + 1)
+    w = KHopWindow(k)
+    idx = build_dbindex(g, w, method="emc")
+    b = mixed(g, rng, 6, 3)
+    g2 = U.apply_batch(g, b)
+    idx2, _ = U.update_dbindex_batch(idx, g2, w, b)
+    ref = brute_force(g2, w, g2.attrs["val"], "sum")
+    assert np.allclose(idx2.query(g2.attrs["val"], "sum"), ref)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(25, 80), st.integers(1, 3), st.integers(0, 9999))
+def test_property_iindex_batch_equals_rebuild(n, deg, seed):
+    rng = np.random.default_rng(seed)
+    g = with_random_attrs(random_dag(n, float(deg), seed=seed), seed=seed + 1)
+    ii = build_iindex(g)
+    b = mixed(g, rng, 5, 2, dag=True)
+    g2 = U.apply_batch(g, b)
+    ii2, _ = U.update_iindex_batch(ii, g2, b)
+    ref = brute_force(g2, TopologicalWindow(), g2.attrs["val"], "sum")
+    assert np.allclose(ii2.query(g2.attrs["val"], "sum"), ref)

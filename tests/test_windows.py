@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: use the local shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.graph import Graph
 from repro.core.windows import (
