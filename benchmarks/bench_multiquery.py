@@ -1,0 +1,129 @@
+"""Multi-query fusion benchmark: fused multi-channel plan vs per-query loop.
+
+Acceptance target (ISSUE 2): a fused 4-aggregate (sum/count/min/avg)
+DBIndex device query over one window must run >= 2x faster than four
+sequential ``query_dbindex`` calls, with bit-identical results, and a
+``Session`` must stay oracle-correct across >= 20 streamed
+``UpdateBatch``es without recompiling the fused plan.  Results land in
+``BENCH_multiquery.json``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, emit_json
+
+
+def _best_of(fn, repeats: int = 20, warmup: int = 3) -> float:
+    """Min wall time in microseconds — the robust estimator on shared boxes
+    (noise only ever adds time; the min is the closest sample to the true
+    cost, and both sides of the comparison are measured the same way)."""
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return best
+from repro.core import engine_jax as ej
+from repro.core.api import QuerySpec, Session
+from repro.core.dbindex import build_dbindex
+from repro.core.query import GraphWindowQuery
+from repro.core.updates import UpdateBatch
+from repro.core.windows import KHopWindow
+from repro.graphs.generators import erdos_renyi, with_random_attrs
+
+AGGS = ("sum", "count", "min", "avg")
+
+
+def _mixed_batch(g, rng, n_ins: int, n_del: int) -> UpdateBatch:
+    s = rng.integers(0, g.n, n_ins * 4).astype(np.int32)
+    d = rng.integers(0, g.n, n_ins * 4).astype(np.int32)
+    ok = (s != d) & ~g.contains_edges(s, d)
+    _, first = np.unique(g.edge_keys(s, d), return_index=True)
+    pick = np.intersect1d(np.flatnonzero(ok), first)[:n_ins]
+    ins = UpdateBatch.inserts(s[pick], d[pick])
+    ei = rng.choice(g.n_edges, min(n_del, g.n_edges), replace=False)
+    return UpdateBatch.concat([ins, UpdateBatch.deletes(g.src[ei], g.dst[ei])])
+
+
+def run(n: int = 20_000, deg: float = 6.0, k: int = 1, stream_batches: int = 20,
+        json_path: str = "BENCH_multiquery.json") -> dict:
+    import jax
+
+    rng = np.random.default_rng(0)
+    g = with_random_attrs(erdos_renyi(n, deg, directed=False, seed=0), seed=1)
+    w = KHopWindow(k)
+    idx = build_dbindex(g, w, method="emc")
+    plan = ej.plan_from_dbindex(idx)
+    vals = g.attrs["val"]
+
+    # ------------- fused vs per-aggregate sequential loop -------------- #
+    def sequential():
+        return [
+            jax.block_until_ready(ej.query_dbindex(plan, vals, a, use_pallas=False))
+            for a in AGGS
+        ]
+
+    def fused():
+        return jax.block_until_ready(
+            ej.query_dbindex_multi(plan, vals, AGGS, use_pallas=False)
+        )
+
+    seq_outs, fused_outs = sequential(), fused()
+    bit_identical = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(seq_outs, fused_outs)
+    )
+    assert bit_identical, "fused plan diverged from per-aggregate answers"
+
+    us_seq = _best_of(sequential)
+    us_fused = _best_of(fused)
+    speedup = us_seq / max(us_fused, 1e-9)
+    emit(f"multiquery/sequential_{len(AGGS)}agg/n{n}", us_seq, f"k={k}")
+    emit(f"multiquery/fused_{len(AGGS)}agg/n{n}", us_fused, f"k={k}")
+    emit(f"multiquery/speedup/n{n}", speedup, "x_fused_vs_sequential")
+
+    # ------------- Session under a 20-batch update stream -------------- #
+    specs = [QuerySpec(("khop", k), a) for a in AGGS]
+    sess = Session(g, specs, device=True, use_pallas=False, plan_headroom=1.0)
+    sess.run()
+    cache0 = ej.query_dbindex_multi._cache_size()
+    oracle_checks = 0
+    for step in range(stream_batches):
+        sess.update(_mixed_batch(sess.graph, rng, 4, 2))
+        res = sess.run()
+        if step % 5 == 4 or step == stream_batches - 1:
+            for s, r in zip(specs, res):
+                ref = GraphWindowQuery(s.window, s.agg).run(sess.graph,
+                                                            engine="bitset")
+                assert np.allclose(r, ref, rtol=1e-5, atol=1e-3), (step, s.agg)
+                oracle_checks += 1
+    recompiles = ej.query_dbindex_multi._cache_size() - cache0
+    emit(f"multiquery/stream_recompiles/{stream_batches}batches", recompiles, "")
+
+    payload = {
+        "config": {"n": n, "avg_degree": deg, "k": k, "aggs": list(AGGS),
+                   "stream_batches": stream_batches},
+        "fused": {
+            "sequential_us": us_seq,
+            "fused_us": us_fused,
+            "speedup_fused_vs_sequential": speedup,
+            "bit_identical": bool(bit_identical),
+        },
+        "session_stream": {
+            "batches": stream_batches,
+            "fused_plan_recompiles": int(recompiles),
+            "oracle_checks_passed": oracle_checks,
+        },
+    }
+    emit_json(json_path, payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

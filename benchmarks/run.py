@@ -22,6 +22,7 @@ def main(argv=None) -> None:
         bench_iindex,
         bench_kernels,
         bench_mc_emc,
+        bench_multiquery,
         bench_nonindex_gap,
         bench_scalability,
         bench_updates,
@@ -39,6 +40,7 @@ def main(argv=None) -> None:
         "nonindex_gap": lambda: bench_nonindex_gap.run(n=5_000 if args.fast else 8_000),
         "kernels": bench_kernels.run,
         "updates": lambda: bench_updates.run(n=20_000 if args.fast else 100_000),
+        "multiquery": lambda: bench_multiquery.run(n=8_000 if args.fast else 20_000),
     }
     only = set(args.only.split(",")) if args.only else None
     for name, fn in mods.items():

@@ -1,44 +1,49 @@
-"""Quickstart: graph window queries end to end (the paper in 40 lines).
+"""Quickstart: declarative graph window queries end to end.
+
+The paper's GWQ(G, W, Σ, A) as an API: declare `QuerySpec`s, let the
+capability registry pick engines, and let the compiler fuse every
+aggregate sharing a window into one multi-channel device plan.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core import engine_jax as ej
-from repro.core.dbindex import build_dbindex
-from repro.core.iindex import build_iindex
+from repro.core.api import DEFAULT_REGISTRY, QuerySpec, Session
 from repro.core.query import GraphWindowQuery
-from repro.core.windows import KHopWindow, TopologicalWindow
 from repro.graphs.generators import erdos_renyi, random_dag, with_random_attrs
 
 # --- a social-network-shaped graph with a per-user attribute ----------- #
 g = with_random_attrs(erdos_renyi(5_000, 8.0, seed=0), seed=1)
 
-# GWQ(G, W_2hop, SUM, val): for every user, total `val` in their 2-hop circle
-q = GraphWindowQuery(KHopWindow(2), agg="sum", attr="val")
+# four aggregates over one 2-hop window: the compiler dedups the window and
+# fuses them into ONE gather + stacked monoid segment-reduces on device
+specs = [QuerySpec(("khop", 2), a) for a in ("sum", "count", "min", "avg")]
+sess = Session(g, specs, device=True, use_pallas=False)
+for grp in sess.compiled.groups:
+    print(f"fused group: engine={grp.engine}, aggs={grp.aggs}")
+s, c, mn, avg = sess.run()
+print(f"2-hop circles: sum -> {s[:4]}, avg -> {avg[:4]}")
 
-# Dense Block Index (EMC construction) + shared two-stage evaluation
-idx = build_dbindex(g, q.window, method="emc")
-ans = idx.query(g.attrs["val"], "sum")
-print(f"DBIndex: {idx.num_blocks} blocks, "
-      f"{idx.stats['num_dense_blocks']} dense, query -> {ans[:5]}")
-
-# same query on the JAX data plane (Pallas segment-sum kernels on TPU)
-plan = ej.plan_from_dbindex(idx)
-ans_dev = np.asarray(ej.query_dbindex(plan, g.attrs["val"], "sum"))
-assert np.allclose(ans, ans_dev, atol=1e-3)
-print("device data plane matches host result")
+# serving-style traffic: a batch of attribute vectors, vmapped on device
+batch = np.random.default_rng(2).normal(size=(8, g.n))
+outs = sess.run_many(batch)
+print(f"run_many: {len(outs)} specs x {outs[0].shape} answers")
 
 # --- topological windows on a DAG (pathway-graph analytics) ------------ #
 dag = with_random_attrs(random_dag(3_000, 4.0, seed=2), seed=3)
-ii = build_iindex(dag)
-counts = ii.query(dag.attrs["val"], "count")
-print(f"I-Index: max inheritance depth {ii.stats['max_level']}, "
-      f"ancestor counts -> {counts[:5]}")
+dag_specs = [QuerySpec("topological", "count"),
+             QuerySpec("topological", "max")]
+dsess = Session(dag, dag_specs, device=True, use_pallas=False)
+counts, maxes = dsess.run()
+print(f"I-Index inheritance: ancestor counts -> {counts[:5]}")
 
-# non-indexed baseline for comparison (the gap the paper measures)
-qt = GraphWindowQuery(TopologicalWindow(), agg="count")
-ref = qt.run(dag, engine="bitset")
+# the registry is introspectable: every backend declares its capability
+for cap in DEFAULT_REGISTRY.capabilities():
+    print(f"  engine {cap.name:12s} windows={cap.windows} "
+          f"device={cap.device} sharded={cap.sharded}")
+
+# legacy one-query facade still works (thin shim over the registry)
+ref = GraphWindowQuery(dag_specs[0].window, agg="count").run(dag, engine="bitset")
 assert np.allclose(counts, ref)
 print("matches the non-indexed baseline; see benchmarks/ for the speedups")

@@ -1,5 +1,14 @@
 """Core of the paper: graph window queries, DBIndex, I-Index, baselines."""
 
 from repro.core.aggregates import AGGREGATES  # noqa: F401
+from repro.core.api import (  # noqa: F401
+    DEFAULT_REGISTRY,
+    EngineCapability,
+    EngineRegistry,
+    QuerySpec,
+    Session,
+    UnsupportedQueryError,
+    compile_queries,
+)
 from repro.core.graph import DeviceGraph, Graph  # noqa: F401
 from repro.core.windows import KHopWindow, TopologicalWindow  # noqa: F401

@@ -10,7 +10,7 @@ finalizer, per the classic Gray et al. decomposition the paper leans on.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -35,16 +35,26 @@ SUM = Monoid("sum", np.add, 0.0)
 MIN = Monoid("min", np.minimum, np.inf)
 MAX = Monoid("max", np.maximum, -np.inf)
 
+MONOIDS = {"sum": SUM, "min": MIN, "max": MAX}
+
 
 @dataclasses.dataclass(frozen=True)
 class Aggregate:
-    """An aggregate = one or two monoid channels + a finalizer."""
+    """An aggregate = one or two monoid channels + a finalizer.
+
+    ``channel_sources`` names what feeds each monoid channel — ``"value"``
+    (the attribute vector itself) or ``"ones"`` (an all-ones vector, i.e.
+    cardinality).  The source labels are what lets a multi-aggregate plan
+    dedup channels: ``sum`` and ``avg`` share the (sum, value) channel,
+    ``count`` and ``avg`` share (sum, ones).
+    """
 
     name: str
     monoids: Tuple[Monoid, ...]
     # channel value extractor: attr -> per-channel input values
     prepare: Callable[[np.ndarray], Tuple[np.ndarray, ...]]
     finalize: Optional[Callable] = None  # (channel_results...) -> result
+    channel_sources: Tuple[str, ...] = ("value",)
 
     def finalize_np(self, *chans):
         return self.finalize(*chans) if self.finalize else chans[0]
@@ -56,7 +66,8 @@ def _ones_like(a):
 
 AGGREGATES = {
     "sum": Aggregate("sum", (SUM,), lambda a: (a.astype(np.float64),)),
-    "count": Aggregate("count", (SUM,), lambda a: (_ones_like(a),)),
+    "count": Aggregate("count", (SUM,), lambda a: (_ones_like(a),),
+                       channel_sources=("ones",)),
     "min": Aggregate("min", (MIN,), lambda a: (a.astype(np.float64),)),
     "max": Aggregate("max", (MAX,), lambda a: (a.astype(np.float64),)),
     "avg": Aggregate(
@@ -64,5 +75,73 @@ AGGREGATES = {
         (SUM, SUM),
         lambda a: (a.astype(np.float64), _ones_like(a)),
         finalize=lambda s, c: s / np.maximum(c, 1e-30),
+        channel_sources=("value", "ones"),
     ),
 }
+
+
+# -------------------------------------------------------------------- #
+#  Multi-aggregate channel packing (fused query plans)
+# -------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ChannelPack:
+    """Deduped monoid channels for a set of aggregates over one window.
+
+    ``channels[i]`` is ``(monoid_name, source)``; each distinct pair appears
+    once no matter how many aggregates reference it, so k aggregates over
+    the same window collapse to ``len(channels) <= k + 1`` segment reduces
+    sharing a single gather.  ``agg_channels[j]`` maps aggregate j back to
+    its channel indices for finalization.
+    """
+
+    aggs: Tuple[str, ...]
+    channels: Tuple[Tuple[str, str], ...]
+    agg_channels: Tuple[Tuple[int, ...], ...]
+
+    def monoid(self, i: int) -> Monoid:
+        return MONOIDS[self.channels[i][0]]
+
+    def channels_of(self, monoid_name: str, source: str = None):
+        """Channel indices with the given monoid (and source, if given)."""
+        return tuple(
+            i for i, (m, s) in enumerate(self.channels)
+            if m == monoid_name and (source is None or s == source)
+        )
+
+    def prepare_np(self, values: np.ndarray) -> Tuple[np.ndarray, ...]:
+        values = np.asarray(values)
+        ones = _ones_like(values)
+        return tuple(
+            values.astype(np.float64) if src == "value" else ones
+            for _, src in self.channels
+        )
+
+    def finalize(self, agg_i: int, chans: Sequence, maximum=np.maximum):
+        """Finalize aggregate ``agg_i`` from the reduced channel results.
+
+        ``maximum`` is ``np.maximum`` or ``jnp.maximum`` so the same ratio
+        finalizer (the Gray et al. algebraic decomposition — only ``avg``
+        here) serves both the host and device executors bit-identically.
+        """
+        picked = [chans[j] for j in self.agg_channels[agg_i]]
+        if len(picked) == 1:
+            return picked[0]
+        return picked[0] / maximum(picked[1], 1e-30)
+
+
+def pack_channels(aggs: Sequence[str]) -> ChannelPack:
+    """Collapse a list of aggregates into deduped monoid channels."""
+    channels: list = []
+    seen = {}
+    agg_channels = []
+    for name in aggs:
+        a = AGGREGATES[name]
+        idxs = []
+        for m, src in zip(a.monoids, a.channel_sources):
+            key = (m.name, src)
+            if key not in seen:
+                seen[key] = len(channels)
+                channels.append(key)
+            idxs.append(seen[key])
+        agg_channels.append(tuple(idxs))
+    return ChannelPack(tuple(aggs), tuple(channels), tuple(agg_channels))

@@ -1,0 +1,578 @@
+"""Unified window-analytics API: declarative specs, engine registry, Session.
+
+The paper's GWQ abstraction (Definition 3) is one algebraic object —
+``GWQ(G, W, Σ, A)`` — and this module gives it one API surface:
+
+* :class:`QuerySpec` — a declarative value object naming (W, Σ, A).  The
+  window may be given as a :class:`~repro.core.windows.KHopWindow` /
+  :class:`~repro.core.windows.TopologicalWindow` or shorthand
+  (``("khop", 2)``, ``"topological"``).
+* :class:`EngineRegistry` — every backend declares an
+  :class:`EngineCapability` (window kinds, aggregates, device / sharded /
+  incremental flags) and the planner selects by capability; an
+  :class:`UnsupportedQueryError` lists what *is* available when nothing
+  matches.  This replaces the if/elif engine chain that used to live in
+  :mod:`repro.core.query`.
+* :func:`compile_queries` — dedups windows across specs, groups by
+  (window, attr, engine), and fuses all aggregates sharing a window into
+  one multi-channel plan (Cao et al.'s cross-window-function sharing,
+  applied to graph windows: k aggregates collapse to one gather feeding k
+  stacked monoid segment-reduces).
+* :class:`Session` — owns graph + indices + compiled device plans, routes
+  :class:`~repro.core.updates.UpdateBatch` streams through the incremental
+  maintenance path (compiled artifacts survive updates via plan patching),
+  and serves ``run`` / ``run_many`` traffic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.aggregates import AGGREGATES
+from repro.core.graph import Graph
+from repro.core.windows import KHopWindow, TopologicalWindow
+
+ALL_AGGREGATES = frozenset(AGGREGATES)
+
+
+# ---------------------------------------------------------------------- #
+#  Declarative specs
+# ---------------------------------------------------------------------- #
+def as_window(spec):
+    """Normalize a window spec: window object | "topological" | ("khop", k)."""
+    if isinstance(spec, (KHopWindow, TopologicalWindow)):
+        return spec
+    if spec == "topological":
+        return TopologicalWindow()
+    if isinstance(spec, (tuple, list)) and len(spec) == 2 and spec[0] == "khop":
+        return KHopWindow(int(spec[1]))
+    raise TypeError(f"not a window spec: {spec!r}")
+
+
+def window_kind(window) -> str:
+    if isinstance(window, KHopWindow):
+        return "khop"
+    if isinstance(window, TopologicalWindow):
+        return "topological"
+    raise TypeError(window)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySpec:
+    """One graph window function (W, Σ, A) plus an optional engine hint.
+
+    ``engine=None`` lets the planner pick by capability; naming an engine
+    pins it (and fails loudly if the capability doesn't cover the query).
+    """
+
+    window: object
+    agg: str = "sum"
+    attr: str = "val"
+    engine: Optional[str] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "window", as_window(self.window))
+        if self.agg not in AGGREGATES:
+            raise ValueError(f"unknown aggregate {self.agg!r} "
+                             f"(have {sorted(AGGREGATES)})")
+
+
+class UnsupportedQueryError(ValueError):
+    """No registered engine capability covers the requested query."""
+
+
+# ---------------------------------------------------------------------- #
+#  Capability-based engine registry
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class EngineCapability:
+    """What one backend can serve.  Selection is purely declarative."""
+
+    name: str
+    windows: Tuple[str, ...]  # of {"khop", "topological"}
+    aggregates: frozenset
+    device: bool = False  # runs on the JAX data plane
+    sharded: bool = False  # needs a mesh / shard_map
+    incremental: bool = False  # index survives UpdateBatches
+    priority: int = 0  # higher wins among matches
+
+    def covers(self, window, aggs: Sequence[str]) -> bool:
+        return window_kind(window) in self.windows and set(aggs) <= self.aggregates
+
+
+class EngineRegistry:
+    """Backends register (capability, runner); the planner selects by need.
+
+    A runner evaluates *all* aggregates of one window in a single call —
+    ``runner(g, window, values, aggs, index=None, plan=None, **opts) ->
+    {agg: ndarray}`` — so fused multi-channel execution is the interface,
+    not an afterthought; host backends simply loop.
+    """
+
+    def __init__(self):
+        self._caps: Dict[str, EngineCapability] = {}
+        self._runners: Dict[str, object] = {}
+
+    def register(self, cap: EngineCapability, runner) -> None:
+        self._caps[cap.name] = cap
+        self._runners[cap.name] = runner
+
+    def capabilities(self) -> Tuple[EngineCapability, ...]:
+        return tuple(self._caps.values())
+
+    def capability(self, name: str) -> EngineCapability:
+        if name not in self._caps:
+            raise UnsupportedQueryError(
+                f"unknown engine {name!r}; registered: {sorted(self._caps)}"
+            )
+        return self._caps[name]
+
+    def select(
+        self,
+        window,
+        aggs: Sequence[str],
+        *,
+        engine: Optional[str] = None,
+        device: Optional[bool] = None,
+        sharded: bool = False,
+        incremental: Optional[bool] = None,
+    ) -> str:
+        """Pick an engine by capability; raise with the full table if none fit."""
+        if engine is not None:
+            cap = self.capability(engine)
+            if not cap.covers(window, aggs):
+                raise UnsupportedQueryError(
+                    f"engine {engine!r} does not cover "
+                    f"({window_kind(window)}, {sorted(set(aggs))}): it serves "
+                    f"windows={cap.windows}, aggregates={sorted(cap.aggregates)}"
+                )
+            return engine
+        matches = [
+            c for c in self._caps.values()
+            if c.covers(window, aggs)
+            and (device is None or c.device == device)
+            and c.sharded == sharded
+            and (incremental is None or c.incremental == incremental)
+        ]
+        if not matches:
+            table = "; ".join(
+                f"{c.name}: windows={c.windows}, aggs={sorted(c.aggregates)}, "
+                f"device={c.device}, sharded={c.sharded}"
+                for c in self._caps.values()
+            )
+            raise UnsupportedQueryError(
+                f"no engine serves ({window_kind(window)}, {sorted(set(aggs))}, "
+                f"device={device}, sharded={sharded}) — registered: {table}"
+            )
+        return max(matches, key=lambda c: c.priority).name
+
+    def run(self, name: str, g: Graph, window, values, aggs: Sequence[str],
+            index=None, plan=None, **opts) -> Dict[str, np.ndarray]:
+        cap = self.capability(name)
+        if not cap.covers(window, aggs):
+            raise UnsupportedQueryError(
+                f"engine {name!r} does not cover "
+                f"({window_kind(window)}, {sorted(set(aggs))})"
+            )
+        unknown = set(opts) - KNOWN_OPTS
+        if unknown:  # typos must fail loudly, not silently use defaults
+            raise TypeError(
+                f"unknown engine option(s) {sorted(unknown)}; "
+                f"known: {sorted(KNOWN_OPTS)}"
+            )
+        return self._runners[name](g, window, np.asarray(values), tuple(aggs),
+                                   index=index, plan=plan, **opts)
+
+
+# every option any runner understands; EngineRegistry.run rejects the rest
+KNOWN_OPTS = frozenset({
+    "limit",  # nonindex
+    "method", "num_hashes", "cluster_hops", "bfs_batch", "pair_budget",
+    "seed",  # build_dbindex
+    "iterations", "chunk_size",  # build_eagr
+    "tm", "ts", "headroom", "use_pallas", "interpret", "schedule",  # device
+    "mesh", "axis",  # sharded
+})
+
+
+def _pick(opts: dict, *names) -> dict:
+    return {k: opts[k] for k in names if k in opts}
+
+
+def _run_nonindex(g, window, values, aggs, index=None, plan=None, **opts):
+    from repro.core.nonindex import query_pervertex
+
+    kw = _pick(opts, "limit")
+    return {a: query_pervertex(g, window, values, a, **kw) for a in aggs}
+
+
+def _run_bitset(g, window, values, aggs, index=None, plan=None, **opts):
+    from repro.core.nonindex import query_batched_bitset
+
+    return {a: query_batched_bitset(g, window, values, a) for a in aggs}
+
+
+def _build_dbindex(g, window, opts):
+    from repro.core.dbindex import build_dbindex
+
+    kw = _pick(opts, "method", "num_hashes", "cluster_hops", "bfs_batch",
+               "pair_budget", "seed")
+    if isinstance(window, TopologicalWindow):
+        kw.setdefault("method", "mc")
+    return build_dbindex(g, window, **kw)
+
+
+def _run_dbindex(g, window, values, aggs, index=None, plan=None, **opts):
+    index = index if index is not None else _build_dbindex(g, window, opts)
+    return {a: index.query(values, a) for a in aggs}
+
+
+def _run_iindex(g, window, values, aggs, index=None, plan=None, **opts):
+    from repro.core.iindex import build_iindex
+
+    index = index if index is not None else build_iindex(g)
+    return {a: index.query(values, a) for a in aggs}
+
+
+def _run_eagr(g, window, values, aggs, index=None, plan=None, **opts):
+    from repro.core.eagr import build_eagr
+
+    if index is None:
+        index = build_eagr(g, window, **_pick(opts, "iterations", "chunk_size"))
+    return {a: index.query(values, a) for a in aggs}
+
+
+def _run_jax_dbindex(g, window, values, aggs, index=None, plan=None, **opts):
+    from repro.core import engine_jax as ej
+
+    if plan is None:
+        index = index if index is not None else _build_dbindex(g, window, opts)
+        plan = ej.plan_from_dbindex(index, **_pick(opts, "tm", "ts", "headroom"))
+    outs = ej.query_dbindex_multi(plan, values, tuple(aggs),
+                                  **_pick(opts, "use_pallas", "interpret"))
+    return {a: np.asarray(o) for a, o in zip(aggs, outs)}
+
+
+def _run_jax_iindex(g, window, values, aggs, index=None, plan=None, **opts):
+    from repro.core import engine_jax as ej
+    from repro.core.iindex import build_iindex
+
+    if plan is None:
+        index = index if index is not None else build_iindex(g)
+        plan = ej.plan_from_iindex(index, **_pick(opts, "tm", "ts"))
+    outs = ej.query_iindex_multi(
+        plan, values, tuple(aggs),
+        **_pick(opts, "schedule", "use_pallas", "interpret"),
+    )
+    return {a: np.asarray(o) for a, o in zip(aggs, outs)}
+
+
+def _run_jax_sharded(g, window, values, aggs, index=None, plan=None, **opts):
+    from repro.core import engine_jax as ej
+
+    mesh = opts.get("mesh")
+    if mesh is None:
+        raise UnsupportedQueryError("engine 'jax-sharded' needs a mesh= opt")
+    if plan is None:
+        index = index if index is not None else _build_dbindex(g, window, opts)
+        plan = ej.plan_from_dbindex(index, **_pick(opts, "tm", "ts"))
+    axis = opts.get("axis", "data")
+    return {
+        a: np.asarray(ej.query_dbindex_sharded(plan, values, mesh, axis=axis))
+        for a in aggs
+    }
+
+
+def _default_registry() -> EngineRegistry:
+    r = EngineRegistry()
+    both = ("khop", "topological")
+    r.register(EngineCapability("nonindex", both, ALL_AGGREGATES, priority=0),
+               _run_nonindex)
+    r.register(EngineCapability("bitset", both, ALL_AGGREGATES, priority=10),
+               _run_bitset)
+    r.register(EngineCapability("eagr", both, ALL_AGGREGATES, priority=20),
+               _run_eagr)
+    r.register(EngineCapability("dbindex", both, ALL_AGGREGATES,
+                                incremental=True, priority=30), _run_dbindex)
+    r.register(EngineCapability("iindex", ("topological",), ALL_AGGREGATES,
+                                incremental=True, priority=40), _run_iindex)
+    r.register(EngineCapability("jax", both, ALL_AGGREGATES, device=True,
+                                incremental=True, priority=50), _run_jax_dbindex)
+    r.register(EngineCapability("jax-iindex", ("topological",), ALL_AGGREGATES,
+                                device=True, incremental=True, priority=60),
+               _run_jax_iindex)
+    r.register(EngineCapability("jax-sharded", both, frozenset({"sum"}),
+                                device=True, sharded=True, incremental=True,
+                                priority=70), _run_jax_sharded)
+    return r
+
+
+DEFAULT_REGISTRY = _default_registry()
+
+
+# ---------------------------------------------------------------------- #
+#  Multi-query compiler
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class PlanGroup:
+    """All aggregates that share one (window, attr, engine) — one fused plan."""
+
+    window: object
+    attr: str
+    engine: str
+    aggs: Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledQueries:
+    """Output of :func:`compile_queries`: fused groups + spec back-pointers."""
+
+    specs: Tuple[QuerySpec, ...]
+    groups: Tuple[PlanGroup, ...]
+    spec_slots: Tuple[Tuple[int, int], ...]  # spec i -> (group, agg position)
+
+    def results_for_specs(self, group_results: Sequence[Dict[str, np.ndarray]]):
+        return [
+            group_results[gi][self.groups[gi].aggs[ai]]
+            for gi, ai in self.spec_slots
+        ]
+
+
+def compile_queries(
+    specs: Sequence[QuerySpec],
+    *,
+    registry: EngineRegistry = None,
+    device: Optional[bool] = None,
+    sharded: bool = False,
+) -> CompiledQueries:
+    """Plan a batch of queries: dedup windows, select engines by capability,
+    fuse aggregates sharing a (window, attr, engine) into one group."""
+    registry = registry or DEFAULT_REGISTRY
+    specs = tuple(
+        s if isinstance(s, QuerySpec) else QuerySpec(*s) for s in specs
+    )
+    # first pass: resolve each spec's engine (explicit pin or union-capability
+    # selection over every spec sharing the window — so sum+min on one window
+    # land on an engine that can fuse both)
+    union: Dict[Tuple[object, str], set] = {}
+    for s in specs:
+        if s.engine is None:
+            union.setdefault((s.window, s.attr), set()).add(s.agg)
+    chosen: Dict[Tuple[object, str], str] = {
+        key: registry.select(key[0], sorted(aggs), device=device, sharded=sharded)
+        for key, aggs in union.items()
+    }
+    # second pass: group by (window, attr, engine), dedup aggregates in order
+    order: List[Tuple[object, str, str]] = []
+    agg_lists: Dict[Tuple[object, str, str], List[str]] = {}
+    slots: List[Tuple[int, int]] = []
+    for s in specs:
+        engine = s.engine or chosen[(s.window, s.attr)]
+        if s.engine is not None:  # validate explicit pins eagerly
+            registry.select(s.window, (s.agg,), engine=engine)
+        key = (s.window, s.attr, engine)
+        if key not in agg_lists:
+            agg_lists[key] = []
+            order.append(key)
+        if s.agg not in agg_lists[key]:
+            agg_lists[key].append(s.agg)
+        slots.append((order.index(key), agg_lists[key].index(s.agg)))
+    groups = tuple(
+        PlanGroup(window=w, attr=attr, engine=e, aggs=tuple(agg_lists[(w, attr, e)]))
+        for (w, attr, e) in order
+    )
+    return CompiledQueries(specs=specs, groups=groups, spec_slots=tuple(slots))
+
+
+# ---------------------------------------------------------------------- #
+#  Session: graph + indices + compiled plans under streamed updates
+# ---------------------------------------------------------------------- #
+_DBINDEX_ENGINES = {"dbindex", "jax", "jax-sharded"}
+_IINDEX_ENGINES = {"iindex", "jax-iindex"}
+
+
+class Session:
+    """Stateful serving facade over compiled window queries.
+
+    Builds one index (and, for device engines, one device plan) per distinct
+    window — shared by every query group on that window — then keeps all of
+    it fresh under :meth:`update` via the incremental maintenance path
+    (batched index update + tile-group plan patching + staleness policy), so
+    compiled fused plans survive a stream of ``UpdateBatch``es without
+    recompilation while shapes stay stable.
+    """
+
+    def __init__(
+        self,
+        g: Graph,
+        specs: Sequence[QuerySpec],
+        *,
+        registry: EngineRegistry = None,
+        device: Optional[bool] = None,
+        policy=None,
+        method: str = "emc",
+        use_pallas: bool = True,
+        interpret: Optional[bool] = None,
+        tm: int = 512,
+        ts: int = 512,
+        plan_headroom: float = 0.5,
+        compact_garbage: float = 0.5,
+        mesh=None,
+    ):
+        from repro.core.streaming import StreamingEngine
+
+        self.registry = registry or DEFAULT_REGISTRY
+        self.compiled = compile_queries(specs, registry=self.registry,
+                                        device=device, sharded=False)
+        self.graph = g
+        self._opts = dict(use_pallas=use_pallas, interpret=interpret,
+                          tm=tm, ts=ts, method=method, mesh=mesh)
+        self.updates_applied = 0
+        # one stateful engine per (window, index kind) — shared by every
+        # group on that key, so the device flag is the OR over the sharing
+        # groups (a host group must not strip the plan a device group
+        # compiled).  EAGR indices are rebuilt lazily after updates (EAGR
+        # has no incremental story).
+        self._states: Dict[Tuple[object, str], StreamingEngine] = {}
+        self._eagr: Dict[object, object] = {}
+        self._eagr_dirty = False
+        need_device: Dict[Tuple[object, str], bool] = {}
+        for grp in self.compiled.groups:
+            kind = (
+                "dbindex" if grp.engine in _DBINDEX_ENGINES
+                else "iindex" if grp.engine in _IINDEX_ENGINES
+                else None
+            )
+            if kind is None:
+                continue
+            key = (grp.window, kind)
+            cap = self.registry.capability(grp.engine)
+            need_device[key] = need_device.get(key, False) or cap.device
+        for (window, kind), dev in need_device.items():
+            self._states[(window, kind)] = StreamingEngine(
+                g, window, index_kind=kind, method=method,
+                policy=policy, device=dev, tm=tm, ts=ts,
+                use_pallas=use_pallas, interpret=interpret,
+                plan_headroom=plan_headroom,
+                compact_garbage=compact_garbage,
+            )
+
+    # ------------------------------------------------------------------ #
+    def _state_for(self, grp: PlanGroup):
+        if grp.engine in _DBINDEX_ENGINES:
+            return self._states.get((grp.window, "dbindex"))
+        if grp.engine in _IINDEX_ENGINES:
+            return self._states.get((grp.window, "iindex"))
+        return None
+
+    def _group_artifacts(self, grp: PlanGroup):
+        state = self._state_for(grp)
+        if state is not None:
+            return state.index, state.plan
+        if grp.engine == "eagr":
+            if self._eagr_dirty:
+                self._eagr.clear()
+                self._eagr_dirty = False
+            if grp.window not in self._eagr:
+                from repro.core.eagr import build_eagr
+
+                self._eagr[grp.window] = build_eagr(self.graph, grp.window)
+            return self._eagr[grp.window], None
+        return None, None
+
+    def _values_for(self, grp: PlanGroup, values):
+        if values is None:
+            return self.graph.attrs[grp.attr]
+        if isinstance(values, dict):
+            return values[grp.attr]
+        return values
+
+    # ------------------------------------------------------------------ #
+    def run(self, values=None) -> List[np.ndarray]:
+        """Evaluate every compiled spec; returns results in spec order.
+
+        ``values`` overrides the graph attribute(s): an array (applied to
+        every group) or a dict keyed by attr name.
+        """
+        group_results = []
+        for grp in self.compiled.groups:
+            index, plan = self._group_artifacts(grp)
+            group_results.append(
+                self.registry.run(
+                    grp.engine, self.graph, grp.window,
+                    self._values_for(grp, values), grp.aggs,
+                    index=index, plan=plan, **self._opts,
+                )
+            )
+        return self.compiled.results_for_specs(group_results)
+
+    def run_many(self, values_batch) -> List[np.ndarray]:
+        """Serving-style traffic: evaluate all specs for a [B, n] batch of
+        attribute vectors, vmapped over the batch axis on device engines.
+
+        Device groups always run through the XLA lowering under vmap
+        (``use_pallas=False``) — batching a Pallas kernel is not supported
+        on every backend, and the fused XLA path vmaps cleanly.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import engine_jax as ej
+
+        fused_fns = {"jax": ej.query_dbindex_multi,
+                     "jax-iindex": ej.query_iindex_multi}
+        vb = np.asarray(values_batch)
+        assert vb.ndim == 2, "values_batch must be [B, n]"
+        group_results = []
+        for grp in self.compiled.groups:
+            index, plan = self._group_artifacts(grp)
+            if plan is not None and grp.engine in fused_fns:
+                fn = fused_fns[grp.engine]
+                outs = jax.vmap(
+                    lambda v: fn(plan, v, grp.aggs, use_pallas=False,
+                                 interpret=self._opts["interpret"])
+                )(jnp.asarray(vb, jnp.float32))
+                group_results.append(
+                    {a: np.asarray(o) for a, o in zip(grp.aggs, outs)}
+                )
+            else:  # host engines: loop the batch
+                rows = [
+                    self.registry.run(grp.engine, self.graph, grp.window, v,
+                                      grp.aggs, index=index, plan=plan,
+                                      **self._opts)
+                    for v in vb
+                ]
+                group_results.append(
+                    {a: np.stack([r[a] for r in rows]) for a in grp.aggs}
+                )
+        return self.compiled.results_for_specs(group_results)
+
+    # ------------------------------------------------------------------ #
+    def update(self, batch) -> Dict:
+        """Stream one UpdateBatch through every stateful index + plan.
+
+        The graph edit is applied once and shared by every engine (their
+        index maintenance is per-window, the graph is not)."""
+        from repro.core.updates import apply_batch
+
+        g2 = apply_batch(self.graph, batch)
+        reports = {}
+        for (window, kind), eng in self._states.items():
+            reports[f"{window.name()}/{kind}"] = eng.apply(batch, graph=g2)
+        self.graph = g2
+        self._eagr_dirty = bool(self._eagr) or self._eagr_dirty
+        self.updates_applied += 1
+        return reports
+
+    @property
+    def staleness(self) -> Dict[str, Dict]:
+        """Per-state sharing-loss telemetry (same keys as :meth:`update`
+        reports) plus each engine's reorganize count."""
+        return {
+            f"{window.name()}/{kind}": {**eng.staleness,
+                                        "reorg_count": eng.reorg_count}
+            for (window, kind), eng in self._states.items()
+        }

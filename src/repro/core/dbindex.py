@@ -100,6 +100,30 @@ class DBIndex:
             + self.link_owner_offsets.nbytes
         )
 
+    def linked_blocks_mask(self) -> Array:
+        """Bool [num_blocks]: which blocks at least one owner links to."""
+        linked = np.zeros(self.num_blocks, dtype=bool)
+        linked[self.link_block] = True
+        return linked
+
+    def garbage_block_fraction(self, linked: Optional[Array] = None) -> float:
+        """Fraction of blocks no owner links to (zero-link = garbage).
+
+        Delete-dominated streams shrink windows: phase-1 merges drop the
+        affected owners' links and append smaller secondary blocks, so old
+        blocks lose their last link without the links/blocks *growth*
+        ratios ever tripping — this is the direct staleness signal for
+        them, shared by :class:`repro.core.streaming.StalenessPolicy` and
+        the pass-1 compaction in
+        :func:`repro.core.engine_jax.patch_plan_dbindex` (which passes its
+        already-computed ``linked`` mask to avoid a second scan).
+        """
+        if self.num_blocks == 0:
+            return 0.0
+        if linked is None:
+            linked = self.linked_blocks_mask()
+        return 1.0 - int(np.count_nonzero(linked)) / self.num_blocks
+
     # ------------------------- query (NumPy) ------------------------- #
     def query(self, values: Array, agg: str = "sum") -> Array:
         """Two-stage shared aggregation (paper §4.1), NumPy executor."""

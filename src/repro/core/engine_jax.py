@@ -8,6 +8,12 @@ The host-built indices become static *plans* of device arrays:
   forest; the inheritance scan is either level-scheduled (``depth`` gathers)
   or pointer-doubled (``log2(depth)`` gathers, the §Perf variant).
 
+``query_dbindex_multi`` / ``query_iindex_multi`` are the fused
+multi-aggregate executors behind :mod:`repro.core.api`: one gather per
+pass feeds every monoid channel (sum channels stack into a matrix reduce;
+min/max ride dense ELL layouts or per-monoid inheritance), so k aggregates
+over one window cost roughly one query instead of k.
+
 ``query_dbindex_sharded`` distributes the query under ``shard_map``:
 pass 1 is sharded over *blocks*, the (small) block-partial vector ``T`` is
 all-gathered over the data axis, and pass 2 is sharded over *owners* —
@@ -32,18 +38,34 @@ from repro.kernels.segment_reduce.ops import (
     build_tile_plan,
     patch_tile_plan,
     segment_sum,
+    segment_sum_gathered,
 )
 
 
 # ---------------------------------------------------------------------- #
 #  DBIndex plan
 # ---------------------------------------------------------------------- #
+_ELL_SENTINEL = np.int32(np.iinfo(np.int32).max)  # jnp.take clips -> last row
+
+
 @dataclasses.dataclass(frozen=True)
 class DBIndexPlan:
     """Device plan.  ``block_capacity >= num_blocks`` pads the block-partial
     vector ``T`` so that streamed updates appending secondary blocks keep
     static shapes (capacity grows by powers of two → O(log) recompiles over
-    a stream instead of one per batch)."""
+    a stream instead of one per batch).
+
+    ``num_blocks`` is a pytree *child* (not aux data): it changes on every
+    streamed batch, and jitted queries must not retrace for it — device code
+    sizes everything by ``block_capacity`` instead.
+
+    ``p1_ell`` / ``p2_ell`` are padded per-segment row layouts (ELL style)
+    for the idempotent monoids: blocks and owner link lists have tiny
+    bounded fan-in, so min/max evaluate as one dense gather + axis reduce
+    instead of an XLA scatter.  min/max are order-insensitive, so the
+    formulation is bit-exact against any other evaluation order.  Pad slots
+    hold ``_ELL_SENTINEL``; ``jnp.take`` clips it to the last row of the
+    value vector, which the query extends with the monoid identity."""
 
     n: int
     num_blocks: int
@@ -52,17 +74,20 @@ class DBIndexPlan:
     pass2: TilePlan  # block partials -> owner windows
     block_sizes: jnp.ndarray  # f32 [block_capacity] (for count/avg)
     link_counts: jnp.ndarray  # f32 [n]
+    p1_ell: Optional[jnp.ndarray] = None  # i32 [block_capacity, R1] member ids
+    p2_ell: Optional[jnp.ndarray] = None  # i32 [n, R2] block ids
 
     def tree_flatten(self):
         return (
-            (self.pass1, self.pass2, self.block_sizes, self.link_counts),
-            (self.n, self.num_blocks, self.block_capacity),
+            (self.num_blocks, self.pass1, self.pass2, self.block_sizes,
+             self.link_counts, self.p1_ell, self.p2_ell),
+            (self.n, self.block_capacity),
         )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        p1, p2, bs, lc = children
-        return cls(aux[0], aux[1], aux[2], p1, p2, bs, lc)
+        nb, p1, p2, bs, lc, e1, e2 = children
+        return cls(aux[0], nb, aux[1], p1, p2, bs, lc, e1, e2)
 
 
 jax.tree_util.register_pytree_node(
@@ -76,16 +101,69 @@ def _block_sizes_padded(index: DBIndex, capacity: int) -> np.ndarray:
     return sizes
 
 
+def _pow2(x: int) -> int:
+    return 1 << (max(int(x), 1) - 1).bit_length()
+
+
+def _ell_rows(offsets: np.ndarray, items: np.ndarray, num_rows: int,
+              width: int) -> np.ndarray:
+    """Padded per-segment item matrix [num_rows, width], sentinel-padded."""
+    out = np.full((num_rows, width), _ELL_SENTINEL, np.int32)
+    sizes = np.diff(offsets).astype(np.int64)
+    row = np.repeat(np.arange(sizes.size, dtype=np.int64), sizes)
+    pos = np.arange(items.size) - np.repeat(offsets[:-1], sizes)
+    out[row, pos] = items
+    return out
+
+
+def _ell_from_index(index: DBIndex, cap: int):
+    """(p1_ell, p2_ell) for the min/max fast path, or (None, None) when a
+    degenerate fan-in distribution would blow the padded layout up (the
+    scatter fallback stays available — min/max are exact either way)."""
+    max_block = int(np.diff(index.block_offsets).max()) if index.num_blocks else 1
+    max_links = int(np.diff(index.link_owner_offsets).max()) if index.n else 1
+    r1, r2 = _pow2(max_block), _pow2(max_links)
+    # the dense reduce beats the XLA scatter until padding inflates the row
+    # count by roughly an order of magnitude (scatter ~50-100ns/row vs ~1-2
+    # ns/element dense); skewed fan-in distributions (one huge block, one
+    # hub owner linking thousands of blocks) fall back to the scatter path
+    if (cap * r1 > max(16 * index.block_members.size, 1 << 16)
+            or index.n * r2 > max(16 * index.link_block.size, 1 << 16)):
+        return None, None
+    p1 = _ell_rows(index.block_offsets, index.block_members, cap, r1)
+    p2 = _ell_rows(index.link_owner_offsets, index.link_block, index.n, r2)
+    return jnp.asarray(p1), jnp.asarray(p2)
+
+
 def plan_from_dbindex(
     index: DBIndex, tm: int = 512, ts: int = 512,
-    block_capacity: Optional[int] = None,
+    block_capacity: Optional[int] = None, headroom: float = 0.0,
 ) -> DBIndexPlan:
     cap = max(int(block_capacity or 0), index.num_blocks, 1)
+    floors = None
+    if headroom > 0:
+        # pre-pad the block id space to the next power of two past the
+        # headroom so streamed secondary-block appends don't change the
+        # capacity (and hence the static shapes) on the first few batches
+        cap = _pow2(int(cap * (1 + headroom)))
+        # appended secondary blocks take consecutive ids just past
+        # num_blocks, so the growth lands in a handful of specific tile
+        # groups — floor those at the expected rows of a full group of
+        # average-sized blocks instead of spreading slack uniformly
+        n_groups = max(1, -(-cap // ts))
+        avg_block = index.block_members.size / max(index.num_blocks, 1)
+        boost = -(-int(ts * avg_block * (1 + headroom)) // tm)
+        floors = np.ones(n_groups, np.int64)
+        g0 = index.num_blocks // ts
+        floors[g0: g0 + 4] = max(boost, 1)
     member_block = np.asarray(index.member_block_ids, np.int64)
-    pass1 = build_tile_plan(index.block_members, member_block, cap, tm, ts)
+    pass1 = build_tile_plan(index.block_members, member_block, cap, tm, ts,
+                            headroom=headroom, group_min_tiles=floors)
     owner_ids = np.asarray(index.link_owner_ids, np.int64)
-    pass2 = build_tile_plan(index.link_block, owner_ids, index.n, tm, ts)
+    pass2 = build_tile_plan(index.link_block, owner_ids, index.n, tm, ts,
+                            headroom=headroom)
     links = np.diff(index.link_owner_offsets).astype(np.float32)
+    p1_ell, p2_ell = _ell_from_index(index, cap)
     return DBIndexPlan(
         n=index.n,
         num_blocks=index.num_blocks,
@@ -94,11 +172,14 @@ def plan_from_dbindex(
         pass2=pass2,
         block_sizes=jnp.asarray(_block_sizes_padded(index, cap)),
         link_counts=jnp.asarray(links),
+        p1_ell=p1_ell,
+        p2_ell=p2_ell,
     )
 
 
 def patch_plan_dbindex(
-    plan: DBIndexPlan, index: DBIndex, changed_owners: np.ndarray
+    plan: DBIndexPlan, index: DBIndex, changed_owners: np.ndarray,
+    compact_garbage: float = 0.5, headroom: float = 0.0,
 ) -> DBIndexPlan:
     """Incremental plan maintenance after ``update_dbindex_batch``.
 
@@ -108,24 +189,39 @@ def patch_plan_dbindex(
     ``changed_owners`` (the batch's affected owner set).  Everything else
     is spliced from the live plan.
 
+    Delete-heavy streams accumulate *garbage blocks* — blocks no owner
+    links to any more, whose member rows still occupy pass-1 tiles.  When
+    the garbage fraction crosses ``compact_garbage``, pass 1 is re-laid-out
+    without the garbage blocks' member rows (block ids are untouched, so
+    pass 2 and the jitted query are unaffected beyond the shape change).
+
     When the updater fell back to a full rebuild (``last_full_rebuild``
     stat), the appended-prefix invariant does not hold and splicing would
     silently reuse stale tiles — build a fresh plan instead.
     """
     cap = plan.block_capacity
     if index.num_blocks > cap:
-        cap = 1 << (index.num_blocks - 1).bit_length()
+        cap = _pow2(index.num_blocks)
     if index.stats.get("last_full_rebuild"):
         return plan_from_dbindex(index, plan.pass1.tm, plan.pass1.ts,
-                                 block_capacity=cap)
-    new_blocks = np.arange(plan.num_blocks, index.num_blocks, dtype=np.int64)
-    pass1 = patch_tile_plan(
-        plan.pass1,
-        index.block_members,
-        np.asarray(index.member_block_ids, np.int64),
-        cap,
-        new_blocks,
-    )
+                                 block_capacity=cap, headroom=headroom)
+    member_block = np.asarray(index.member_block_ids, np.int64)
+    linked = index.linked_blocks_mask()
+    if index.garbage_block_fraction(linked) >= compact_garbage:
+        keep = linked[member_block]
+        pass1 = build_tile_plan(
+            index.block_members[keep], member_block[keep], cap,
+            plan.pass1.tm, plan.pass1.ts, headroom=headroom,
+        )
+    else:
+        new_blocks = np.arange(plan.num_blocks, index.num_blocks, dtype=np.int64)
+        pass1 = patch_tile_plan(
+            plan.pass1,
+            index.block_members,
+            member_block,
+            cap,
+            new_blocks,
+        )
     pass2 = patch_tile_plan(
         plan.pass2,
         index.link_block,
@@ -134,6 +230,7 @@ def patch_plan_dbindex(
         np.asarray(changed_owners, np.int64),
     )
     links = np.diff(index.link_owner_offsets).astype(np.float32)
+    p1_ell, p2_ell = _patch_ell(plan, index, cap, changed_owners)
     return DBIndexPlan(
         n=index.n,
         num_blocks=index.num_blocks,
@@ -142,7 +239,48 @@ def patch_plan_dbindex(
         pass2=pass2,
         block_sizes=jnp.asarray(_block_sizes_padded(index, cap)),
         link_counts=jnp.asarray(links),
+        p1_ell=p1_ell,
+        p2_ell=p2_ell,
     )
+
+
+def _patch_ell(plan: DBIndexPlan, index: DBIndex, cap: int,
+               changed_owners: np.ndarray):
+    """Incremental maintenance of the min/max ELL layouts: scatter-set only
+    the appended blocks' rows and the changed owners' rows; rebuild (a
+    recompile-sized event, like capacity growth) only when a row no longer
+    fits its padded width."""
+    if plan.p1_ell is None:
+        return None, None
+    block_sizes = np.diff(index.block_offsets)
+    new_sizes = block_sizes[plan.num_blocks:]
+    link_sizes = np.diff(index.link_owner_offsets)
+    owners = np.asarray(changed_owners, np.int64)
+    r1, r2 = plan.p1_ell.shape[1], plan.p2_ell.shape[1]
+    if (cap != plan.block_capacity
+            or (new_sizes.size and int(new_sizes.max()) > r1)
+            or (owners.size and int(link_sizes[owners].max()) > r2)):
+        return _ell_from_index(index, cap)
+    p1_ell = plan.p1_ell
+    if new_sizes.size:
+        off = index.block_offsets[plan.num_blocks:]
+        rows = _ell_rows(off - off[0], index.block_members[off[0]:],
+                         new_sizes.size, r1)
+        ids = jnp.asarray(np.arange(plan.num_blocks, index.num_blocks))
+        p1_ell = p1_ell.at[ids].set(jnp.asarray(rows))
+    p2_ell = plan.p2_ell
+    if owners.size:
+        starts = index.link_owner_offsets[owners]
+        counts = link_sizes[owners]
+        off = np.zeros(owners.size + 1, np.int64)
+        np.cumsum(counts, out=off[1:])
+        items = index.link_block[
+            np.repeat(starts, counts)
+            + (np.arange(off[-1]) - np.repeat(off[:-1], counts))
+        ]
+        rows = _ell_rows(off, items, owners.size, r2)
+        p2_ell = p2_ell.at[jnp.asarray(owners)].set(jnp.asarray(rows))
+    return p1_ell, p2_ell
 
 
 @functools.partial(jax.jit, static_argnames=("agg", "use_pallas", "interpret"))
@@ -165,14 +303,119 @@ def query_dbindex(plan: DBIndexPlan, values, agg: str = "sum",
             return chans[0]
         return chans[0] / jnp.maximum(chans[1], 1e-30)
     if agg in ("min", "max"):
-        from repro.kernels.segment_reduce.ref import segment_reduce_ref
-
-        sid1 = plan.pass1.seg_tiles.reshape(-1)
-        t = segment_reduce_ref(values, plan.pass1.gather_padded, sid1,
-                               plan.num_blocks, op=agg)
-        sid2 = plan.pass2.seg_tiles.reshape(-1)
-        return segment_reduce_ref(t, plan.pass2.gather_padded, sid2, plan.n, op=agg)
+        t = _minmax_pass1(plan, values, agg)
+        return _minmax_pass2(plan, t, agg)
     raise ValueError(agg)
+
+
+def _ell_reduce(ell, vec, op: str):
+    """Dense padded reduce: one gather + axis reduce, no scatter.  The
+    sentinel pad index clips to the appended identity row of ``vec``.
+    ``vec`` may be [S] or [S, C] (stacked channels of one monoid)."""
+    ident = {"min": jnp.inf, "max": -jnp.inf, "sum": 0.0}[op]
+    pad = jnp.full((1,) + vec.shape[1:], ident, vec.dtype)
+    ext = jnp.concatenate([vec, pad])
+    rows = jnp.take(ext, ell, axis=0, mode="clip")  # sentinel -> identity row
+    red = {"min": jnp.min, "max": jnp.max, "sum": jnp.sum}[op]
+    return red(rows, axis=1)
+
+
+def _minmax_pass1(plan: DBIndexPlan, values, op: str, gathered=None):
+    """Block partials for an idempotent monoid: ELL fast path when the plan
+    carries one, else the masked XLA segment lowering over the tile layout
+    (sized by block_capacity — static under streamed updates)."""
+    if plan.p1_ell is not None:
+        return _ell_reduce(plan.p1_ell, values, op)
+    if gathered is None:
+        gathered = jnp.take(values, plan.pass1.gather_padded)
+    return _segment_minmax_gathered(plan.pass1, gathered,
+                                    plan.block_capacity, op)
+
+
+def _minmax_pass2(plan: DBIndexPlan, t, op: str):
+    if plan.p2_ell is not None:
+        return _ell_reduce(plan.p2_ell, t, op)
+    gathered = jnp.take(t, plan.pass2.gather_padded)
+    return _segment_minmax_gathered(plan.pass2, gathered, plan.n, op)
+
+
+def _segment_minmax_gathered(plan, gathered, num_segments: int, op: str):
+    """Masked XLA segment min/max over pre-gathered rows in plan layout."""
+    sid = plan.seg_tiles.reshape(-1)
+    valid = sid >= 0
+    fill = jnp.inf if op == "min" else -jnp.inf
+    seg_op = jax.ops.segment_min if op == "min" else jax.ops.segment_max
+    if gathered.ndim == 1:
+        masked = jnp.where(valid, gathered, fill)
+    else:
+        masked = jnp.where(valid[:, None], gathered, fill)
+    out = seg_op(masked, jnp.where(valid, sid, num_segments),
+                 num_segments=num_segments + 1)
+    return out[:num_segments]
+
+
+@functools.partial(jax.jit, static_argnames=("aggs", "use_pallas", "interpret"))
+def query_dbindex_multi(plan: DBIndexPlan, values, aggs: tuple,
+                        use_pallas: bool = True, interpret: Optional[bool] = None):
+    """Fused multi-aggregate DBIndex query: one gather per pass feeds every
+    monoid channel (the Cao et al. multi-window-function sharing, applied to
+    graph windows).
+
+    ``aggs`` is a static tuple of aggregate names sharing one window; the
+    channels are deduped (``sum``/``avg`` share the value channel, ``count``/
+    ``avg`` the cardinality channel), pass 1 runs once over the deduped value
+    channels, and pass 2 gathers one stacked ``[block_capacity, C]`` matrix
+    feeding k per-monoid segment reduces.  Returns one array per aggregate,
+    in ``aggs`` order, bit-identical to the per-aggregate ``query_dbindex``
+    results.
+    """
+    from repro.core.aggregates import pack_channels
+
+    pack = pack_channels(aggs)
+    values = jnp.asarray(values, jnp.float32)
+    sum_cols = pack.channels_of("sum")
+    minmax_cols = [
+        (ci, m) for ci, (m, _) in enumerate(pack.channels) if m != "sum"
+    ]
+
+    # ---- pass 1: one shared gather of the attribute vector -------------- #
+    need_g1 = any(pack.channels[ci] == ("sum", "value") for ci in sum_cols) or (
+        plan.p1_ell is None and minmax_cols
+    )
+    g1 = jnp.take(values, plan.pass1.gather_padded) if need_g1 else None
+    t_cols = {}
+    for ci in sum_cols:
+        if pack.channels[ci][1] == "ones":
+            # block cardinalities are host-exact plan metadata: the count
+            # channel skips pass 1 entirely (same as the per-agg path)
+            t_cols[ci] = plan.block_sizes
+        else:
+            t_cols[ci] = segment_sum_gathered(plan.pass1, g1,
+                                              use_pallas=use_pallas,
+                                              interpret=interpret)
+    for ci, mname in minmax_cols:
+        t_cols[ci] = _minmax_pass1(plan, values, mname, gathered=g1)
+
+    # ---- pass 2: one gather of the stacked sum-channel matrix; min/max
+    # ride the dense ELL layout (idempotent monoids, order-insensitive) --- #
+    outs = {}
+    if sum_cols:
+        t_mat = jnp.stack([t_cols[ci] for ci in sum_cols], axis=1)
+        g2 = jnp.take(t_mat, plan.pass2.gather_padded, axis=0)  # [Lpad, C]
+        reduced = segment_sum_gathered(
+            plan.pass2, g2, use_pallas=use_pallas, interpret=interpret,
+        )
+        if reduced.ndim == 1:
+            reduced = reduced[:, None]
+        for j, ci in enumerate(sum_cols):
+            outs[ci] = reduced[:, j]
+    for ci, mname in minmax_cols:
+        outs[ci] = _minmax_pass2(plan, t_cols[ci], mname)
+    chans = [outs[ci] for ci in range(len(pack.channels))]
+    return tuple(
+        pack.finalize(i, chans, maximum=jnp.maximum)
+        for i in range(len(aggs))
+    )
 
 
 def query_dbindex_sharded(plan: DBIndexPlan, values, mesh, axis="data"):
@@ -303,25 +546,96 @@ def query_iindex(plan: IIndexPlan, values, schedule: str = "level",
     """
     values = jnp.asarray(values, jnp.float32)
     wdp = segment_sum(plan.wd_plan, values, use_pallas=use_pallas, interpret=interpret)
-    pid = plan.pid
+    return _inherit_scan(wdp, plan.pid, plan.level, plan.max_level, plan.n,
+                         "sum", schedule)
+
+
+_COMBINE = {"sum": (jnp.add, 0.0), "min": (jnp.minimum, jnp.inf),
+            "max": (jnp.maximum, -jnp.inf)}
+
+
+def _inherit_scan(wdp, pid, level, max_level: int, n: int, monoid: str,
+                  schedule: str):
+    """Per-monoid inheritance along the PID forest (Algorithm 5 generalized).
+
+    ``wdp`` holds the window-difference partials, [n] or [n, C] (stacked
+    channels of the same monoid).  Works for any commutative monoid — the
+    level schedule combines each vertex with its parent's *finished*
+    aggregate, the doubling schedule is an exact pointer-chain prefix
+    combine — which is what lifts the device I-Index path beyond SUM.
+    """
+    combine, ident = _COMBINE[monoid]
+    mat = wdp.ndim == 2
     if schedule == "level":
         def body(i, ans):
-            parent = jnp.take(ans, jnp.clip(pid, 0, plan.n - 1))
-            parent = jnp.where(pid >= 0, parent, 0.0)
-            return jnp.where(plan.level == i, wdp + parent, ans)
+            parent = jnp.take(ans, jnp.clip(pid, 0, n - 1), axis=0)
+            mask = pid >= 0
+            parent = jnp.where(mask[:, None] if mat else mask, parent, ident)
+            cond = level == i
+            return jnp.where(cond[:, None] if mat else cond,
+                             combine(wdp, parent), ans)
 
-        return jax.lax.fori_loop(1, plan.max_level + 1, body, wdp)
+        return jax.lax.fori_loop(1, max_level + 1, body, wdp)
     if schedule == "doubling":
-        rounds = max(1, int(np.ceil(np.log2(plan.max_level + 1)))) if plan.max_level else 0
+        rounds = max(1, int(np.ceil(np.log2(max_level + 1)))) if max_level else 0
 
         def body(_, carry):
             val, ptr = carry
-            pv = jnp.take(val, jnp.clip(ptr, 0, plan.n - 1))
-            val = val + jnp.where(ptr >= 0, pv, 0.0)
-            pp = jnp.take(ptr, jnp.clip(ptr, 0, plan.n - 1))
-            ptr = jnp.where(ptr >= 0, pp, -1)
+            pv = jnp.take(val, jnp.clip(ptr, 0, n - 1), axis=0)
+            mask = ptr >= 0
+            pv = jnp.where(mask[:, None] if mat else mask, pv, ident)
+            val = combine(val, pv)
+            pp = jnp.take(ptr, jnp.clip(ptr, 0, n - 1))
+            ptr = jnp.where(mask, pp, -1)
             return val, ptr
 
         val, _ = jax.lax.fori_loop(0, rounds, body, (wdp, pid))
         return val
     raise ValueError(schedule)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("aggs", "schedule", "use_pallas", "interpret"))
+def query_iindex_multi(plan: IIndexPlan, values, aggs: tuple,
+                       schedule: str = "level", use_pallas: bool = True,
+                       interpret: Optional[bool] = None):
+    """Fused multi-aggregate topological query via inheritance.
+
+    One gather of the stacked channel matrix feeds every monoid's
+    window-difference reduce; the inheritance scan then runs once per
+    monoid (sum channels stacked into a single scan).  min/max ride the
+    per-monoid level inheritance — containment (Theorem 5.1) makes the
+    parent's finished aggregate a valid partial for *any* monoid, not just
+    SUM.  Returns one array per aggregate, in ``aggs`` order.
+    """
+    from repro.core.aggregates import pack_channels
+
+    pack = pack_channels(aggs)
+    values = jnp.asarray(values, jnp.float32)
+    n = plan.n
+    ones = jnp.ones(n, jnp.float32)
+    cols = jnp.stack(
+        [values if src == "value" else ones for _, src in pack.channels],
+        axis=1,
+    )  # [n, C]
+    g = jnp.take(cols, plan.wd_plan.gather_padded, axis=0)  # one gather
+    chans = [None] * len(pack.channels)
+    sum_cols = pack.channels_of("sum")
+    if sum_cols:
+        wdp = segment_sum_gathered(plan.wd_plan, g[:, list(sum_cols)],
+                                   use_pallas=use_pallas, interpret=interpret)
+        if wdp.ndim == 1:
+            wdp = wdp[:, None]
+        done = _inherit_scan(wdp, plan.pid, plan.level, plan.max_level, n,
+                             "sum", schedule)
+        for j, ci in enumerate(sum_cols):
+            chans[ci] = done[:, j]
+    for mname in ("min", "max"):
+        for ci in pack.channels_of(mname):
+            wdp = _segment_minmax_gathered(plan.wd_plan, g[:, ci], n, mname)
+            chans[ci] = _inherit_scan(wdp, plan.pid, plan.level,
+                                      plan.max_level, n, mname, schedule)
+    return tuple(
+        pack.finalize(i, chans, maximum=jnp.maximum)
+        for i in range(len(aggs))
+    )

@@ -1,14 +1,12 @@
-"""Graph Window Query facade (paper Definition 3).
+"""Graph Window Query facade (paper Definition 3) — thin legacy shim.
 
-``GWQ(G, W, Σ, A)`` evaluated through any engine:
-
-* ``nonindex``   — per-vertex BFS (paper baseline)
-* ``bitset``     — vectorized non-index (batched bitset BFS)
-* ``dbindex``    — Dense Block Index (builds one if not supplied)
-* ``iindex``     — Inheritance Index (topological windows on DAGs)
-* ``eagr``       — EAGR overlay baseline
-* ``jax``        — device data plane (two-stage segment-reduce; sharded
-                   variant lives in :mod:`repro.core.engine_jax`)
+The engine dispatch now lives in :mod:`repro.core.api`: backends register
+:class:`~repro.core.api.EngineCapability` objects with the
+:data:`~repro.core.api.DEFAULT_REGISTRY`, and selection is by declared
+capability rather than an if/elif chain.  ``GraphWindowQuery.run`` is kept
+as a one-query convenience over that registry; new code should use
+:class:`repro.core.api.QuerySpec` + :class:`repro.core.api.Session` (which
+fuse multi-aggregate queries and survive update streams).
 """
 
 from __future__ import annotations
@@ -41,44 +39,13 @@ class GraphWindowQuery:
         index: Optional[object] = None,
         **kw,
     ) -> np.ndarray:
-        values = g.attrs[self.attr]
-        if engine == "nonindex":
-            from repro.core.nonindex import query_pervertex
+        from repro.core.api import DEFAULT_REGISTRY
 
-            return query_pervertex(g, self.window, values, self.agg, **kw)
-        if engine == "bitset":
-            from repro.core.nonindex import query_batched_bitset
-
-            return query_batched_bitset(g, self.window, values, self.agg)
-        if engine == "dbindex":
-            if index is None:
-                from repro.core.dbindex import build_dbindex
-
-                index = build_dbindex(g, self.window, **kw)
-            return index.query(values, self.agg)
-        if engine == "iindex":
-            assert isinstance(self.window, TopologicalWindow)
-            if index is None:
-                from repro.core.iindex import build_iindex
-
-                index = build_iindex(g)
-            return index.query(values, self.agg)
-        if engine == "eagr":
-            if index is None:
-                from repro.core.eagr import build_eagr
-
-                index = build_eagr(g, self.window, **kw)
-            return index.query(values, self.agg)
-        if engine == "jax":
-            from repro.core import engine_jax
-
-            if index is None:
-                from repro.core.dbindex import build_dbindex
-
-                index = build_dbindex(g, self.window, **kw)
-            plan = engine_jax.plan_from_dbindex(index)
-            return np.asarray(engine_jax.query_dbindex(plan, values, self.agg))
-        raise ValueError(f"unknown engine {engine!r}")
+        out = DEFAULT_REGISTRY.run(
+            engine, g, self.window, g.attrs[self.attr], (self.agg,),
+            index=index, **kw,
+        )
+        return np.asarray(out[self.agg])
 
 
 def brute_force(g: Graph, window, values: np.ndarray, agg: str = "sum") -> np.ndarray:

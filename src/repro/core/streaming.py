@@ -39,6 +39,16 @@ from repro.core.updates import (
 from repro.core.windows import KHopWindow, TopologicalWindow
 
 
+def garbage_block_fraction(index) -> float:
+    """Zero-link block fraction (see :meth:`DBIndex.garbage_block_fraction`);
+    tolerates duck-typed policy test doubles that only carry
+    ``num_blocks``/``link_block``/``stats`` (unbound calls keep the metric
+    definition in one place)."""
+    if getattr(index, "link_block", None) is None:
+        return 0.0
+    return DBIndex.garbage_block_fraction(index, DBIndex.linked_blocks_mask(index))
+
+
 @dataclasses.dataclass(frozen=True)
 class StalenessPolicy:
     """Reorganize when phase-1 sharing loss exceeds a threshold.
@@ -46,12 +56,16 @@ class StalenessPolicy:
     ``max_link_ratio``: rebuild when ``num_links`` exceeds this multiple of
     the last full build's link count (links are the pass-2 work and the
     paper's sharing metric).  ``max_block_ratio``: same for block count
-    (appended secondary + garbage blocks).  ``min_batches`` delays the
-    first check so bursts amortize.
+    (appended secondary + garbage blocks).  ``max_garbage_ratio``: rebuild
+    when the zero-link (garbage) block fraction crosses this — the signal
+    for delete-dominated streams, which *shrink* links and so never trip
+    the growth ratios.  ``min_batches`` delays the first check so bursts
+    amortize.
     """
 
     max_link_ratio: float = 1.5
     max_block_ratio: float = 2.0
+    max_garbage_ratio: float = 0.5
     min_batches: int = 1
 
     def should_reorganize(
@@ -63,6 +77,7 @@ class StalenessPolicy:
         return (
             links > self.max_link_ratio * max(base_links, 1)
             or index.num_blocks > self.max_block_ratio * max(base_blocks, 1)
+            or garbage_block_fraction(index) > self.max_garbage_ratio
         )
 
 
@@ -87,6 +102,8 @@ class StreamingEngine:
         ts: int = 512,
         use_pallas: bool = True,
         interpret: Optional[bool] = None,
+        plan_headroom: float = 0.0,
+        compact_garbage: float = 0.5,
     ):
         assert index_kind in ("dbindex", "iindex")
         if index_kind == "iindex":
@@ -101,6 +118,8 @@ class StreamingEngine:
         self.device = device
         self.tm, self.ts = tm, ts
         self.use_pallas, self.interpret = use_pallas, interpret
+        self.plan_headroom = plan_headroom
+        self.compact_garbage = compact_garbage
         self.batches_applied = 0
         self.edits_applied = 0
         self.reorg_count = 0
@@ -121,7 +140,8 @@ class StreamingEngine:
             from repro.core import engine_jax as ej
 
             if self.index_kind == "dbindex":
-                self.plan = ej.plan_from_dbindex(self.index, self.tm, self.ts)
+                self.plan = ej.plan_from_dbindex(self.index, self.tm, self.ts,
+                                                 headroom=self.plan_headroom)
             else:
                 self.plan = ej.plan_from_iindex(self.index, self.tm, self.ts)
         self.batches_since_reorg = 0
@@ -129,10 +149,16 @@ class StreamingEngine:
             self.reorg_count += 1
 
     # ------------------------------------------------------------------ #
-    def apply(self, batch: UpdateBatch) -> Dict:
-        """Apply one batch; returns a timing/size report."""
+    def apply(self, batch: UpdateBatch, graph: Optional[Graph] = None) -> Dict:
+        """Apply one batch; returns a timing/size report.
+
+        ``graph`` optionally supplies the already-updated graph (``batch``
+        applied to the current one) so a caller driving several engines —
+        e.g. a :class:`repro.core.api.Session` with states on multiple
+        windows — pays for ``apply_batch`` once, not once per engine.
+        """
         t0 = time.perf_counter()
-        g2 = apply_batch(self.graph, batch)
+        g2 = apply_batch(self.graph, batch) if graph is None else graph
         if self.index_kind == "dbindex":
             idx2, changed = update_dbindex_batch(self.index, g2, self.window, batch)
         else:
@@ -160,7 +186,11 @@ class StreamingEngine:
             from repro.core import engine_jax as ej
 
             if self.index_kind == "dbindex":
-                self.plan = ej.patch_plan_dbindex(self.plan, idx2, changed)
+                self.plan = ej.patch_plan_dbindex(
+                    self.plan, idx2, changed,
+                    compact_garbage=self.compact_garbage,
+                    headroom=self.plan_headroom,
+                )
             else:
                 self.plan = ej.patch_plan_iindex(self.plan, idx2, changed)
         t_plan = time.perf_counter() - t1
@@ -174,6 +204,10 @@ class StreamingEngine:
 
     # ------------------------------------------------------------------ #
     def query(self, agg: str = "sum", values=None, **kw) -> np.ndarray:
+        """One aggregate.  The device I-Index path routes min/max/count/avg
+        through the capability registry's multi-channel executor (per-monoid
+        level inheritance) instead of the old SUM-only assert; anything the
+        registry can't serve raises :class:`UnsupportedQueryError`."""
         if values is None:
             values = self.graph.attrs["val"]
         if not self.device:
@@ -185,22 +219,43 @@ class StreamingEngine:
                 self.plan, values, agg,
                 use_pallas=self.use_pallas, interpret=self.interpret, **kw,
             )
-        else:
-            assert agg == "sum", "device I-Index path is SUM (paper §6)"
+            return np.asarray(out)
+        if agg == "sum":
             out = ej.query_iindex(
                 self.plan, values,
                 use_pallas=self.use_pallas, interpret=self.interpret, **kw,
             )
-        return np.asarray(out)
+            return np.asarray(out)
+        return self.query_multi((agg,), values, **kw)[0]
+
+    def query_multi(self, aggs, values=None, **kw) -> list:
+        """All ``aggs`` over the engine's window as one fused multi-channel
+        plan (one gather feeding stacked per-monoid segment reduces)."""
+        from repro.core.api import DEFAULT_REGISTRY
+
+        if values is None:
+            values = self.graph.attrs["val"]
+        engine = (
+            ("jax" if self.index_kind == "dbindex" else "jax-iindex")
+            if self.device
+            else ("dbindex" if self.index_kind == "dbindex" else "iindex")
+        )
+        out = DEFAULT_REGISTRY.run(
+            engine, self.graph, self.window, values, tuple(aggs),
+            index=self.index, plan=self.plan,
+            use_pallas=self.use_pallas, interpret=self.interpret, **kw,
+        )
+        return [np.asarray(out[a]) for a in aggs]
 
     # ------------------------------------------------------------------ #
     @property
     def staleness(self) -> Dict:
         """Sharing-loss telemetry for the phase-2 policy."""
         if self.index_kind != "dbindex":
-            return {"link_ratio": 1.0, "block_ratio": 1.0}
+            return {"link_ratio": 1.0, "block_ratio": 1.0, "garbage_ratio": 0.0}
         return {
             "link_ratio": int(self.index.stats.get("num_links", 0))
             / max(self._base_links, 1),
             "block_ratio": self.index.num_blocks / max(self._base_blocks, 1),
+            "garbage_ratio": garbage_block_fraction(self.index),
         }

@@ -68,8 +68,19 @@ def build_tile_plan(
     num_segments: int,
     tm: int = DEFAULT_TM,
     ts: int = DEFAULT_TS,
+    headroom: float = 0.0,
+    group_min_tiles: "Optional[np.ndarray]" = None,
 ) -> TilePlan:
-    """Host-side plan: rows (sorted by segment id) -> tile-aligned layout."""
+    """Host-side plan: rows (sorted by segment id) -> tile-aligned layout.
+
+    ``headroom`` > 0 over-allocates every tile group by an even share of
+    ``total_rows * headroom`` extra row capacity.  Streamed updates append
+    rows into a few hot groups (e.g. secondary blocks land in the capacity
+    tail); the spread keeps :func:`patch_tile_plan` shape-stable — hence
+    recompile-free — until the cumulative growth exceeds the slack.
+    ``group_min_tiles`` optionally floors individual groups' tile counts —
+    the caller's way to concentrate slack where appends will land.
+    """
     gather_idx = np.asarray(gather_idx, np.int32)
     segment_ids = np.asarray(segment_ids, np.int64)
     assert gather_idx.shape == segment_ids.shape
@@ -82,6 +93,13 @@ def build_tile_plan(
         group_rows = np.pad(group_rows, (0, n_out_tiles - group_rows.size))
     # >=1 input tile per output tile so every output block gets initialized
     tiles_per_group = np.maximum(1, -(-group_rows // tm))
+    if headroom > 0:
+        extra = max(1, -(-int(group_rows.sum() * headroom) // (n_out_tiles * tm)))
+        tiles_per_group = tiles_per_group + extra
+    if group_min_tiles is not None:
+        tiles_per_group = np.maximum(
+            tiles_per_group, group_min_tiles[:n_out_tiles].astype(np.int64)
+        )
     padded_rows = tiles_per_group * tm
     total_pad = int(padded_rows.sum())
     nm = int(tiles_per_group.sum())
@@ -149,8 +167,6 @@ def patch_tile_plan(
     if n_out_new < n_out_old:  # shrinking segment space: no reuse story
         return build_tile_plan(gather_idx, segment_ids, num_segments, tm, ts)
 
-    old_seg = np.asarray(plan.seg_tiles).reshape(-1)
-    old_gather = np.asarray(plan.gather_padded)
     old_m2out = np.asarray(plan.m2out)
     old_tiles = np.bincount(old_m2out, minlength=n_out_old).astype(np.int64)
     old_starts = np.zeros(n_out_old + 1, np.int64)
@@ -177,6 +193,44 @@ def patch_tile_plan(
     total_pad = int(new_starts[-1])
     nm = int(tiles_new.sum())
 
+    if n_out_new == n_out_old and np.array_equal(tiles_new, old_tiles):
+        # Shape-stable steady state: scatter only the changed tile groups
+        # into the live device arrays (`jax.Array.at[...].set`) instead of
+        # round-tripping the whole plan through host memory and re-uploading
+        # it.  Everything static (m2out, first_visit, shapes) is reused, so
+        # jitted consumers never retrace.
+        pos_chunks, seg_chunks, gather_chunks = [], [], []
+        for g in np.flatnonzero(changed_mask):
+            lo, span = int(new_starts[g]), int(tiles_new[g]) * tm
+            r0, r1 = int(bounds[g]), int(bounds[g + 1])
+            seg_rows = np.full(span, -1, dtype=np.int32)
+            gather_rows = np.zeros(span, dtype=np.int32)
+            seg_rows[: r1 - r0] = segment_ids[r0:r1]
+            gather_rows[: r1 - r0] = gather_idx[r0:r1]
+            pos_chunks.append(np.arange(lo, lo + span, dtype=np.int64))
+            seg_chunks.append(seg_rows)
+            gather_chunks.append(gather_rows)
+        seg_flat = plan.seg_tiles.reshape(-1)
+        gather_flat = plan.gather_padded
+        if pos_chunks:
+            pos = jnp.asarray(np.concatenate(pos_chunks))
+            seg_flat = seg_flat.at[pos].set(jnp.asarray(np.concatenate(seg_chunks)))
+            gather_flat = gather_flat.at[pos].set(
+                jnp.asarray(np.concatenate(gather_chunks))
+            )
+        return TilePlan(
+            gather_padded=gather_flat,
+            seg_tiles=seg_flat.reshape(nm, tm),
+            m2out=plan.m2out,
+            first_visit=plan.first_visit,
+            num_segments=int(num_segments),
+            num_out_tiles=n_out_new,
+            tm=tm,
+            ts=ts,
+        )
+
+    old_seg = np.asarray(plan.seg_tiles).reshape(-1)
+    old_gather = np.asarray(plan.gather_padded)
     seg_padded = np.full(total_pad, -1, dtype=np.int32)
     gather_padded = np.zeros(total_pad, dtype=np.int32)
     for g in range(n_out_new):
@@ -206,22 +260,28 @@ def patch_tile_plan(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
-def segment_sum(
+def segment_sum_gathered(
     plan: TilePlan,
-    values: jnp.ndarray,
+    gathered: jnp.ndarray,
     interpret: Optional[bool] = None,
     use_pallas: bool = True,
 ):
-    """Fused gather + tiled segment sum.  values: [N] or [N, D] -> [S(, D)]."""
+    """Tiled segment sum over pre-gathered rows ([Mpad] or [Mpad, D]).
+
+    Traceable (no jit of its own): fused multi-channel queries call this
+    after a single shared ``jnp.take`` so k aggregates pay for one gather.
+    """
     interpret = _default_interpret() if interpret is None else interpret
-    squeeze = values.ndim == 1
-    v = values[:, None] if squeeze else values
+    squeeze = gathered.ndim == 1
+    v = gathered[:, None] if squeeze else gathered
     d = v.shape[1]
-    pad_d = (-d) % 128
-    if pad_d:
-        v = jnp.pad(v, ((0, 0), (0, pad_d)))
-    gathered = jnp.take(v, plan.gather_padded, axis=0)
+    if use_pallas:
+        # the MXU kernel wants 128-lane tiles; the XLA fallback does not —
+        # padding there would do 128/d times the useful work
+        pad_d = (-d) % 128
+        if pad_d:
+            v = jnp.pad(v, ((0, 0), (0, pad_d)))
+    gathered = v
     if use_pallas:
         out = segment_sum_tiled(
             gathered.astype(jnp.float32),
@@ -243,6 +303,18 @@ def segment_sum(
         )[:-1]
     out = out[: plan.num_segments, :d]
     return out[:, 0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_pallas"))
+def segment_sum(
+    plan: TilePlan,
+    values: jnp.ndarray,
+    interpret: Optional[bool] = None,
+    use_pallas: bool = True,
+):
+    """Fused gather + tiled segment sum.  values: [N] or [N, D] -> [S(, D)]."""
+    gathered = jnp.take(values, plan.gather_padded, axis=0)
+    return segment_sum_gathered(plan, gathered, interpret, use_pallas)
 
 
 def segment_reduce(

@@ -76,6 +76,41 @@ def test_patch_tile_plan_grows_segments():
     assert np.array_equal(out_p, out_f)
 
 
+def test_patch_tile_plan_scatter_no_recompile():
+    """Shape-stable patches scatter changed tile groups into the live device
+    arrays — the static parts are reused verbatim and jitted consumers never
+    retrace (asserted via the jit compile counter)."""
+    rng = np.random.default_rng(5)
+    n, m, s = 300, 2000, 256
+    vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    seg = np.sort(rng.integers(0, s, m)).astype(np.int64)
+    gidx = rng.integers(0, n, m).astype(np.int32)
+    plan = build_tile_plan(gidx, seg, s, 64, 64)
+    np.asarray(segment_sum(plan, vals, use_pallas=False))  # warm the cache
+    cache0 = segment_sum._cache_size()
+    outs, rows = [], []
+    for step in range(3):
+        changed = rng.choice(s, 12, replace=False)
+        keep = ~np.isin(seg, changed)
+        add_seg = np.repeat(changed, 2)
+        add_gidx = rng.integers(0, n, add_seg.size).astype(np.int32)
+        seg2 = np.concatenate([seg[keep], add_seg])
+        gidx2 = np.concatenate([gidx[keep], add_gidx])
+        order = np.argsort(seg2, kind="stable")
+        seg, gidx = seg2[order], gidx2[order]
+        patched = patch_tile_plan(plan, gidx, seg, s, changed)
+        # static parts are the same device arrays, not re-uploads
+        assert patched.m2out is plan.m2out and patched.first_visit is plan.first_visit
+        outs.append(np.asarray(segment_sum(patched, vals, use_pallas=False)))
+        rows.append((gidx.copy(), seg.copy()))
+        plan = patched
+    assert segment_sum._cache_size() == cache0  # scatter path: no retrace
+    for (gi, si), out_p in zip(rows, outs):  # rebuild oracle, after the count
+        fresh = build_tile_plan(gi, si, s, 64, 64)
+        out_f = np.asarray(segment_sum(fresh, vals, use_pallas=False))
+        assert np.array_equal(out_p, out_f)
+
+
 def test_patch_tile_plan_stable_shapes_when_rows_fit():
     """Steady-state streams must not change static shapes (no recompiles)."""
     rng = np.random.default_rng(2)
@@ -152,6 +187,36 @@ def test_dbindex_plan_capacity_growth_is_pow2():
         assert plan.block_capacity >= idx.num_blocks
     grown = [c for a, c in zip(caps, caps[1:]) if c != a]
     assert all(c & (c - 1) == 0 for c in grown)  # powers of two only
+
+
+def test_patch_plan_dbindex_compacts_garbage_blocks():
+    """A delete-heavy stream strands zero-link blocks whose member rows
+    still occupy pass-1 tiles; crossing ``compact_garbage`` re-lays pass 1
+    without them — smaller plan, identical answers."""
+    from repro.core.streaming import garbage_block_fraction
+    from test_updates import random_delete_batch
+
+    rng = np.random.default_rng(44)
+    g = with_random_attrs(erdos_renyi(160, 6.0, directed=False, seed=27), seed=28)
+    w = KHopWindow(1)
+    idx = build_dbindex(g, w, method="emc")
+    plan = ej.plan_from_dbindex(idx, tm=64, ts=64)
+    for _ in range(3):
+        b = random_delete_batch(g, rng, 40)
+        g = U.apply_batch(g, b)
+        idx, owners = U.update_dbindex_batch(idx, g, w, b)
+    assert garbage_block_fraction(idx) > 0.05, "stream produced no garbage"
+    lazy = ej.patch_plan_dbindex(plan, idx, owners, compact_garbage=1.1)
+    compacted = ej.patch_plan_dbindex(plan, idx, owners, compact_garbage=0.05)
+    assert (compacted.pass1.seg_tiles.size < lazy.pass1.seg_tiles.size)
+    for agg in ("sum", "count", "avg", "min"):
+        out_c = np.asarray(ej.query_dbindex(compacted, g.attrs["val"], agg,
+                                            use_pallas=False))
+        out_l = np.asarray(ej.query_dbindex(lazy, g.attrs["val"], agg,
+                                            use_pallas=False))
+        assert np.array_equal(out_c, out_l), agg  # garbage contributes nothing
+        oracle = brute_force(g, w, g.attrs["val"], agg)
+        assert np.allclose(out_c, oracle, rtol=1e-5, atol=1e-3), agg
 
 
 # --------------------- I-Index plan parity over streams --------------- #

@@ -238,6 +238,50 @@ def test_streaming_engine_host_correct_and_reorganizes():
     assert eng.staleness["link_ratio"] <= 1.15 * 1.5  # re-baselined after reorg
 
 
+def test_delete_dominated_stream_trips_garbage_metric():
+    """Delete-only streams shrink links (growth ratios never trip) but
+    accumulate zero-link garbage blocks; the garbage metric must arm the
+    reorganize and answers must stay exact throughout."""
+    from repro.core.streaming import garbage_block_fraction
+
+    rng = np.random.default_rng(91)
+    g = with_random_attrs(erdos_renyi(140, 6.0, directed=False, seed=19), seed=20)
+    eng = StreamingEngine(
+        g, KHopWindow(1), device=False,
+        policy=StalenessPolicy(max_link_ratio=100.0, max_block_ratio=100.0,
+                               max_garbage_ratio=0.25, min_batches=1),
+    )
+    saw_garbage = saw_reorg = False
+    for step in range(8):
+        b = random_delete_batch(eng.graph, rng, 30)
+        saw_garbage |= garbage_block_fraction(eng.index) > 0.0
+        rep = eng.apply(b)
+        saw_reorg |= rep["reorganized"]
+        ref = brute_force(eng.graph, eng.window, eng.graph.attrs["val"], "sum")
+        assert np.allclose(eng.query("sum"), ref), step
+    assert saw_garbage, "delete stream never produced garbage blocks"
+    assert saw_reorg, "garbage metric never tripped the reorganize"
+    assert eng.staleness["garbage_ratio"] <= 0.25  # re-baselined by reorg
+
+
+def test_staleness_policy_garbage_only_signal():
+    """links/blocks both *shrink* under deletes — only the garbage ratio
+    fires."""
+    pol = StalenessPolicy(max_link_ratio=1.5, max_block_ratio=2.0,
+                          max_garbage_ratio=0.4, min_batches=1)
+
+    class ShrunkIdx:
+        n = 10
+        num_blocks = 10
+        stats = {"num_links": 50}
+        link_block = np.array([0, 1, 2], np.int32)  # 7/10 blocks garbage
+
+    assert pol.should_reorganize(ShrunkIdx(), 100, 10, 1)
+    pol_off = StalenessPolicy(max_link_ratio=1.5, max_block_ratio=2.0,
+                              max_garbage_ratio=1.1, min_batches=1)
+    assert not pol_off.should_reorganize(ShrunkIdx(), 100, 10, 1)
+
+
 def test_staleness_policy_thresholds():
     pol = StalenessPolicy(max_link_ratio=1.5, max_block_ratio=2.0, min_batches=3)
 
