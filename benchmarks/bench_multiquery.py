@@ -10,45 +10,17 @@ sequential ``query_dbindex`` calls, with bit-identical results, and a
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from benchmarks.common import emit, emit_json
-
-
-def _best_of(fn, repeats: int = 20, warmup: int = 3) -> float:
-    """Min wall time in microseconds — the robust estimator on shared boxes
-    (noise only ever adds time; the min is the closest sample to the true
-    cost, and both sides of the comparison are measured the same way)."""
-    for _ in range(warmup):
-        fn()
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, (time.perf_counter() - t0) * 1e6)
-    return best
+from benchmarks.common import best_of, emit, emit_json, mixed_update_batch
 from repro.core import engine_jax as ej
 from repro.core.api import QuerySpec, Session
 from repro.core.dbindex import build_dbindex
 from repro.core.query import GraphWindowQuery
-from repro.core.updates import UpdateBatch
 from repro.core.windows import KHopWindow
 from repro.graphs.generators import erdos_renyi, with_random_attrs
 
 AGGS = ("sum", "count", "min", "avg")
-
-
-def _mixed_batch(g, rng, n_ins: int, n_del: int) -> UpdateBatch:
-    s = rng.integers(0, g.n, n_ins * 4).astype(np.int32)
-    d = rng.integers(0, g.n, n_ins * 4).astype(np.int32)
-    ok = (s != d) & ~g.contains_edges(s, d)
-    _, first = np.unique(g.edge_keys(s, d), return_index=True)
-    pick = np.intersect1d(np.flatnonzero(ok), first)[:n_ins]
-    ins = UpdateBatch.inserts(s[pick], d[pick])
-    ei = rng.choice(g.n_edges, min(n_del, g.n_edges), replace=False)
-    return UpdateBatch.concat([ins, UpdateBatch.deletes(g.src[ei], g.dst[ei])])
 
 
 def run(n: int = 20_000, deg: float = 6.0, k: int = 1, stream_batches: int = 20,
@@ -81,8 +53,8 @@ def run(n: int = 20_000, deg: float = 6.0, k: int = 1, stream_batches: int = 20,
     )
     assert bit_identical, "fused plan diverged from per-aggregate answers"
 
-    us_seq = _best_of(sequential)
-    us_fused = _best_of(fused)
+    us_seq = best_of(sequential, repeats=20, warmup=3)
+    us_fused = best_of(fused, repeats=20, warmup=3)
     speedup = us_seq / max(us_fused, 1e-9)
     emit(f"multiquery/sequential_{len(AGGS)}agg/n{n}", us_seq, f"k={k}")
     emit(f"multiquery/fused_{len(AGGS)}agg/n{n}", us_fused, f"k={k}")
@@ -95,7 +67,7 @@ def run(n: int = 20_000, deg: float = 6.0, k: int = 1, stream_batches: int = 20,
     cache0 = ej.query_dbindex_multi._cache_size()
     oracle_checks = 0
     for step in range(stream_batches):
-        sess.update(_mixed_batch(sess.graph, rng, 4, 2))
+        sess.update(mixed_update_batch(sess.graph, rng, 4, 2))
         res = sess.run()
         if step % 5 == 4 or step == stream_batches - 1:
             for s, r in zip(specs, res):

@@ -46,3 +46,35 @@ def flush_csv(path: str = None):
             f.write("name,us_per_call,derived\n")
             for n, u, d in ROWS:
                 f.write(f"{n},{u:.1f},{d}\n")
+
+
+def mixed_update_batch(g, rng, n_ins: int, n_del: int):
+    """Random mixed UpdateBatch for stream benchmarks: ``n_ins`` fresh
+    non-duplicate inserts + ``n_del`` deletes of existing edges (shared by
+    bench_multiquery and bench_sharded_stream)."""
+    import numpy as np
+
+    from repro.core.updates import UpdateBatch
+
+    s = rng.integers(0, g.n, n_ins * 4).astype(np.int32)
+    d = rng.integers(0, g.n, n_ins * 4).astype(np.int32)
+    ok = (s != d) & ~g.contains_edges(s, d)
+    _, first = np.unique(g.edge_keys(s, d), return_index=True)
+    pick = np.intersect1d(np.flatnonzero(ok), first)[:n_ins]
+    ins = UpdateBatch.inserts(s[pick], d[pick])
+    ei = rng.choice(g.n_edges, min(n_del, g.n_edges), replace=False)
+    return UpdateBatch.concat([ins, UpdateBatch.deletes(g.src[ei], g.dst[ei])])
+
+
+def best_of(fn: Callable, repeats: int = 10, warmup: int = 2) -> float:
+    """Min wall time in microseconds — the robust estimator on shared boxes
+    (noise only ever adds time; the min is the closest sample to the true
+    cost, and both sides of a comparison are measured the same way)."""
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return best

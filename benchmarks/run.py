@@ -42,6 +42,10 @@ def main(argv=None) -> None:
         "updates": lambda: bench_updates.run(n=20_000 if args.fast else 100_000),
         "multiquery": lambda: bench_multiquery.run(n=8_000 if args.fast else 20_000),
     }
+    # bench_sharded_stream is deliberately NOT in this table: it must force
+    # the host-platform device count before jax initializes, so it runs
+    # standalone (`python -m benchmarks.bench_sharded_stream`, see the
+    # sharded CI job).
     only = set(args.only.split(",")) if args.only else None
     for name, fn in mods.items():
         if only and name not in only:

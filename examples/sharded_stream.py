@@ -1,0 +1,70 @@
+"""Sharded streaming window analytics: a mesh Session over a live graph.
+
+Demonstrates the distributed runtime end to end:
+
+1. build a mesh (forced host-platform devices off-TPU) and hand it to
+   ``Session(mesh=...)`` — planning selects the ``jax-sharded`` capability
+   and the DBIndex device plan is laid out as per-shard tile groups;
+2. stream 20 ``UpdateBatch``es: each batch's affected-owner BFS runs one
+   seed slice per shard, and only the *changed tile groups* are shipped to
+   the shard that owns them (watch ``patch_bytes`` vs the full plan);
+3. serve fused multi-aggregate queries across the mesh the whole time,
+   with zero recompiles of the sharded executor.
+
+Run: ``PYTHONPATH=src python examples/sharded_stream.py``
+"""
+
+import os
+
+# must be set before jax initializes
+os.environ.setdefault("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" not in os.environ["XLA_FLAGS"]:
+    os.environ["XLA_FLAGS"] += " --xla_force_host_platform_device_count=4"
+
+import numpy as np
+
+
+def main():
+    import jax
+
+    from repro.core.api import QuerySpec, Session
+    from repro.core.updates import UpdateBatch
+    from repro.distributed import window_runtime as wr
+    from repro.graphs.generators import erdos_renyi, with_random_attrs
+
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    print(f"mesh: {mesh.shape}")
+
+    g = with_random_attrs(erdos_renyi(3_000, 5.0, directed=False, seed=0),
+                          seed=1)
+    specs = [QuerySpec(("khop", 1), a) for a in ("sum", "count", "min", "avg")]
+    sess = Session(g, specs, mesh=mesh, plan_headroom=1.0)
+    assert isinstance(sess, wr.ShardedSession)
+
+    s, c, mn, avg = sess.run()
+    print(f"initial:  sum[0]={s[0]:.2f} count[0]={c[0]:.0f} "
+          f"min[0]={mn[0]:.2f} avg[0]={avg[0]:.2f}")
+    cache0 = wr.query_cache_size()
+
+    rng = np.random.default_rng(2)
+    for step in range(20):
+        src = rng.integers(0, g.n, 8).astype(np.int32)
+        dst = rng.integers(0, g.n, 8).astype(np.int32)
+        keep = src != dst
+        reports = sess.update(UpdateBatch.inserts(src[keep], dst[keep]))
+        rep = next(iter(reports.values()))
+        s, c, mn, avg = sess.run()
+        if step % 5 == 0 or step == 19:
+            print(f"batch {step:2d}: affected/shard={rep['affected_per_shard']}"
+                  f" patch={rep['patch_bytes']:,}B"
+                  f" (full plan {rep['full_plan_bytes']:,}B)"
+                  f" sum[0]={s[0]:.2f}")
+
+    recompiles = wr.query_cache_size() - cache0
+    print(f"recompiles across the stream: {recompiles}")
+    assert recompiles == 0, "sharded fused query retraced during the stream"
+    print(f"staleness: {sess.staleness}")
+
+
+if __name__ == "__main__":
+    main()

@@ -103,6 +103,15 @@ class EngineCapability:
         return window_kind(window) in self.windows and set(aggs) <= self.aggregates
 
 
+def _cap_row(c: "EngineCapability") -> str:
+    """One self-explaining capability-table row (window kinds, aggregates,
+    and the device/sharded/incremental flags) for planner error messages."""
+    return (
+        f"{c.name}: windows={c.windows}, aggs={sorted(c.aggregates)}, "
+        f"device={c.device}, sharded={c.sharded}, incremental={c.incremental}"
+    )
+
+
 class EngineRegistry:
     """Backends register (capability, runner); the planner selects by need.
 
@@ -147,7 +156,7 @@ class EngineRegistry:
                 raise UnsupportedQueryError(
                     f"engine {engine!r} does not cover "
                     f"({window_kind(window)}, {sorted(set(aggs))}): it serves "
-                    f"windows={cap.windows}, aggregates={sorted(cap.aggregates)}"
+                    f"{_cap_row(cap)}"
                 )
             return engine
         matches = [
@@ -158,14 +167,11 @@ class EngineRegistry:
             and (incremental is None or c.incremental == incremental)
         ]
         if not matches:
-            table = "; ".join(
-                f"{c.name}: windows={c.windows}, aggs={sorted(c.aggregates)}, "
-                f"device={c.device}, sharded={c.sharded}"
-                for c in self._caps.values()
-            )
+            table = "; ".join(_cap_row(c) for c in self._caps.values())
             raise UnsupportedQueryError(
                 f"no engine serves ({window_kind(window)}, {sorted(set(aggs))}, "
-                f"device={device}, sharded={sharded}) — registered: {table}"
+                f"device={device}, sharded={sharded}, "
+                f"incremental={incremental}) — registered: {table}"
             )
         return max(matches, key=lambda c: c.priority).name
 
@@ -175,7 +181,8 @@ class EngineRegistry:
         if not cap.covers(window, aggs):
             raise UnsupportedQueryError(
                 f"engine {name!r} does not cover "
-                f"({window_kind(window)}, {sorted(set(aggs))})"
+                f"({window_kind(window)}, {sorted(set(aggs))}): it serves "
+                f"{_cap_row(cap)}"
             )
         unknown = set(opts) - KNOWN_OPTS
         if unknown:  # typos must fail loudly, not silently use defaults
@@ -271,8 +278,17 @@ def _run_jax_iindex(g, window, values, aggs, index=None, plan=None, **opts):
 
 
 def _run_jax_sharded(g, window, values, aggs, index=None, plan=None, **opts):
+    """Fused multi-aggregate query across a mesh.  ``plan`` may be a
+    device-resident :class:`~repro.distributed.window_runtime.ShardedDBPlan`
+    (the streaming Session path — zero per-call layout work) or a host
+    :class:`~repro.core.engine_jax.DBIndexPlan` (one-shot: sharded lazily).
+    """
     from repro.core import engine_jax as ej
+    from repro.distributed import window_runtime as wr
 
+    if isinstance(plan, wr.ShardedDBPlan):
+        outs = wr.query_sharded_multi(plan, values, tuple(aggs))
+        return {a: np.asarray(o) for a, o in zip(aggs, outs)}
     mesh = opts.get("mesh")
     if mesh is None:
         raise UnsupportedQueryError("engine 'jax-sharded' needs a mesh= opt")
@@ -280,10 +296,9 @@ def _run_jax_sharded(g, window, values, aggs, index=None, plan=None, **opts):
         index = index if index is not None else _build_dbindex(g, window, opts)
         plan = ej.plan_from_dbindex(index, **_pick(opts, "tm", "ts"))
     axis = opts.get("axis", "data")
-    return {
-        a: np.asarray(ej.query_dbindex_sharded(plan, values, mesh, axis=axis))
-        for a in aggs
-    }
+    outs = ej.query_dbindex_sharded_multi(plan, values, tuple(aggs), mesh,
+                                          axis=axis)
+    return {a: np.asarray(o) for a, o in zip(aggs, outs)}
 
 
 def _default_registry() -> EngineRegistry:
@@ -304,7 +319,10 @@ def _default_registry() -> EngineRegistry:
     r.register(EngineCapability("jax-iindex", ("topological",), ALL_AGGREGATES,
                                 device=True, incremental=True, priority=60),
                _run_jax_iindex)
-    r.register(EngineCapability("jax-sharded", both, frozenset({"sum"}),
+    # the stacked-channel sharded executor serves every monoid aggregate
+    # (SUM/COUNT/AVG ride one psum, MIN/MAX ride pmin/pmax) — the old
+    # SUM-only row predated repro.distributed.window_runtime
+    r.register(EngineCapability("jax-sharded", both, ALL_AGGREGATES,
                                 device=True, sharded=True, incremental=True,
                                 priority=70), _run_jax_sharded)
     return r
@@ -403,7 +421,23 @@ class Session:
     (batched index update + tile-group plan patching + staleness policy), so
     compiled fused plans survive a stream of ``UpdateBatch``es without
     recompilation while shapes stay stable.
+
+    Passing ``mesh=`` constructs a
+    :class:`~repro.distributed.window_runtime.ShardedSession` instead:
+    query planning selects sharded capabilities, plans live as per-shard
+    device shards, and streamed updates ship only changed tile groups to
+    the shard owning them.
     """
+
+    #: subclasses flip this to make compile_queries select sharded engines
+    _sharded = False
+
+    def __new__(cls, g=None, specs=None, **kw):
+        if cls is Session and kw.get("mesh") is not None:
+            from repro.distributed.window_runtime import ShardedSession
+
+            return super().__new__(ShardedSession)
+        return super().__new__(cls)
 
     def __init__(
         self,
@@ -421,25 +455,33 @@ class Session:
         plan_headroom: float = 0.5,
         compact_garbage: float = 0.5,
         mesh=None,
+        axis="data",
+        use_device_bfs: Optional[bool] = None,
     ):
-        from repro.core.streaming import StreamingEngine
-
         self.registry = registry or DEFAULT_REGISTRY
         self.compiled = compile_queries(specs, registry=self.registry,
-                                        device=device, sharded=False)
+                                        device=device, sharded=self._sharded)
         self.graph = g
+        self.mesh = mesh
         self._opts = dict(use_pallas=use_pallas, interpret=interpret,
-                          tm=tm, ts=ts, method=method, mesh=mesh)
+                          tm=tm, ts=ts, method=method, mesh=mesh, axis=axis)
+        self._state_cfg = dict(
+            method=method, policy=policy, tm=tm, ts=ts, use_pallas=use_pallas,
+            interpret=interpret, plan_headroom=plan_headroom,
+            compact_garbage=compact_garbage, mesh=mesh, axis=axis,
+            use_device_bfs=use_device_bfs,
+        )
         self.updates_applied = 0
         # one stateful engine per (window, index kind) — shared by every
-        # group on that key, so the device flag is the OR over the sharing
-        # groups (a host group must not strip the plan a device group
-        # compiled).  EAGR indices are rebuilt lazily after updates (EAGR
-        # has no incremental story).
-        self._states: Dict[Tuple[object, str], StreamingEngine] = {}
+        # group on that key, so the device/sharded flags are the OR over the
+        # sharing groups (a host group must not strip the plan a device
+        # group compiled).  EAGR indices are rebuilt lazily after updates
+        # (EAGR has no incremental story).
+        self._states: Dict[Tuple[object, str], object] = {}
         self._eagr: Dict[object, object] = {}
         self._eagr_dirty = False
         need_device: Dict[Tuple[object, str], bool] = {}
+        need_shard: Dict[Tuple[object, str], bool] = {}
         for grp in self.compiled.groups:
             kind = (
                 "dbindex" if grp.engine in _DBINDEX_ENGINES
@@ -451,14 +493,27 @@ class Session:
             key = (grp.window, kind)
             cap = self.registry.capability(grp.engine)
             need_device[key] = need_device.get(key, False) or cap.device
+            need_shard[key] = need_shard.get(key, False) or cap.sharded
         for (window, kind), dev in need_device.items():
-            self._states[(window, kind)] = StreamingEngine(
-                g, window, index_kind=kind, method=method,
-                policy=policy, device=dev, tm=tm, ts=ts,
-                use_pallas=use_pallas, interpret=interpret,
-                plan_headroom=plan_headroom,
-                compact_garbage=compact_garbage,
+            self._states[(window, kind)] = self._make_state(
+                window, kind, dev, need_shard[(window, kind)]
             )
+
+    def _make_state(self, window, kind: str, device: bool, sharded: bool):
+        """Build the per-(window, kind) streaming state.  The base Session
+        always builds host/single-device engines; :class:`ShardedSession`
+        overrides this to place sharded windows on the mesh."""
+        from repro.core.streaming import StreamingEngine
+
+        cfg = self._state_cfg
+        return StreamingEngine(
+            self.graph, window, index_kind=kind, method=cfg["method"],
+            policy=cfg["policy"], device=device, tm=cfg["tm"], ts=cfg["ts"],
+            use_pallas=cfg["use_pallas"], interpret=cfg["interpret"],
+            plan_headroom=cfg["plan_headroom"],
+            compact_garbage=cfg["compact_garbage"],
+            use_device_bfs=cfg["use_device_bfs"],
+        )
 
     # ------------------------------------------------------------------ #
     def _state_for(self, grp: PlanGroup):

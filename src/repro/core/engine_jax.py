@@ -244,6 +244,31 @@ def patch_plan_dbindex(
     )
 
 
+def _ell_rows_for_new_blocks(index: DBIndex, old_num_blocks: int,
+                             width: int) -> np.ndarray:
+    """Padded ELL rows for the blocks appended past ``old_num_blocks``
+    (relies on the appended-prefix invariant of phase-1 merges).  Shared by
+    the single-host and sharded ELL patchers."""
+    off = index.block_offsets[old_num_blocks:]
+    return _ell_rows(off - off[0], index.block_members[off[0]:],
+                     off.size - 1, width)
+
+
+def _ell_rows_for_owners(index: DBIndex, owners: np.ndarray,
+                         width: int) -> np.ndarray:
+    """Padded ELL rows of the given owners' link lists (vectorized
+    multi-slice gather).  Shared by the single-host and sharded patchers."""
+    counts = np.diff(index.link_owner_offsets)[owners]
+    starts = index.link_owner_offsets[owners]
+    off = np.zeros(owners.size + 1, np.int64)
+    np.cumsum(counts, out=off[1:])
+    items = index.link_block[
+        np.repeat(starts, counts)
+        + (np.arange(off[-1]) - np.repeat(off[:-1], counts))
+    ]
+    return _ell_rows(off, items, owners.size, width)
+
+
 def _patch_ell(plan: DBIndexPlan, index: DBIndex, cap: int,
                changed_owners: np.ndarray):
     """Incremental maintenance of the min/max ELL layouts: scatter-set only
@@ -263,22 +288,12 @@ def _patch_ell(plan: DBIndexPlan, index: DBIndex, cap: int,
         return _ell_from_index(index, cap)
     p1_ell = plan.p1_ell
     if new_sizes.size:
-        off = index.block_offsets[plan.num_blocks:]
-        rows = _ell_rows(off - off[0], index.block_members[off[0]:],
-                         new_sizes.size, r1)
+        rows = _ell_rows_for_new_blocks(index, plan.num_blocks, r1)
         ids = jnp.asarray(np.arange(plan.num_blocks, index.num_blocks))
         p1_ell = p1_ell.at[ids].set(jnp.asarray(rows))
     p2_ell = plan.p2_ell
     if owners.size:
-        starts = index.link_owner_offsets[owners]
-        counts = link_sizes[owners]
-        off = np.zeros(owners.size + 1, np.int64)
-        np.cumsum(counts, out=off[1:])
-        items = index.link_block[
-            np.repeat(starts, counts)
-            + (np.arange(off[-1]) - np.repeat(off[:-1], counts))
-        ]
-        rows = _ell_rows(off, items, owners.size, r2)
+        rows = _ell_rows_for_owners(index, owners, r2)
         p2_ell = p2_ell.at[jnp.asarray(owners)].set(jnp.asarray(rows))
     return p1_ell, p2_ell
 
@@ -418,60 +433,37 @@ def query_dbindex_multi(plan: DBIndexPlan, values, aggs: tuple,
     )
 
 
-def query_dbindex_sharded(plan: DBIndexPlan, values, mesh, axis="data"):
-    """Distributed two-stage query under shard_map.
+def query_dbindex_sharded_multi(plan: DBIndexPlan, values, aggs: tuple,
+                                mesh, axis="data"):
+    """Fused multi-aggregate distributed query (stacked-channel matrix form).
 
-    Link/member rows are sharded over `axis` (row order is arbitrary for
-    correctness — partial segment sums are combined with one ``psum`` per
-    stage, so a segment straddling shards is handled for free).  Collective
-    footprint: |T| + |n| floats per step, independent of window sizes —
-    the paper's sharing structure keeps the wire format tiny.
+    Tile rows are sharded over ``axis`` at whole-tile-group granularity
+    (:mod:`repro.distributed.window_runtime`), so every segment's partial is
+    produced by exactly one shard: the stacked SUM/COUNT/AVG channels ride
+    one ``psum`` per pass, MIN/MAX ride ``pmin``/``pmax`` over sharded ELL
+    layouts, and every aggregate is **bit-identical** to the single-host
+    fused ``query_dbindex_multi`` answers (non-owning shards only ever
+    contribute exact monoid identities).  Collective footprint: ``|T|·C +
+    |n|·C`` floats per query, independent of window sizes.
+
+    One-shot convenience — lays the plan out per call.  Streaming callers
+    hold a :class:`~repro.distributed.window_runtime.ShardedDBPlan` (via
+    ``Session(mesh=...)``) so the layout uploads once and streamed updates
+    ship only changed tile groups.
     """
-    from jax.sharding import PartitionSpec as P
-    from jax.experimental.shard_map import shard_map
-
-    nb_pad = plan.pass1.num_out_tiles * plan.pass1.ts
-    n_pad = plan.pass2.num_out_tiles * plan.pass2.ts
-    axes = (axis,) if isinstance(axis, str) else tuple(axis)
-
-    def local(p1_gather, p1_seg, p2_gather, p2_seg, vals):
-        ok1 = p1_seg >= 0
-        t_partial = jax.ops.segment_sum(
-            jnp.where(ok1, jnp.take(vals, p1_gather), 0.0),
-            jnp.where(ok1, p1_seg, nb_pad),
-            num_segments=nb_pad + 1,
-        )[:nb_pad]
-        t_full = jax.lax.psum(t_partial, axes)
-        ok2 = p2_seg >= 0
-        out_partial = jax.ops.segment_sum(
-            jnp.where(ok2, jnp.take(t_full, p2_gather), 0.0),
-            jnp.where(ok2, p2_seg, n_pad),
-            num_segments=n_pad + 1,
-        )[:n_pad]
-        return jax.lax.psum(out_partial, axes)
-
-    p1g, p1s = plan.pass1.gather_padded, plan.pass1.seg_tiles.reshape(-1)
-    p2g, p2s = plan.pass2.gather_padded, plan.pass2.seg_tiles.reshape(-1)
-    ndev = int(np.prod([mesh.shape[a] for a in axes]))
-
-    def pad_rows(x):  # equal row shards
-        pad = (-x.shape[0]) % ndev
-        return jnp.pad(x, (0, pad), constant_values=-1 if x.dtype == jnp.int32 else 0)
-
-    p1s, p2s = pad_rows(p1s), pad_rows(p2s)
-    p1g = jnp.pad(p1g, (0, p1s.shape[0] - p1g.shape[0]))
-    p2g = jnp.pad(p2g, (0, p2s.shape[0] - p2g.shape[0]))
-    values = jnp.asarray(values, jnp.float32)
-
-    spec = P(axes)
-    fn = shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(spec, spec, spec, spec, P()),
-        out_specs=P(),
-        check_rep=False,
+    from repro.distributed.window_runtime import (
+        build_sharded_plan,
+        query_sharded_multi,
     )
-    return fn(p1g, p1s, p2g, p2s, values)[: plan.n]
+
+    splan = build_sharded_plan(plan, mesh, axis)
+    return query_sharded_multi(splan, values, tuple(aggs))
+
+
+def query_dbindex_sharded(plan: DBIndexPlan, values, mesh, axis="data"):
+    """Single-aggregate (SUM) wrapper over the stacked-channel sharded
+    query, kept for compatibility with the pre-multi-channel API."""
+    return query_dbindex_sharded_multi(plan, values, ("sum",), mesh, axis)[0][: plan.n]
 
 
 # ---------------------------------------------------------------------- #

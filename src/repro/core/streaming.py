@@ -104,6 +104,7 @@ class StreamingEngine:
         interpret: Optional[bool] = None,
         plan_headroom: float = 0.0,
         compact_garbage: float = 0.5,
+        use_device_bfs: Optional[bool] = None,
     ):
         assert index_kind in ("dbindex", "iindex")
         if index_kind == "iindex":
@@ -120,6 +121,9 @@ class StreamingEngine:
         self.use_pallas, self.interpret = use_pallas, interpret
         self.plan_headroom = plan_headroom
         self.compact_garbage = compact_garbage
+        # pins the affected-owner BFS routing (None = size-based auto
+        # between host NumPy and the bitset_expand Pallas kernel)
+        self.use_device_bfs = use_device_bfs
         self.batches_applied = 0
         self.edits_applied = 0
         self.reorg_count = 0
@@ -160,7 +164,9 @@ class StreamingEngine:
         t0 = time.perf_counter()
         g2 = apply_batch(self.graph, batch) if graph is None else graph
         if self.index_kind == "dbindex":
-            idx2, changed = update_dbindex_batch(self.index, g2, self.window, batch)
+            idx2, changed = update_dbindex_batch(
+                self.index, g2, self.window, batch,
+                use_device=self.use_device_bfs)
         else:
             idx2, changed = update_iindex_batch(self.index, g2, batch)
         self.graph, self.index = g2, idx2

@@ -170,11 +170,43 @@ def delete_edge(g: Graph, s: int, t: int) -> Graph:
 
 
 # ------------------------ affected-owner sets ------------------------- #
-def affected_owners_khop_multi(g_new: Graph, k: int, seeds: Array) -> Array:
+# Above this many seed endpoints the multi-source BFS routes through the
+# ``bitset_expand`` Pallas kernel (one device hop expands 4096 sources at
+# once); below it the NumPy scatter-OR wins because the per-call tile-plan
+# build dominates.  Tests force either path via ``use_device``.
+DEVICE_BFS_MIN_SEEDS = 4096
+
+
+def _device_khop_reach_any(g_rev: Graph, k: int, seeds: Array) -> Array:
+    """Device mirror of the reverse multi-source BFS: one ``bitset_expand``
+    tile plan over the reverse edges, then k expansion hops per 4096-seed
+    chunk.  Returns the bool [n] mask of vertices reaching any seed."""
+    from repro.kernels.bitset_expand.ops import build_expand_plan, khop_reach
+
+    if g_rev.directed:
+        src, dst = g_rev.src, g_rev.dst
+    else:  # symmetrize, like the host bitset BFS
+        src = np.concatenate([g_rev.src, g_rev.dst])
+        dst = np.concatenate([g_rev.dst, g_rev.src])
+    order = np.argsort(dst, kind="stable")
+    plan = build_expand_plan(src[order], dst[order], g_rev.n)
+    mask = np.zeros(g_rev.n, dtype=bool)
+    for lo in range(0, seeds.size, 4096):
+        chunk = seeds[lo : lo + 4096]
+        reach = np.asarray(khop_reach(plan, g_rev.n, chunk, k))
+        mask |= (reach != 0).any(axis=1)
+    return mask
+
+
+def affected_owners_khop_multi(
+    g_new: Graph, k: int, seeds: Array, use_device: Optional[bool] = None
+) -> Array:
     """Owners whose k-hop window may change after a batch touching edges
     with the given seed endpoints: every vertex that reaches *any* seed
     within k-1 hops (plus the seeds).  One multi-source reverse bitset BFS
-    for the whole batch."""
+    for the whole batch — on host NumPy for small batches, through the
+    ``bitset_expand`` Pallas kernel above :data:`DEVICE_BFS_MIN_SEEDS`
+    (``use_device`` pins either path)."""
     seeds = np.unique(np.asarray(seeds, np.int64))
     if seeds.size == 0:
         return np.empty(0, np.int32)
@@ -183,12 +215,54 @@ def affected_owners_khop_multi(g_new: Graph, k: int, seeds: Array) -> Array:
         if g_new.directed
         else g_new
     )
+    if use_device is None:  # auto-routing: device pays off past the
+        # threshold, and only when there is at least one hop to expand
+        use_device = seeds.size >= DEVICE_BFS_MIN_SEEDS and k > 1
+    if use_device:  # an explicit pin is honored even for k == 1
+        mask = _device_khop_reach_any(rg, max(k - 1, 0), seeds)
+        mask[seeds] = True
+        return np.flatnonzero(mask).astype(np.int32)
     out = [seeds]
     for lo in range(0, seeds.size, 4096):
         chunk = seeds[lo : lo + 4096].astype(np.int32)
         reach = khop_reach_bitsets(rg, max(k - 1, 0), chunk)
         out.append(np.flatnonzero((reach != 0).any(axis=1)))
     return np.unique(np.concatenate(out)).astype(np.int32)
+
+
+def sharded_affected_owners(
+    g_new: Graph, window, batch: UpdateBatch, num_shards: int,
+    use_device: Optional[bool] = None,
+) -> Tuple[Array, List[Array]]:
+    """Distributed affected-set computation for one batch: the seed
+    endpoints are sliced over ``num_shards`` (the data axis), each shard
+    traverses only its slice's reverse balls / descendant cones, and the
+    union is exactly the single-host affected set (BFS distributes over
+    seed unions).  Returns ``(owners_union, per_shard_owners)`` — the
+    per-shard sets are what each shard's dirty tile groups derive from.
+    """
+    if isinstance(window, KHopWindow):
+        seeds = np.unique(_khop_seeds(g_new, batch))
+        slices = np.array_split(seeds, max(num_shards, 1))
+        per_shard = [
+            affected_owners_khop_multi(g_new, window.k, s, use_device=use_device)
+            if s.size else np.empty(0, np.int32)
+            for s in slices
+        ]
+    elif isinstance(window, TopologicalWindow):
+        seeds = np.unique(batch.dst.astype(np.int64))
+        slices = np.array_split(seeds, max(num_shards, 1))
+        per_shard = [
+            descendants_multi(g_new, s) if s.size else np.empty(0, np.int32)
+            for s in slices
+        ]
+    else:
+        raise TypeError(window)
+    owners = (
+        np.unique(np.concatenate(per_shard)).astype(np.int32)
+        if per_shard else np.empty(0, np.int32)
+    )
+    return owners, per_shard
 
 
 def affected_owners_khop(g_new: Graph, k: int, s: int, t: int) -> Array:
@@ -314,7 +388,8 @@ def _merge_affected(index: DBIndex, owners: Array, wins: List[Array]) -> DBIndex
 
 
 def update_dbindex_batch(
-    index: DBIndex, g_new: Graph, window, batch: UpdateBatch
+    index: DBIndex, g_new: Graph, window, batch: UpdateBatch,
+    owners: Optional[Array] = None, use_device: Optional[bool] = None,
 ) -> Tuple[DBIndex, Array]:
     """Incremental phase-1 maintenance for a whole batch.
 
@@ -327,6 +402,12 @@ def update_dbindex_batch(
     the result carries ``stats["last_full_rebuild"] = True`` because the
     appended-prefix invariant does NOT hold then and plan patchers must
     rebuild rather than splice (``patch_plan_dbindex`` checks the flag).
+
+    ``owners`` optionally supplies a precomputed affected-owner set (e.g.
+    from :func:`sharded_affected_owners`, where each shard traversed only
+    its seed slice) so the BFS is not repeated here.  ``use_device`` pins
+    the k-hop BFS routing (host NumPy vs the ``bitset_expand`` kernel);
+    ignored when ``owners`` is given.
     """
     if batch.size == 0:
         return index, np.empty(0, np.int32)
@@ -337,12 +418,16 @@ def update_dbindex_batch(
         return idx, np.arange(index.n, dtype=np.int32)
 
     if isinstance(window, KHopWindow):
-        owners = affected_owners_khop_multi(g_new, window.k, _khop_seeds(g_new, batch))
+        if owners is None:
+            owners = affected_owners_khop_multi(
+                g_new, window.k, _khop_seeds(g_new, batch),
+                use_device=use_device)
         if owners.size > index.n // 2:
             return rebuild()
         wins = khop_windows(g_new, window.k, owners)
     elif isinstance(window, TopologicalWindow):
-        owners = descendants_multi(g_new, batch.dst.astype(np.int64))
+        if owners is None:
+            owners = descendants_multi(g_new, batch.dst.astype(np.int64))
         if owners.size > index.n // 2:
             return rebuild()
         # localized: out-of-cone parents' windows come from the old index's

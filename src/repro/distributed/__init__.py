@@ -1,4 +1,5 @@
-"""Distribution layer: per-family sharding rules + collective helpers."""
+"""Distribution layer: per-family sharding rules, collective helpers, and
+the sharded window-analytics streaming runtime (:mod:`.window_runtime`)."""
 
 from repro.distributed.sharding_rules import (  # noqa: F401
     lm_param_specs,
@@ -7,4 +8,12 @@ from repro.distributed.sharding_rules import (  # noqa: F401
     gnn_specs,
     recsys_specs,
     opt_state_specs,
+)
+from repro.distributed.window_runtime import (  # noqa: F401
+    ShardedDBPlan,
+    ShardedSession,
+    ShardedStreamState,
+    build_sharded_plan,
+    patch_sharded_plan,
+    query_sharded_multi,
 )

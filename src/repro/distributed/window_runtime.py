@@ -1,0 +1,757 @@
+"""Sharded streaming runtime: distributed window queries + update propagation.
+
+This subsystem makes every prior layer — fused multi-channel queries,
+incremental plan patching, capability planning — multi-device at once:
+
+* :class:`ShardedDBPlan` — a DBIndex device plan laid out as *per-shard tile
+  groups*.  The single-host plan already groups rows (members→blocks links,
+  links→owners) by output tile group; here whole groups are assigned to mesh
+  shards (greedy balance over padded rows), so no segment ever straddles a
+  shard.  That alignment is what buys **bit-identity** with the single-host
+  fused path: each segment's partial is produced by exactly one shard in the
+  same row order, and the cross-shard ``psum`` only ever adds exact zeros
+  (``pmin``/``pmax`` add exact identities) from the non-owning shards.
+
+* :func:`query_sharded_multi` — the stacked-channel matrix form of
+  ``query_dbindex_sharded``: fused SUM/COUNT/AVG channels ride one ``psum``
+  per pass, MIN/MAX ride ``pmin``/``pmax`` over sharded ELL row layouts
+  (fall back to the masked tile layout when the plan carries no ELL).
+  Collective footprint per query: ``|T|·C + |n|·C`` floats, independent of
+  window sizes — the paper's sharing structure keeps the wire format tiny.
+
+* :func:`patch_sharded_plan` — streamed update propagation.  The changed
+  tile groups are the wire format: after a batched index update only the
+  groups holding appended secondary blocks (pass 1) and the affected
+  owners' link groups (pass 2) are re-laid-out and scattered into the
+  device-resident shards via ``jax.Array.at[...].set`` (the same
+  shape-stable splice contract as
+  :func:`repro.kernels.segment_reduce.ops.patch_tile_plan`), so a batch
+  ships a few KB of patches instead of re-uploading the full plan, and the
+  jitted sharded query never retraces.
+
+* :class:`ShardedSession` — ``Session(mesh=...)``: owns per-shard plans,
+  shards the affected-owner BFS over the data axis (each shard traverses
+  only its slice of the batch's touched endpoints), streams batches with
+  zero recompiles, and serves ``run`` / ``run_many`` across the mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.dbindex import DBIndex, build_dbindex
+from repro.core.graph import Graph
+from repro.core.streaming import StalenessPolicy
+from repro.core.updates import (
+    UpdateBatch,
+    sharded_affected_owners,
+    update_dbindex_batch,
+)
+
+
+def _axes_tuple(axis) -> Tuple[str, ...]:
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+def _mesh_ndev(mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+# ---------------------------------------------------------------------- #
+#  Shard-aligned plan layout
+# ---------------------------------------------------------------------- #
+def _group_layout(tile_plan) -> Tuple[np.ndarray, np.ndarray]:
+    """(tiles_per_group, flat row starts) of a group-aligned tile layout."""
+    m2out = np.asarray(tile_plan.m2out)
+    tiles = np.bincount(m2out, minlength=tile_plan.num_out_tiles).astype(np.int64)
+    starts = np.zeros(tile_plan.num_out_tiles + 1, np.int64)
+    np.cumsum(tiles * tile_plan.tm, out=starts[1:])
+    return tiles, starts
+
+
+def _assign_groups(rows_per_group: np.ndarray, ndev: int):
+    """Greedy balanced assignment of whole tile groups to shards.
+
+    Groups are placed largest-first on the least-loaded shard (first shard
+    wins ties) — deterministic, and within ~1 group of optimal for the
+    near-uniform group sizes the headroom-floored layouts produce.  Returns
+    ``(shard_of_group, offset_in_shard, rows_per_shard)``; every shard's row
+    span is padded to the max load so ``shard_map`` sees equal shards.
+    """
+    order = np.argsort(-rows_per_group, kind="stable")
+    shard_of = np.zeros(rows_per_group.size, np.int64)
+    offset = np.zeros(rows_per_group.size, np.int64)
+    load = np.zeros(ndev, np.int64)
+    for g in order:
+        s = int(np.argmin(load))
+        shard_of[g] = s
+        offset[g] = load[s]
+        load[s] += rows_per_group[g]
+    return shard_of, offset, max(int(load.max()), 1)
+
+
+def _pack_shards(src_seg, src_gather, starts, rows_per_group, shard_of, offset,
+                 rows_cap: int, ndev: int):
+    """Scatter group row spans into equal per-shard flat arrays (pad -1/0)."""
+    seg = np.full(ndev * rows_cap, -1, np.int32)
+    gather = np.zeros(ndev * rows_cap, np.int32)
+    for g in range(rows_per_group.size):
+        span = int(rows_per_group[g])
+        if span == 0:
+            continue
+        lo = int(shard_of[g]) * rows_cap + int(offset[g])
+        s0 = int(starts[g])
+        seg[lo : lo + span] = src_seg[s0 : s0 + span]
+        gather[lo : lo + span] = src_gather[s0 : s0 + span]
+    return seg, gather
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedDBPlan:
+    """Device-resident DBIndex plan shards plus the host metadata needed to
+    route tile-group patches to the shard that owns them.
+
+    Tile rows (pass 1/2) are sharded at whole-group granularity by the
+    greedy assignment; ELL rows are sharded by contiguous id chunks (block
+    ids for pass 1, owner ids for pass 2) with an explicit per-row id array
+    so the local reduce scatters its rows into an identity-filled full
+    vector before the ``pmin``/``pmax`` combine.
+    """
+
+    mesh: object
+    axes: Tuple[str, ...]
+    ndev: int
+    n: int
+    num_blocks: int
+    block_capacity: int
+    tm: int
+    ts: int
+    headroom: float
+    nb_seg: int  # padded pass-1 segment space (num_out_tiles1 * ts)
+    n_seg: int  # padded pass-2 segment space (num_out_tiles2 * ts)
+    rows1: int  # per-shard pass-1 rows
+    rows2: int  # per-shard pass-2 rows
+    # device arrays ([ndev*rows] flats sharded over `axes`; sizes replicated)
+    p1_gather: object
+    p1_seg: object
+    p2_gather: object
+    p2_seg: object
+    block_sizes: object  # f32 [block_capacity], replicated
+    e1: Optional[object] = None  # i32 [ndev*ell_rows1, R1] member ids
+    e1_ids: Optional[object] = None  # i32 [ndev*ell_rows1] block id / -1
+    e2: Optional[object] = None  # i32 [ndev*ell_rows2, R2] block ids
+    e2_ids: Optional[object] = None  # i32 [ndev*ell_rows2] owner id / -1
+    # host metadata (patch routing)
+    group_shard1: Optional[np.ndarray] = None
+    group_off1: Optional[np.ndarray] = None
+    group_tiles1: Optional[np.ndarray] = None
+    group_shard2: Optional[np.ndarray] = None
+    group_off2: Optional[np.ndarray] = None
+    group_tiles2: Optional[np.ndarray] = None
+    stats: Dict = dataclasses.field(default_factory=dict, repr=False)
+
+    @property
+    def has_ell(self) -> bool:
+        return self.e1 is not None
+
+    def size_bytes(self) -> int:
+        total = (self.p1_gather.nbytes + self.p1_seg.nbytes
+                 + self.p2_gather.nbytes + self.p2_seg.nbytes
+                 + self.block_sizes.nbytes)
+        if self.has_ell:
+            total += (self.e1.nbytes + self.e1_ids.nbytes
+                      + self.e2.nbytes + self.e2_ids.nbytes)
+        return int(total)
+
+
+def _shard_put(mesh, axes, arr, sharded: bool):
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    spec = P(axes) if sharded else P()
+    return jax.device_put(arr, NamedSharding(mesh, spec))
+
+
+def _ell_shards(rows_np: np.ndarray, num_ids: int, ndev: int):
+    """Pad an [num_ids, R] ELL matrix to equal contiguous id chunks."""
+    from repro.core.engine_jax import _ELL_SENTINEL
+
+    per = max(-(-num_ids // ndev), 1)
+    pad = per * ndev - num_ids
+    if pad:
+        rows_np = np.concatenate(
+            [rows_np, np.full((pad, rows_np.shape[1]), _ELL_SENTINEL, np.int32)]
+        )
+    ids = np.full(per * ndev, -1, np.int32)
+    ids[:num_ids] = np.arange(num_ids, dtype=np.int32)
+    return rows_np, ids
+
+
+def build_sharded_plan(plan, mesh, axis="data", headroom: float = 0.0,
+                       stats: Optional[Dict] = None) -> ShardedDBPlan:
+    """Lay a single-host :class:`~repro.core.engine_jax.DBIndexPlan` out as
+    device-resident shards (see :class:`ShardedDBPlan`).  ``headroom`` is
+    recorded so rebuilds keep the same streaming slack; ``stats`` carries
+    counters forward across rebuilds."""
+    axes = _axes_tuple(axis)
+    ndev = _mesh_ndev(mesh, axes)
+
+    tiles1, starts1 = _group_layout(plan.pass1)
+    tiles2, starts2 = _group_layout(plan.pass2)
+    rows_g1, rows_g2 = tiles1 * plan.pass1.tm, tiles2 * plan.pass2.tm
+    shard1, off1, rows1 = _assign_groups(rows_g1, ndev)
+    shard2, off2, rows2 = _assign_groups(rows_g2, ndev)
+    p1_seg, p1_gather = _pack_shards(
+        np.asarray(plan.pass1.seg_tiles).reshape(-1),
+        np.asarray(plan.pass1.gather_padded),
+        starts1, rows_g1, shard1, off1, rows1, ndev,
+    )
+    p2_seg, p2_gather = _pack_shards(
+        np.asarray(plan.pass2.seg_tiles).reshape(-1),
+        np.asarray(plan.pass2.gather_padded),
+        starts2, rows_g2, shard2, off2, rows2, ndev,
+    )
+    e1 = e1_ids = e2 = e2_ids = None
+    if plan.p1_ell is not None:
+        e1_np, e1_ids_np = _ell_shards(np.asarray(plan.p1_ell),
+                                       plan.block_capacity, ndev)
+        e2_np, e2_ids_np = _ell_shards(np.asarray(plan.p2_ell), plan.n, ndev)
+        e1 = _shard_put(mesh, axes, e1_np, True)
+        e1_ids = _shard_put(mesh, axes, e1_ids_np, True)
+        e2 = _shard_put(mesh, axes, e2_np, True)
+        e2_ids = _shard_put(mesh, axes, e2_ids_np, True)
+    base_stats = dict(stats or {})
+    base_stats.setdefault("patched_bytes_total", 0)
+    base_stats.setdefault("rebuilds", 0)
+    splan = ShardedDBPlan(
+        mesh=mesh, axes=axes, ndev=ndev,
+        n=plan.n, num_blocks=plan.num_blocks,
+        block_capacity=plan.block_capacity,
+        tm=plan.pass1.tm, ts=plan.pass1.ts,
+        headroom=headroom,
+        nb_seg=plan.pass1.num_out_tiles * plan.pass1.ts,
+        n_seg=plan.pass2.num_out_tiles * plan.pass2.ts,
+        rows1=rows1, rows2=rows2,
+        p1_gather=_shard_put(mesh, axes, p1_gather, True),
+        p1_seg=_shard_put(mesh, axes, p1_seg, True),
+        p2_gather=_shard_put(mesh, axes, p2_gather, True),
+        p2_seg=_shard_put(mesh, axes, p2_seg, True),
+        block_sizes=_shard_put(
+            mesh, axes, np.asarray(plan.block_sizes, np.float32), False
+        ),
+        e1=e1, e1_ids=e1_ids, e2=e2, e2_ids=e2_ids,
+        group_shard1=shard1, group_off1=off1, group_tiles1=tiles1,
+        group_shard2=shard2, group_off2=off2, group_tiles2=tiles2,
+        stats=base_stats,
+    )
+    base_stats["full_bytes"] = splan.size_bytes()
+    return splan
+
+
+# ---------------------------------------------------------------------- #
+#  Sharded fused multi-aggregate query
+# ---------------------------------------------------------------------- #
+def _sharded_query_impl(sharded, repl, values, mesh, axes, aggs, cfg):
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.aggregates import pack_channels
+    from repro.core.engine_jax import _ell_reduce
+
+    n, cap, nb_seg, n_seg, has_ell = cfg
+    pack = pack_channels(aggs)
+    sum_cols = pack.channels_of("sum")
+    minmax_cols = [
+        (ci, m) for ci, (m, _) in enumerate(pack.channels) if m != "sum"
+    ]
+    _SEG = {"min": jax.ops.segment_min, "max": jax.ops.segment_max}
+    _COMB = {"min": jax.lax.pmin, "max": jax.lax.pmax}
+    _FILL = {"min": jnp.inf, "max": -jnp.inf}
+
+    def local(shard_args, repl_args, vals):
+        if has_ell:
+            p1g, p1s, p2g, p2s, e1, e1i, e2, e2i = shard_args
+        else:
+            p1g, p1s, p2g, p2s = shard_args
+        (bsz,) = repl_args
+
+        # ---- pass 1: block partials, one psum for the stacked channels --- #
+        t_cols = {}
+        need_val = any(pack.channels[ci] == ("sum", "value") for ci in sum_cols)
+        if need_val:
+            ok1 = p1s >= 0
+            part = jax.ops.segment_sum(
+                jnp.where(ok1, jnp.take(vals, p1g), 0.0),
+                jnp.where(ok1, p1s, nb_seg),
+                num_segments=nb_seg + 1,
+            )[:nb_seg]
+            t_val = jax.lax.psum(part, axes)[:cap]
+        for ci in sum_cols:
+            # block cardinalities are host-exact replicated metadata
+            t_cols[ci] = bsz if pack.channels[ci][1] == "ones" else t_val
+        for ci, m in minmax_cols:
+            if has_ell:
+                red = _ell_reduce(e1, vals, m)  # [rows/shard]
+                part = _SEG[m](red, jnp.where(e1i >= 0, e1i, cap),
+                               num_segments=cap + 1)[:cap]
+                t_cols[ci] = _COMB[m](part, axes)
+            else:
+                ok1 = p1s >= 0
+                part = _SEG[m](
+                    jnp.where(ok1, jnp.take(vals, p1g), _FILL[m]),
+                    jnp.where(ok1, p1s, nb_seg),
+                    num_segments=nb_seg + 1,
+                )[:nb_seg]
+                t_cols[ci] = _COMB[m](part, axes)[:cap]
+
+        # ---- pass 2: one gather of the stacked matrix + one psum --------- #
+        outs = {}
+        if sum_cols:
+            t_mat = jnp.stack([t_cols[ci] for ci in sum_cols], axis=1)
+            ok2 = p2s >= 0
+            g2 = jnp.take(t_mat, p2g, axis=0)
+            part = jax.ops.segment_sum(
+                jnp.where(ok2[:, None], g2, 0.0),
+                jnp.where(ok2, p2s, n_seg),
+                num_segments=n_seg + 1,
+            )[:n_seg]
+            red = jax.lax.psum(part, axes)[:n]
+            for j, ci in enumerate(sum_cols):
+                outs[ci] = red[:, j]
+        for ci, m in minmax_cols:
+            if has_ell:
+                red = _ell_reduce(e2, t_cols[ci], m)
+                part = _SEG[m](red, jnp.where(e2i >= 0, e2i, n),
+                               num_segments=n + 1)[:n]
+                outs[ci] = _COMB[m](part, axes)
+            else:
+                ok2 = p2s >= 0
+                part = _SEG[m](
+                    jnp.where(ok2, jnp.take(t_cols[ci], p2g), _FILL[m]),
+                    jnp.where(ok2, p2s, n_seg),
+                    num_segments=n_seg + 1,
+                )[:n_seg]
+                outs[ci] = _COMB[m](part, axes)[:n]
+        return tuple(outs[ci] for ci in range(len(pack.channels)))
+
+    sh = P(axes)
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(tuple(sh for _ in sharded), (P(),), P()),
+        out_specs=tuple(P() for _ in pack.channels),
+        check_rep=False,
+    )
+    chans = fn(sharded, repl, values)
+    return tuple(
+        pack.finalize(i, chans, maximum=jnp.maximum) for i in range(len(aggs))
+    )
+
+
+_sharded_query = None  # jitted lazily (keeps module import JAX-light)
+
+
+def _get_sharded_query():
+    global _sharded_query
+    if _sharded_query is None:
+        import functools
+        import jax
+
+        _sharded_query = functools.partial(jax.jit, static_argnames=(
+            "mesh", "axes", "aggs", "cfg"))(_sharded_query_impl)
+    return _sharded_query
+
+
+def query_cache_size() -> int:
+    """Jit cache entries of the sharded fused query (recompile counter)."""
+    return _get_sharded_query()._cache_size() if _sharded_query else 0
+
+
+def query_sharded_multi(splan: ShardedDBPlan, values, aggs: Sequence[str]):
+    """Fused multi-aggregate sharded query; returns one array per aggregate,
+    bit-identical to the single-host ``query_dbindex_multi`` results."""
+    import jax.numpy as jnp
+
+    values = jnp.asarray(values, jnp.float32)
+    sharded = (splan.p1_gather, splan.p1_seg, splan.p2_gather, splan.p2_seg)
+    if splan.has_ell:
+        sharded = sharded + (splan.e1, splan.e1_ids, splan.e2, splan.e2_ids)
+    cfg = (splan.n, splan.block_capacity, splan.nb_seg, splan.n_seg,
+           splan.has_ell)
+    return _get_sharded_query()(
+        sharded, (splan.block_sizes,), values,
+        mesh=splan.mesh, axes=splan.axes, aggs=tuple(aggs), cfg=cfg,
+    )
+
+
+# ---------------------------------------------------------------------- #
+#  Streamed update propagation: per-shard tile-group patches
+# ---------------------------------------------------------------------- #
+def _group_rows(sorted_seg: np.ndarray, gather_src: np.ndarray, g: int,
+                ts: int, span: int):
+    """Padded (seg, gather) rows of one output tile group from the full new
+    arrays, or None when the group's rows no longer fit its capacity."""
+    lo, hi = np.searchsorted(sorted_seg, (g * ts, (g + 1) * ts))
+    if hi - lo > span:
+        return None
+    seg = np.full(span, -1, np.int32)
+    gather = np.zeros(span, np.int32)
+    seg[: hi - lo] = sorted_seg[lo:hi]
+    gather[: hi - lo] = gather_src[lo:hi]
+    return seg, gather
+
+
+def patch_sharded_plan(
+    splan: ShardedDBPlan, index: DBIndex, changed_owners: np.ndarray
+) -> ShardedDBPlan:
+    """Propagate one streamed batch into the device-resident plan shards.
+
+    The wire format is *changed tile groups*: pass 1 ships only the groups
+    holding appended secondary block ids, pass 2 only the groups containing
+    ``changed_owners``; each patch is scattered into the owning shard's flat
+    rows via ``at[...].set`` (shapes never change in steady state, so jitted
+    queries never retrace).  ELL rows are row-addressed (block id / owner
+    id) and patched the same way.  Falls back to a full rebuild — a
+    recompile-sized event, like capacity growth — when the updater rebuilt
+    outright, capacity is exceeded, or a group/row no longer fits.
+    """
+    import jax.numpy as jnp
+
+    ts = splan.ts
+    stats = dict(splan.stats)
+
+    def rebuild():
+        from repro.core.engine_jax import plan_from_dbindex
+
+        cap = splan.block_capacity
+        if index.num_blocks > cap:
+            cap = 1 << (index.num_blocks - 1).bit_length()
+        base = plan_from_dbindex(index, splan.tm, ts, block_capacity=cap,
+                                 headroom=splan.headroom)
+        stats["rebuilds"] = stats.get("rebuilds", 0) + 1
+        stats["last_patch_groups"] = -1
+        out = build_sharded_plan(base, splan.mesh, splan.axes,
+                                 headroom=splan.headroom, stats=stats)
+        out.stats["last_patch_bytes"] = out.size_bytes()
+        return out
+
+    if (index.stats.get("last_full_rebuild")
+            or index.num_blocks > splan.block_capacity):
+        return rebuild()
+
+    owners = np.unique(np.asarray(changed_owners, np.int64))
+    new_blocks = np.arange(splan.num_blocks, index.num_blocks, dtype=np.int64)
+    if splan.has_ell:
+        # width overflow is a rebuild-sized event — detect it before any
+        # device scatter is staged (same early-out as the single-host
+        # ``_patch_ell``), not after the tile-group work is already done
+        r1, r2 = splan.e1.shape[1], splan.e2.shape[1]
+        if new_blocks.size and int(
+                np.diff(index.block_offsets)[new_blocks].max()) > r1:
+            return rebuild()
+        if owners.size and int(
+                np.diff(index.link_owner_offsets)[owners].max()) > r2:
+            return rebuild()
+    member_block = np.asarray(index.member_block_ids, np.int64)
+    link_owner = np.asarray(index.link_owner_ids, np.int64)
+
+    per_shard = np.zeros(splan.ndev, np.int64)
+    patches: List[Tuple] = []  # (pass_name, flat positions, seg, gather)
+    groups_patched = 0
+    for pass_id, changed_ids, seg_src, gather_src in (
+        (1, new_blocks, member_block, index.block_members),
+        (2, owners, link_owner, index.link_block),
+    ):
+        if changed_ids.size == 0:
+            continue
+        tiles = splan.group_tiles1 if pass_id == 1 else splan.group_tiles2
+        shard_of = splan.group_shard1 if pass_id == 1 else splan.group_shard2
+        offset = splan.group_off1 if pass_id == 1 else splan.group_off2
+        rows_cap = splan.rows1 if pass_id == 1 else splan.rows2
+        tm = splan.tm
+        pos_chunks, seg_chunks, gather_chunks = [], [], []
+        for g in np.unique(changed_ids // ts):
+            span = int(tiles[g]) * tm
+            rows = _group_rows(seg_src, gather_src, int(g), ts, span)
+            if rows is None:  # group outgrew its tile capacity
+                return rebuild()
+            lo = int(shard_of[g]) * rows_cap + int(offset[g])
+            pos_chunks.append(np.arange(lo, lo + span, dtype=np.int64))
+            seg_chunks.append(rows[0])
+            gather_chunks.append(rows[1])
+            per_shard[int(shard_of[g])] += span * 8  # seg + gather, i32 each
+            groups_patched += 1
+        pos = jnp.asarray(np.concatenate(pos_chunks))
+        seg_new = jnp.asarray(np.concatenate(seg_chunks))
+        gather_new = jnp.asarray(np.concatenate(gather_chunks))
+        patches.append((f"p{pass_id}", pos, seg_new, gather_new))
+
+    p1_seg, p1_gather = splan.p1_seg, splan.p1_gather
+    p2_seg, p2_gather = splan.p2_seg, splan.p2_gather
+    for name, pos, seg_new, gather_new in patches:
+        if name == "p1":
+            p1_seg = p1_seg.at[pos].set(seg_new)
+            p1_gather = p1_gather.at[pos].set(gather_new)
+        else:
+            p2_seg = p2_seg.at[pos].set(seg_new)
+            p2_gather = p2_gather.at[pos].set(gather_new)
+
+    block_sizes = splan.block_sizes
+    if new_blocks.size:
+        sizes = np.diff(index.block_offsets)[new_blocks].astype(np.float32)
+        block_sizes = block_sizes.at[jnp.asarray(new_blocks)].set(
+            jnp.asarray(sizes))
+        per_shard += (new_blocks.size * 4) // splan.ndev  # replicated bcast
+
+    e1, e1_ids, e2, e2_ids = splan.e1, splan.e1_ids, splan.e2, splan.e2_ids
+    if splan.has_ell:  # widths already validated before the tile scatters
+        from repro.core.engine_jax import (
+            _ell_rows_for_new_blocks,
+            _ell_rows_for_owners,
+        )
+
+        if new_blocks.size:
+            rows = _ell_rows_for_new_blocks(index, splan.num_blocks, r1)
+            e1 = e1.at[jnp.asarray(new_blocks)].set(jnp.asarray(rows))
+            rs1 = splan.e1.shape[0] // splan.ndev
+            np.add.at(per_shard, (new_blocks // rs1).astype(np.int64),
+                      r1 * 4)
+        if owners.size:
+            rows = _ell_rows_for_owners(index, owners, r2)
+            e2 = e2.at[jnp.asarray(owners)].set(jnp.asarray(rows))
+            rs2 = splan.e2.shape[0] // splan.ndev
+            np.add.at(per_shard, (owners // rs2).astype(np.int64), r2 * 4)
+
+    patch_bytes = int(per_shard.sum())
+    stats.update(
+        last_patch_bytes=patch_bytes,
+        last_patch_groups=groups_patched,
+        last_patch_per_shard=per_shard.tolist(),
+        patched_bytes_total=stats.get("patched_bytes_total", 0) + patch_bytes,
+    )
+    return dataclasses.replace(
+        splan,
+        num_blocks=index.num_blocks,
+        p1_seg=p1_seg, p1_gather=p1_gather,
+        p2_seg=p2_seg, p2_gather=p2_gather,
+        block_sizes=block_sizes,
+        e1=e1, e1_ids=e1_ids, e2=e2, e2_ids=e2_ids,
+        stats=stats,
+    )
+
+
+# ---------------------------------------------------------------------- #
+#  Sharded streaming state (graph + index + plan shards under updates)
+# ---------------------------------------------------------------------- #
+class ShardedStreamState:
+    """Per-window streaming state with device-resident plan shards.
+
+    Mirrors :class:`repro.core.streaming.StreamingEngine` (``apply`` /
+    ``index`` / ``plan`` / ``staleness``) so :class:`repro.core.api.Session`
+    machinery drives both interchangeably, but the plan is a
+    :class:`ShardedDBPlan` and update propagation is distributed: the
+    affected-owner BFS is sharded over the data axis (one seed slice per
+    shard) and only the dirty tile groups are shipped to the shard owning
+    them.
+    """
+
+    def __init__(
+        self,
+        g: Graph,
+        window,
+        mesh,
+        axis="data",
+        *,
+        method: str = "emc",
+        policy: Optional[StalenessPolicy] = None,
+        tm: int = 512,
+        ts: int = 512,
+        plan_headroom: float = 0.5,
+        use_device_bfs: Optional[bool] = None,
+    ):
+        from repro.core.windows import TopologicalWindow
+
+        if isinstance(window, TopologicalWindow) and method == "emc":
+            method = "mc"  # EMC is k-hop only (paper §4.2.2)
+        self.graph = g
+        self.window = window
+        self.mesh, self.axes = mesh, _axes_tuple(axis)
+        self.method = method
+        self.policy = policy or StalenessPolicy()
+        self.tm, self.ts = tm, ts
+        self.plan_headroom = plan_headroom
+        self.use_device_bfs = use_device_bfs
+        self.index_kind = "dbindex"
+        self.batches_applied = 0
+        self.reorg_count = 0
+        self.batches_since_reorg = 0
+        self._build(initial=True)
+
+    def _build(self, initial: bool = False) -> None:
+        from repro.core import engine_jax as ej
+
+        self.index = build_dbindex(self.graph, self.window, method=self.method)
+        self._base_links = int(self.index.stats.get("num_links", 0))
+        self._base_blocks = int(self.index.num_blocks)
+        base = ej.plan_from_dbindex(self.index, self.tm, self.ts,
+                                    headroom=self.plan_headroom)
+        prev = getattr(self, "plan", None)
+        self.plan = build_sharded_plan(
+            base, self.mesh, self.axes, headroom=self.plan_headroom,
+            stats=prev.stats if prev is not None else None,
+        )
+        if prev is not None:
+            # a reorganize re-uploads the whole plan: the patch telemetry
+            # must say so, not echo the previous batch's few-KB patch
+            self.plan.stats.update(
+                last_patch_bytes=self.plan.size_bytes(),
+                last_patch_groups=-1,
+                last_patch_per_shard=[],
+                rebuilds=self.plan.stats.get("rebuilds", 0) + 1,
+            )
+        self.batches_since_reorg = 0
+        if not initial:
+            self.reorg_count += 1
+
+    # ------------------------------------------------------------------ #
+    def apply(self, batch: UpdateBatch, graph: Optional[Graph] = None) -> Dict:
+        """Apply one batch; the affected-owner BFS runs one seed shard per
+        mesh shard, and only changed tile groups ship to the plan shards."""
+        from repro.core.updates import apply_batch
+
+        t0 = time.perf_counter()
+        g2 = apply_batch(self.graph, batch) if graph is None else graph
+        owners, per_shard_owners = sharded_affected_owners(
+            g2, self.window, batch, self.plan.ndev,
+            use_device=self.use_device_bfs,
+        )
+        idx2, changed = update_dbindex_batch(self.index, g2, self.window,
+                                             batch, owners=owners)
+        self.graph, self.index = g2, idx2
+        t_index = time.perf_counter() - t0
+        self.batches_applied += 1
+        self.batches_since_reorg += 1
+
+        reorganized = False
+        if idx2.stats.get("last_full_rebuild"):
+            self._base_links = int(idx2.stats.get("num_links", 0))
+            self._base_blocks = int(idx2.num_blocks)
+            self.batches_since_reorg = 0
+        t1 = time.perf_counter()
+        if self.policy.should_reorganize(
+            idx2, self._base_links, self._base_blocks, self.batches_since_reorg
+        ):
+            self._build()
+            reorganized = True
+        else:
+            self.plan = patch_sharded_plan(self.plan, idx2, changed)
+        t_plan = time.perf_counter() - t1
+        # the patcher itself may have rebuilt (updater full rebuild, capacity
+        # or ELL-width overflow) — that is a full-plan re-upload too, and
+        # consumers asserting patch < full must see it flagged
+        plan_rebuilt = self.plan.stats.get("last_patch_groups") == -1
+        return {
+            "batch_size": batch.size,
+            "affected": int(np.asarray(changed).size),
+            "affected_per_shard": [int(o.size) for o in per_shard_owners],
+            "patch_bytes": int(self.plan.stats.get("last_patch_bytes", 0)),
+            "patch_bytes_per_shard": self.plan.stats.get(
+                "last_patch_per_shard", []),
+            "full_plan_bytes": int(self.plan.stats.get("full_bytes", 0)),
+            "t_index_s": t_index,
+            "t_plan_s": t_plan,
+            "reorganized": reorganized or plan_rebuilt,
+            "plan_rebuilt": plan_rebuilt,
+        }
+
+    # ------------------------------------------------------------------ #
+    def query_multi(self, aggs: Sequence[str], values=None) -> list:
+        if values is None:
+            values = self.graph.attrs["val"]
+        outs = query_sharded_multi(self.plan, values, tuple(aggs))
+        return [np.asarray(o) for o in outs]
+
+    def query(self, agg: str = "sum", values=None) -> np.ndarray:
+        return self.query_multi((agg,), values)[0]
+
+    @property
+    def staleness(self) -> Dict:
+        from repro.core.streaming import garbage_block_fraction
+
+        return {
+            "link_ratio": int(self.index.stats.get("num_links", 0))
+            / max(self._base_links, 1),
+            "block_ratio": self.index.num_blocks / max(self._base_blocks, 1),
+            "garbage_ratio": garbage_block_fraction(self.index),
+        }
+
+
+# ---------------------------------------------------------------------- #
+#  ShardedSession — Session(mesh=...) across the mesh
+# ---------------------------------------------------------------------- #
+from repro.core.api import Session  # noqa: E402  (api never imports us eagerly)
+
+
+class ShardedSession(Session):
+    """A :class:`~repro.core.api.Session` whose device groups run across a
+    mesh: query planning selects sharded capabilities, every distinct window
+    gets per-shard device plans, and streamed ``UpdateBatch``es propagate as
+    per-shard tile-group patches.  Construct directly or via
+    ``Session(g, specs, mesh=mesh)`` — all other Session kwargs (policy,
+    headroom, method, pins, ...) keep their meaning, except
+    ``compact_garbage``: the sharded patch path has no mid-stream pass-1
+    compaction yet (ROADMAP open item), so garbage blocks are reclaimed
+    only by a :class:`~repro.core.streaming.StalenessPolicy` rebuild
+    (tune ``max_garbage_ratio`` for delete-heavy sharded streams).
+    """
+
+    _sharded = True
+
+    def __init__(self, g: Graph, specs, *, mesh, axis="data", **kw):
+        assert mesh is not None, "ShardedSession needs a mesh"
+        self.axes = _axes_tuple(axis)
+        super().__init__(g, specs, mesh=mesh, axis=axis, **kw)
+
+    # ------------------------------------------------------------------ #
+    def _make_state(self, window, kind: str, device: bool, sharded: bool):
+        if not sharded:  # e.g. explicitly pinned host / iindex groups
+            return super()._make_state(window, kind, device, sharded)
+        cfg = self._state_cfg
+        return ShardedStreamState(
+            self.graph, window, self.mesh, cfg["axis"],
+            method=cfg["method"], policy=cfg["policy"],
+            tm=cfg["tm"], ts=cfg["ts"],
+            plan_headroom=cfg["plan_headroom"],
+            use_device_bfs=cfg["use_device_bfs"],
+        )
+
+    def _group_artifacts(self, grp):
+        """A (window, kind) state shared between a sharded group and a
+        pinned non-sharded device group holds a :class:`ShardedDBPlan`,
+        which single-host executors cannot consume — hand those groups the
+        index only (their runner builds a host plan per call)."""
+        index, plan = super()._group_artifacts(grp)
+        if isinstance(plan, ShardedDBPlan):
+            cap = self.registry.capability(grp.engine)
+            if not cap.sharded:
+                return index, None
+        return index, plan
+
+    # ------------------------------------------------------------------ #
+    def run_many(self, values_batch) -> List[np.ndarray]:
+        """Serving traffic across the mesh: the sharded fused query is jitted
+        per shape, so the batch loop replays one compiled executable per
+        group (no vmap-over-shard_map dependency)."""
+        vb = np.asarray(values_batch)
+        assert vb.ndim == 2, "values_batch must be [B, n]"
+        rows = [self.run(values=v) for v in vb]
+        return [
+            np.stack([np.asarray(r[i]) for r in rows])
+            for i in range(len(self.compiled.specs))
+        ]

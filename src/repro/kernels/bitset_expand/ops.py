@@ -20,11 +20,8 @@ from repro.kernels.bitset_expand.bitset_expand import (
     DEFAULT_TS,
     bitset_expand_tiled,
 )
+from repro.kernels.compat import default_interpret as _default_interpret
 from repro.kernels.segment_reduce.ops import TilePlan, build_tile_plan
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def build_expand_plan(edge_src: np.ndarray, edge_dst: np.ndarray, n: int,

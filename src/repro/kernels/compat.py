@@ -1,8 +1,10 @@
 """Pallas API drift shims shared by all kernels.
 
 jax >= 0.5 renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
-the toolchain image pins 0.4.x.  Keep every version-compatibility alias
-here so a toolchain upgrade is a one-file change (ROADMAP open item).
+the toolchain image pins 0.4.x.  Keep every version-compatibility alias —
+and every other per-kernel copy-pasted default, like the off-TPU interpret
+fallback — here so a toolchain upgrade is a one-file change (ROADMAP open
+item).
 """
 
 from __future__ import annotations
@@ -10,3 +12,12 @@ from __future__ import annotations
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def default_interpret() -> bool:
+    """Pallas kernels run compiled on TPU and in interpret mode everywhere
+    else (CPU CI, tests) — the shared ``interpret=None`` resolution for
+    every kernel's ops wrapper."""
+    import jax
+
+    return jax.default_backend() != "tpu"

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels.compat import default_interpret
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import decode_ref, mha_ref
 
@@ -24,7 +25,7 @@ def attention(q, k, v, *, causal: bool = True, local_window=None,
     if not use_pallas:
         return mha_ref(q, k, v, causal=causal, local_window=local_window)
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = default_interpret()
     return flash_attention(q, k, v, causal=causal, bq=bq, bk=bk, interpret=interpret)
 
 

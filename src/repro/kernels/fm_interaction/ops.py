@@ -2,8 +2,7 @@
 
 from __future__ import annotations
 
-import jax
-
+from repro.kernels.compat import default_interpret
 from repro.kernels.fm_interaction.fm_interaction import fm_interaction
 from repro.kernels.fm_interaction.ref import fm_interaction_ref
 
@@ -13,5 +12,5 @@ def fm_second_order(emb, use_pallas: bool = True, interpret=None):
     if not use_pallas:
         return fm_interaction_ref(emb)
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = default_interpret()
     return fm_interaction(emb, interpret=interpret)

@@ -22,15 +22,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.compat import default_interpret as _default_interpret
 from repro.kernels.segment_reduce.segment_reduce import (
     DEFAULT_TM,
     DEFAULT_TS,
     segment_sum_tiled,
 )
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @dataclasses.dataclass(frozen=True)

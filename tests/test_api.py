@@ -82,6 +82,10 @@ def test_registry_selection_by_capability():
     assert DEFAULT_REGISTRY.select(wt, ("min",), device=True) == "jax-iindex"
     assert DEFAULT_REGISTRY.select(w2, ("sum",), device=False) == "dbindex"
     assert DEFAULT_REGISTRY.select(w2, ("sum",), sharded=True) == "jax-sharded"
+    # the stacked-channel sharded executor serves every monoid aggregate
+    # (the old SUM-only capability row is gone)
+    assert DEFAULT_REGISTRY.select(w2, ("min", "avg", "count"),
+                                   sharded=True) == "jax-sharded"
     # explicit pins are validated against the declared capability
     assert DEFAULT_REGISTRY.select(wt, ("max",), engine="iindex") == "iindex"
 
@@ -90,9 +94,15 @@ def test_registry_unsupported_is_explicit():
     w2 = KHopWindow(2)
     with pytest.raises(UnsupportedQueryError, match="iindex"):
         DEFAULT_REGISTRY.select(w2, ("sum",), engine="iindex")
-    # sharded path declares SUM-only: min must fail loudly, listing the table
-    with pytest.raises(UnsupportedQueryError, match="registered"):
-        DEFAULT_REGISTRY.select(w2, ("min",), sharded=True)
+    # no sharded engine is non-incremental: must fail loudly, and the
+    # capability table must carry the device/sharded/incremental flags so
+    # planner failures are self-explaining
+    with pytest.raises(UnsupportedQueryError,
+                       match=r"sharded=True.*sharded=True, incremental=True"):
+        DEFAULT_REGISTRY.select(w2, ("sum",), sharded=True, incremental=False)
+    # pin-mismatch errors carry the engine's full capability row too
+    with pytest.raises(UnsupportedQueryError, match="device=False"):
+        DEFAULT_REGISTRY.select(w2, ("sum",), engine="iindex")
     with pytest.raises(UnsupportedQueryError, match="unknown engine"):
         DEFAULT_REGISTRY.select(w2, ("sum",), engine="nope")
 
@@ -258,3 +268,68 @@ def test_legacy_graph_window_query_shim(khop_case):
         assert np.allclose(got, refs["avg"], rtol=1e-5, atol=1e-3), engine
     with pytest.raises(UnsupportedQueryError):
         GraphWindowQuery(w, agg="sum").run(g, engine="iindex")
+
+
+# ------------------- sharded runtime (single-device mesh) -------------- #
+# The real multi-device coverage lives in tests/test_sharded_stream.py (own
+# CI job, subprocess-forced device count); a 1-device mesh exercises the
+# whole sharded code path — layout, shard_map, collectives, patching — in
+# tier-1 without the device-count dance.
+def test_sharded_multi_single_device_mesh_bit_identical(khop_case):
+    g, w, refs = khop_case
+    mesh = jax.make_mesh((1,), ("data",))
+    idx = build_dbindex(g, w, method="emc")
+    plan = ej.plan_from_dbindex(idx, tm=64, ts=64)
+    fused = ej.query_dbindex_multi(plan, g.attrs["val"], ALL_AGGS,
+                                   use_pallas=False)
+    sharded = ej.query_dbindex_sharded_multi(plan, g.attrs["val"], ALL_AGGS,
+                                             mesh)
+    for a, r, o in zip(ALL_AGGS, fused, sharded):
+        assert np.array_equal(np.asarray(r), np.asarray(o)), a
+
+
+def test_session_mesh_kwarg_builds_sharded_session():
+    from repro.distributed.window_runtime import ShardedSession
+
+    # big enough that a small batch stays on the incremental patch path
+    # (tiny dense graphs trip the affected>n/2 rebuild / staleness policy)
+    g = with_random_attrs(erdos_renyi(300, 3.0, directed=False, seed=21),
+                          seed=22)
+    w = KHopWindow(1)
+    mesh = jax.make_mesh((1,), ("data",))
+    sess = Session(g, [QuerySpec(w, "sum"), QuerySpec(w, "min")], mesh=mesh,
+                   plan_headroom=1.0)
+    assert isinstance(sess, ShardedSession)
+    s, mn = sess.run()
+    vals = g.attrs["val"]
+    assert np.allclose(s, brute_force(g, w, vals, "sum"), rtol=1e-5, atol=1e-3)
+    assert np.allclose(mn, brute_force(g, w, vals, "min"), rtol=1e-5, atol=1e-3)
+    # streamed update keeps the sharded plan fresh (patch, not re-upload)
+    rng = np.random.default_rng(23)
+    reports = sess.update(mixed(sess.graph, rng, 4, 2))
+    rep = next(iter(reports.values()))
+    assert not rep["reorganized"]
+    assert 0 < rep["patch_bytes"] < rep["full_plan_bytes"]
+    s2, _ = sess.run()
+    ref2 = brute_force(sess.graph, w, sess.graph.attrs["val"], "sum")
+    assert np.allclose(s2, ref2, rtol=1e-5, atol=1e-3)
+
+
+def test_sharded_session_mixed_pin_single_host_device_group():
+    """A pinned non-sharded device group sharing a window with a sharded
+    group must not be handed the ShardedDBPlan (regression: jit crashed on
+    the non-array plan) — it gets the shared index and builds its own
+    host plan per call."""
+    from repro.distributed.window_runtime import ShardedSession
+
+    g = with_random_attrs(erdos_renyi(120, 3.0, directed=False, seed=24),
+                          seed=25)
+    w = KHopWindow(1)
+    mesh = jax.make_mesh((1,), ("data",))
+    sess = Session(g, [QuerySpec(w, "sum"), QuerySpec(w, "min", engine="jax")],
+                   mesh=mesh, use_pallas=False)
+    assert isinstance(sess, ShardedSession)
+    s, mn = sess.run()
+    vals = g.attrs["val"]
+    assert np.allclose(s, brute_force(g, w, vals, "sum"), rtol=1e-5, atol=1e-3)
+    assert np.allclose(mn, brute_force(g, w, vals, "min"), rtol=1e-5, atol=1e-3)

@@ -1,11 +1,17 @@
 """Multi-device tests (8 host-platform devices via subprocess: the device
-count must be set before jax initializes, so these run in a child python)."""
+count must be set before jax initializes, so these run in a child python).
+
+Marked ``sharded``: each test pays ~minutes of CPU XLA compiles, so CI runs
+them as a separate long-timeout job (``pytest -m sharded``) and keeps the
+tier-1 job on ``-m "not sharded"``."""
 
 import subprocess
 import sys
 import textwrap
 
 import pytest
+
+pytestmark = pytest.mark.sharded
 
 
 def _run(code: str):

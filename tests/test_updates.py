@@ -321,3 +321,70 @@ def test_property_iindex_batch_equals_rebuild(n, deg, seed):
     ii2, _ = U.update_iindex_batch(ii, g2, b)
     ref = brute_force(g2, TopologicalWindow(), g2.attrs["val"], "sum")
     assert np.allclose(ii2.query(g2.attrs["val"], "sum"), ref)
+
+
+# ---------------- device-routed affected-owner BFS (Pallas) ------------ #
+@pytest.mark.parametrize("directed", [True, False])
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_affected_owners_device_bfs_matches_host(directed, k):
+    """Routing the multi-source BFS through the ``bitset_expand`` kernel
+    (large-batch path) must reproduce the host-NumPy owner set exactly."""
+    pytest.importorskip("jax")
+    g = erdos_renyi(250, 4.0, directed=directed, seed=3)
+    rng = np.random.default_rng(k)
+    seeds = rng.integers(0, g.n, 40)
+    host = U.affected_owners_khop_multi(g, k, seeds, use_device=False)
+    dev = U.affected_owners_khop_multi(g, k, seeds, use_device=True)
+    assert np.array_equal(host, dev)
+
+
+def test_affected_owners_device_threshold_default():
+    """Below DEVICE_BFS_MIN_SEEDS the default routing stays on host (the
+    per-call expand-plan build would dominate tiny batches)."""
+    g = erdos_renyi(60, 3.0, directed=True, seed=4)
+    seeds = np.arange(10)
+    assert 10 < U.DEVICE_BFS_MIN_SEEDS
+    out = U.affected_owners_khop_multi(g, 2, seeds)  # host path, no jax need
+    assert out.size >= seeds.size
+
+
+def test_sharded_affected_owners_union_equals_single_host():
+    """Sharding the BFS over seed slices must union to exactly the
+    single-host affected set, for both window kinds."""
+    rng = np.random.default_rng(5)
+    g = with_random_attrs(erdos_renyi(200, 4.0, directed=False, seed=6), seed=7)
+    b = mixed(g, rng, 10, 5)
+    g2 = U.apply_batch(g, b)
+    w = KHopWindow(2)
+    ref = U.affected_owners_khop_multi(g2, w.k, U._khop_seeds(g2, b))
+    for ndev in (1, 2, 4):
+        owners, per_shard = U.sharded_affected_owners(g2, w, b, ndev)
+        assert len(per_shard) == ndev
+        assert np.array_equal(owners, ref)
+
+    gd = with_random_attrs(random_dag(150, 2.0, seed=8), seed=9)
+    bd = mixed(gd, rng, 6, 3, dag=True)
+    g2d = U.apply_batch(gd, bd)
+    from repro.core.windows import descendants_multi
+
+    ref_t = descendants_multi(g2d, bd.dst.astype(np.int64))
+    owners_t, _ = U.sharded_affected_owners(g2d, TopologicalWindow(), bd, 3)
+    assert np.array_equal(owners_t, ref_t)
+
+
+def test_update_dbindex_batch_accepts_precomputed_owners():
+    """update_dbindex_batch(owners=...) must match the self-computed path
+    (index arrays and stats identical)."""
+    rng = np.random.default_rng(10)
+    g = with_random_attrs(erdos_renyi(150, 4.0, directed=False, seed=11), seed=12)
+    w = KHopWindow(1)
+    idx = build_dbindex(g, w, method="emc")
+    b = mixed(g, rng, 8, 4)
+    g2 = U.apply_batch(g, b)
+    auto, ch_a = U.update_dbindex_batch(idx, g2, w, b)
+    owners, _ = U.sharded_affected_owners(g2, w, b, 4)
+    pre, ch_p = U.update_dbindex_batch(idx, g2, w, b, owners=owners)
+    assert np.array_equal(ch_a, ch_p)
+    assert np.array_equal(auto.block_members, pre.block_members)
+    assert np.array_equal(auto.link_block, pre.link_block)
+    assert np.array_equal(auto.link_owner_offsets, pre.link_owner_offsets)
