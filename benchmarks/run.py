@@ -25,6 +25,7 @@ def main(argv=None) -> None:
         bench_multiquery,
         bench_nonindex_gap,
         bench_scalability,
+        bench_service,
         bench_updates,
     )
     from benchmarks.common import flush_csv
@@ -41,6 +42,7 @@ def main(argv=None) -> None:
         "kernels": bench_kernels.run,
         "updates": lambda: bench_updates.run(n=20_000 if args.fast else 100_000),
         "multiquery": lambda: bench_multiquery.run(n=8_000 if args.fast else 20_000),
+        "service": lambda: bench_service.run(smoke=args.fast),
     }
     # bench_sharded_stream is deliberately NOT in this table: it must force
     # the host-platform device count before jax initializes, so it runs

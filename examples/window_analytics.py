@@ -47,3 +47,16 @@ for step in range(8):
 
 # phase-2 telemetry: the staleness policy watches sharing loss AND garbage
 print(f"staleness after stream: {sess.staleness}")
+
+# Serving many concurrent callers?  Don't call run() once per request —
+# front the Session with the serving layer (examples/window_service.py):
+# point reads become affected-owner-cache hits, explicit-values requests
+# coalesce into fixed-bucket padded launches, and reads are version-pinned
+# snapshots that never block on (or observe half of) an update.
+from repro.serve import WindowService  # noqa: E402
+
+svc = WindowService(sess, bucket=8)
+t = svc.submit(specs[0], vertex=7)  # point read: O(1) hit in steady state
+svc.flush()
+print(f"served sum(7)={t.result} at version {t.version}; "
+      f"point hit rate so far: {svc.stats['point_hit_rate']:.2f}")

@@ -22,6 +22,13 @@ The paper's GWQ abstraction (Definition 3) is one algebraic object —
   :class:`~repro.core.updates.UpdateBatch` streams through the incremental
   maintenance path (compiled artifacts survive updates via plan patching),
   and serves ``run`` / ``run_many`` traffic.
+* :class:`SessionView` — an atomic read snapshot pinned at one version.
+  Graph, indices and plans are immutable (updates build replacements and
+  swap references), so :meth:`Session.snapshot` is one tuple capture and a
+  reader holding a view never observes a half-patched plan.  The serving
+  layer (:mod:`repro.serve.window_service`) builds its versioned-read /
+  ``flip()`` MVCC on exactly this property, and an attached affected-owner
+  result cache makes ``run`` / point reads cache-aware.
 """
 
 from __future__ import annotations
@@ -207,6 +214,43 @@ KNOWN_OPTS = frozenset({
 
 def _pick(opts: dict, *names) -> dict:
     return {k: opts[k] for k in names if k in opts}
+
+
+# ---------------------------------------------------------------------- #
+#  Batched fused executors (serving traffic)
+# ---------------------------------------------------------------------- #
+# jit(vmap(fused query)) per device engine, built lazily so the module
+# stays JAX-light.  The scheduler in repro.serve.window_service pads every
+# launch to a fixed [bucket, n] shape, so each executor compiles once and
+# is reused for every flush (the recompile counter below asserts it).
+# _VMANY_ENGINES is the single source of truth for which engines have a
+# vmappable fused executor (sharded plans batch via query_sharded_many
+# instead — see ShardedSession._exec_group_many).
+_VMANY_ENGINES = ("jax", "jax-iindex")
+_VMANY: Dict[str, object] = {}
+
+
+def _get_vmany(engine: str):
+    if engine not in _VMANY:
+        import jax
+
+        from repro.core import engine_jax as ej
+
+        fn = {"jax": ej.query_dbindex_multi,
+              "jax-iindex": ej.query_iindex_multi}[engine]
+        _VMANY[engine] = jax.jit(
+            lambda plan, vb, aggs, interpret: jax.vmap(
+                lambda v: fn(plan, v, aggs, use_pallas=False,
+                             interpret=interpret))(vb),
+            static_argnames=("aggs", "interpret"),
+        )
+    return _VMANY[engine]
+
+
+def run_many_cache_size() -> int:
+    """Jit cache entries of the batched fused executors — the recompile
+    counter behind the serving scheduler's fixed-bucket contract."""
+    return sum(f._cache_size() for f in _VMANY.values())
 
 
 def _run_nonindex(g, window, values, aggs, index=None, plan=None, **opts):
@@ -412,6 +456,15 @@ _DBINDEX_ENGINES = {"dbindex", "jax", "jax-sharded"}
 _IINDEX_ENGINES = {"iindex", "jax-iindex"}
 
 
+def _kind_of(engine: str) -> Optional[str]:
+    """Index kind behind an engine name, or None for stateless backends."""
+    if engine in _DBINDEX_ENGINES:
+        return "dbindex"
+    if engine in _IINDEX_ENGINES:
+        return "iindex"
+    return None
+
+
 class Session:
     """Stateful serving facade over compiled window queries.
 
@@ -453,7 +506,7 @@ class Session:
         tm: int = 512,
         ts: int = 512,
         plan_headroom: float = 0.5,
-        compact_garbage: float = 0.5,
+        compact_garbage: Optional[float] = None,
         mesh=None,
         axis="data",
         use_device_bfs: Optional[bool] = None,
@@ -472,6 +525,11 @@ class Session:
             use_device_bfs=use_device_bfs,
         )
         self.updates_applied = 0
+        #: monotonically increasing state version: bumped once per
+        #: :meth:`update`.  Snapshots pin it; the serving layer's result
+        #: cache is keyed by it.
+        self.version = 0
+        self._result_cache = None
         # one stateful engine per (window, index kind) — shared by every
         # group on that key, so the device/sharded flags are the OR over the
         # sharing groups (a host group must not strip the plan a device
@@ -483,11 +541,7 @@ class Session:
         need_device: Dict[Tuple[object, str], bool] = {}
         need_shard: Dict[Tuple[object, str], bool] = {}
         for grp in self.compiled.groups:
-            kind = (
-                "dbindex" if grp.engine in _DBINDEX_ENGINES
-                else "iindex" if grp.engine in _IINDEX_ENGINES
-                else None
-            )
+            kind = _kind_of(grp.engine)
             if kind is None:
                 continue
             key = (grp.window, kind)
@@ -502,26 +556,30 @@ class Session:
     def _make_state(self, window, kind: str, device: bool, sharded: bool):
         """Build the per-(window, kind) streaming state.  The base Session
         always builds host/single-device engines; :class:`ShardedSession`
-        overrides this to place sharded windows on the mesh."""
+        overrides this to place sharded windows on the mesh.
+
+        ``compact_garbage=None`` defers to the engine's own default — the
+        single-host compaction re-lays pass 1 (a shape change), so it waits
+        as long as a rebuild (0.5); the sharded compaction is in-place and
+        shape-stable, so it fires earlier (0.25, below the default
+        :class:`StalenessPolicy` ``max_garbage_ratio``)."""
         from repro.core.streaming import StreamingEngine
 
         cfg = self._state_cfg
+        cg = cfg["compact_garbage"]
         return StreamingEngine(
             self.graph, window, index_kind=kind, method=cfg["method"],
             policy=cfg["policy"], device=device, tm=cfg["tm"], ts=cfg["ts"],
             use_pallas=cfg["use_pallas"], interpret=cfg["interpret"],
             plan_headroom=cfg["plan_headroom"],
-            compact_garbage=cfg["compact_garbage"],
+            compact_garbage=0.5 if cg is None else cg,
             use_device_bfs=cfg["use_device_bfs"],
         )
 
     # ------------------------------------------------------------------ #
     def _state_for(self, grp: PlanGroup):
-        if grp.engine in _DBINDEX_ENGINES:
-            return self._states.get((grp.window, "dbindex"))
-        if grp.engine in _IINDEX_ENGINES:
-            return self._states.get((grp.window, "iindex"))
-        return None
+        kind = _kind_of(grp.engine)
+        return self._states.get((grp.window, kind)) if kind else None
 
     def _group_artifacts(self, grp: PlanGroup):
         state = self._state_for(grp)
@@ -538,79 +596,123 @@ class Session:
             return self._eagr[grp.window], None
         return None, None
 
-    def _values_for(self, grp: PlanGroup, values):
+    def _values_for(self, grp: PlanGroup, values, graph=None):
         if values is None:
-            return self.graph.attrs[grp.attr]
+            return (self.graph if graph is None else graph).attrs[grp.attr]
         if isinstance(values, dict):
             return values[grp.attr]
         return values
+
+    # ------------------------------------------------------------------ #
+    #  Group executors — shared by Session.run/run_many and SessionView
+    # ------------------------------------------------------------------ #
+    def _exec_group(self, grp: PlanGroup, index, plan, values, graph=None):
+        g = self.graph if graph is None else graph
+        return self.registry.run(
+            grp.engine, g, grp.window,
+            self._values_for(grp, values, graph=g), grp.aggs,
+            index=index, plan=plan, **self._opts,
+        )
+
+    def _exec_group_many(self, grp: PlanGroup, index, plan, vb, graph=None):
+        """One [B, n] batch of attribute vectors through one plan group.
+
+        Device groups run the jitted vmapped fused executor (XLA lowering —
+        batching a Pallas kernel is not supported on every backend, and the
+        fused XLA path vmaps cleanly); host engines loop the batch.
+        """
+        if plan is not None and grp.engine in _VMANY_ENGINES:
+            import jax.numpy as jnp
+
+            outs = _get_vmany(grp.engine)(
+                plan, jnp.asarray(vb, jnp.float32), grp.aggs,
+                self._opts["interpret"],
+            )
+            return {a: np.asarray(o) for a, o in zip(grp.aggs, outs)}
+        g = self.graph if graph is None else graph
+        rows = [
+            self.registry.run(grp.engine, g, grp.window, v, grp.aggs,
+                              index=index, plan=plan, **self._opts)
+            for v in vb
+        ]
+        return {a: np.stack([r[a] for r in rows]) for a in grp.aggs}
+
+    # ------------------------------------------------------------------ #
+    #  Versioned snapshot reads + result cache hooks
+    # ------------------------------------------------------------------ #
+    def snapshot(self) -> "SessionView":
+        """Pin the current version for reads.
+
+        Graph, indices and plans are immutable — :meth:`update` builds
+        replacements and swaps references — so capturing them here is an
+        atomic point-in-time view: the session can patch version v+1 while
+        the view keeps answering at v, and no reader ever sees a
+        half-patched plan.
+        """
+        return SessionView(
+            session=self,
+            graph=self.graph,
+            version=self.version,
+            artifacts=tuple(self._group_artifacts(grp)
+                            for grp in self.compiled.groups),
+        )
+
+    def attach_cache(self, cache) -> None:
+        """Attach an affected-owner result cache (duck-typed; see
+        :class:`repro.serve.window_service.AffectedOwnerCache`): ``run``
+        consults it for current-attribute reads, and every :meth:`update`
+        feeds it the per-group affected-owner sets so it invalidates only
+        the vertices whose windows actually changed.
+
+        One session serves one cache: silently replacing an attached cache
+        would freeze the old one behind the head (its reads version-
+        mismatch forever), so a second distinct cache raises — front one
+        Session with one caching service (or ``use_cache=False``)."""
+        if self._result_cache is not None and self._result_cache is not cache:
+            raise RuntimeError(
+                "a result cache is already attached to this Session; "
+                "detach it (session._result_cache = None) or construct the "
+                "second WindowService with use_cache=False"
+            )
+        self._result_cache = cache
+        cache.bind(self)
+
+    def group_state_key(self, gi: int) -> Optional[str]:
+        """Report key of the stateful engine behind group ``gi`` (the keys
+        of :meth:`update` reports / :attr:`staleness`), or None for groups
+        with no incremental state (their cached results cannot be bounded
+        by an affected set and must be dropped wholesale on update)."""
+        grp = self.compiled.groups[gi]
+        kind = _kind_of(grp.engine)
+        if kind is None or (grp.window, kind) not in self._states:
+            return None
+        return f"{grp.window.name()}/{kind}"
 
     # ------------------------------------------------------------------ #
     def run(self, values=None) -> List[np.ndarray]:
         """Evaluate every compiled spec; returns results in spec order.
 
         ``values`` overrides the graph attribute(s): an array (applied to
-        every group) or a dict keyed by attr name.
+        every group) or a dict keyed by attr name.  With an attached result
+        cache and ``values=None``, group vectors come from / land in the
+        cache (see :meth:`attach_cache`).
         """
-        group_results = []
-        for grp in self.compiled.groups:
-            index, plan = self._group_artifacts(grp)
-            group_results.append(
-                self.registry.run(
-                    grp.engine, self.graph, grp.window,
-                    self._values_for(grp, values), grp.aggs,
-                    index=index, plan=plan, **self._opts,
-                )
-            )
-        return self.compiled.results_for_specs(group_results)
+        return self.snapshot().run(values)
 
     def run_many(self, values_batch) -> List[np.ndarray]:
         """Serving-style traffic: evaluate all specs for a [B, n] batch of
-        attribute vectors, vmapped over the batch axis on device engines.
-
-        Device groups always run through the XLA lowering under vmap
-        (``use_pallas=False``) — batching a Pallas kernel is not supported
-        on every backend, and the fused XLA path vmaps cleanly.
-        """
-        import jax
-        import jax.numpy as jnp
-
-        from repro.core import engine_jax as ej
-
-        fused_fns = {"jax": ej.query_dbindex_multi,
-                     "jax-iindex": ej.query_iindex_multi}
-        vb = np.asarray(values_batch)
-        assert vb.ndim == 2, "values_batch must be [B, n]"
-        group_results = []
-        for grp in self.compiled.groups:
-            index, plan = self._group_artifacts(grp)
-            if plan is not None and grp.engine in fused_fns:
-                fn = fused_fns[grp.engine]
-                outs = jax.vmap(
-                    lambda v: fn(plan, v, grp.aggs, use_pallas=False,
-                                 interpret=self._opts["interpret"])
-                )(jnp.asarray(vb, jnp.float32))
-                group_results.append(
-                    {a: np.asarray(o) for a, o in zip(grp.aggs, outs)}
-                )
-            else:  # host engines: loop the batch
-                rows = [
-                    self.registry.run(grp.engine, self.graph, grp.window, v,
-                                      grp.aggs, index=index, plan=plan,
-                                      **self._opts)
-                    for v in vb
-                ]
-                group_results.append(
-                    {a: np.stack([r[a] for r in rows]) for a in grp.aggs}
-                )
-        return self.compiled.results_for_specs(group_results)
+        attribute vectors in one vmapped launch per device group."""
+        return self.snapshot().run_many(values_batch)
 
     # ------------------------------------------------------------------ #
     def update(self, batch) -> Dict:
         """Stream one UpdateBatch through every stateful index + plan.
 
         The graph edit is applied once and shared by every engine (their
-        index maintenance is per-window, the graph is not)."""
+        index maintenance is per-window, the graph is not).  Bumps
+        :attr:`version`; each report carries the new version and the
+        engine's ``affected_owners`` array, and an attached result cache is
+        invalidated for exactly those owners."""
         from repro.core.updates import apply_batch
 
         g2 = apply_batch(self.graph, batch)
@@ -620,6 +722,17 @@ class Session:
         self.graph = g2
         self._eagr_dirty = bool(self._eagr) or self._eagr_dirty
         self.updates_applied += 1
+        self.version += 1
+        for rep in reports.values():
+            rep["version"] = self.version
+        if self._result_cache is not None:
+            owner_map = {}
+            for gi in range(len(self.compiled.groups)):
+                key = self.group_state_key(gi)
+                owner_map[gi] = (
+                    reports[key]["affected_owners"] if key is not None else None
+                )
+            self._result_cache.on_update(self.version, owner_map)
         return reports
 
     @property
@@ -631,3 +744,69 @@ class Session:
                                         "reorg_count": eng.reorg_count}
             for (window, kind), eng in self._states.items()
         }
+
+
+# ---------------------------------------------------------------------- #
+#  SessionView: atomic, version-pinned read snapshot
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class SessionView:
+    """A point-in-time read view of a :class:`Session` pinned at one version.
+
+    Holds the graph and every group's (index, plan) by reference; because
+    all of them are immutable, reads through the view are snapshot-isolated:
+    ``Session.update`` replaces the session's references for version v+1
+    while this view keeps serving version v.  The serving layer
+    (:class:`repro.serve.window_service.WindowService`) keeps one "active"
+    view for readers and republishes on ``flip()``.
+
+    Cache interplay: current-attribute reads (``values=None``) consult the
+    session's attached result cache.  Cache reads and writes are gated on
+    the view's version matching the cache's — a view pinned behind the
+    write head simply bypasses the cache rather than polluting it.
+    """
+
+    session: Session
+    graph: Graph
+    version: int
+    artifacts: Tuple[Tuple[object, object], ...]  # per group: (index, plan)
+
+    # ------------------------------------------------------------------ #
+    def run_group(self, gi: int, values=None) -> Dict[str, np.ndarray]:
+        """All aggregates of plan group ``gi`` (one fused launch on device
+        engines), cache-aware for current-attribute reads."""
+        grp = self.session.compiled.groups[gi]
+        cache = self.session._result_cache
+        if values is None and cache is not None:
+            hit = cache.get_group(gi, self.version)
+            if hit is not None:
+                return hit
+        index, plan = self.artifacts[gi]
+        out = self.session._exec_group(grp, index, plan, values,
+                                       graph=self.graph)
+        if values is None and cache is not None:
+            cache.put_group(gi, self.version, out)
+        return out
+
+    def run_group_many(self, gi: int, values_batch) -> Dict[str, np.ndarray]:
+        """[B, n] batch through plan group ``gi`` — one vmapped launch on
+        device engines (the scheduler's coalesced flush path)."""
+        grp = self.session.compiled.groups[gi]
+        index, plan = self.artifacts[gi]
+        return self.session._exec_group_many(grp, index, plan, values_batch,
+                                             graph=self.graph)
+
+    # ------------------------------------------------------------------ #
+    def run(self, values=None) -> List[np.ndarray]:
+        groups = range(len(self.session.compiled.groups))
+        return self.session.compiled.results_for_specs(
+            [self.run_group(gi, values) for gi in groups]
+        )
+
+    def run_many(self, values_batch) -> List[np.ndarray]:
+        vb = np.asarray(values_batch)
+        assert vb.ndim == 2, "values_batch must be [B, n]"
+        groups = range(len(self.session.compiled.groups))
+        return self.session.compiled.results_for_specs(
+            [self.run_group_many(gi, vb) for gi in groups]
+        )

@@ -128,6 +128,10 @@ class StreamingEngine:
         self.edits_applied = 0
         self.reorg_count = 0
         self.batches_since_reorg = 0
+        #: monotonically increasing plan version: every patch or rebuild of
+        #: the device plan bumps it, so a reader can tell whether the plan
+        #: object it pinned is still the engine's newest one
+        self.plan_version = 0
         self._build(initial=True)
 
     # ------------------------------------------------------------------ #
@@ -151,6 +155,7 @@ class StreamingEngine:
         self.batches_since_reorg = 0
         if not initial:
             self.reorg_count += 1
+            self.plan_version += 1
 
     # ------------------------------------------------------------------ #
     def apply(self, batch: UpdateBatch, graph: Optional[Graph] = None) -> Dict:
@@ -199,10 +204,17 @@ class StreamingEngine:
                 )
             else:
                 self.plan = ej.patch_plan_iindex(self.plan, idx2, changed)
+            self.plan_version += 1
+        else:
+            self.plan_version += 1  # host "plan" is the index itself
         t_plan = time.perf_counter() - t1
         return {
             "batch_size": batch.size,
             "affected": int(np.asarray(changed).size),
+            # the exact owner set whose windows were recomputed — the
+            # serving layer's cache invalidates precisely these vertices
+            "affected_owners": np.asarray(changed, np.int32),
+            "plan_version": self.plan_version,
             "t_index_s": t_index,
             "t_plan_s": t_plan,
             "reorganized": reorganized,

@@ -265,6 +265,29 @@ def sharded_affected_owners(
     return owners, per_shard
 
 
+def affected_owners(
+    g_new: Graph, window, batch: UpdateBatch,
+    use_device: Optional[bool] = None,
+) -> Array:
+    """Affected-owner set of one batch for any window kind — the exact set
+    whose windows the batched maintenance recomputes, and therefore the
+    exact invalidation set for any cached per-vertex results (everything
+    outside it provably keeps its window, so a serving-layer cache entry
+    for it stays valid across the batch).
+
+    K-hop windows: every vertex reaching a touched endpoint within k-1
+    hops (plus the endpoints); topological windows: the descendant cone of
+    the touched edge heads.  ``use_device`` pins the k-hop BFS routing.
+    """
+    if isinstance(window, KHopWindow):
+        return affected_owners_khop_multi(
+            g_new, window.k, _khop_seeds(g_new, batch), use_device=use_device
+        )
+    if isinstance(window, TopologicalWindow):
+        return descendants_multi(g_new, batch.dst.astype(np.int64))
+    raise TypeError(window)
+
+
 def affected_owners_khop(g_new: Graph, k: int, s: int, t: int) -> Array:
     """Single-edge wrapper (kept for compatibility)."""
     seeds = [s] if g_new.directed else [s, t]
@@ -417,19 +440,13 @@ def update_dbindex_batch(
         idx.stats["last_full_rebuild"] = True
         return idx, np.arange(index.n, dtype=np.int32)
 
+    if owners is None:
+        owners = affected_owners(g_new, window, batch, use_device=use_device)
+    if owners.size > index.n // 2:
+        return rebuild()
     if isinstance(window, KHopWindow):
-        if owners is None:
-            owners = affected_owners_khop_multi(
-                g_new, window.k, _khop_seeds(g_new, batch),
-                use_device=use_device)
-        if owners.size > index.n // 2:
-            return rebuild()
         wins = khop_windows(g_new, window.k, owners)
     elif isinstance(window, TopologicalWindow):
-        if owners is None:
-            owners = descendants_multi(g_new, batch.dst.astype(np.int64))
-        if owners.size > index.n // 2:
-            return rebuild()
         # localized: out-of-cone parents' windows come from the old index's
         # exact cover, so nothing outside the cone is traversed
         order = g_new.topological_order()

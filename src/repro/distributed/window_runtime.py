@@ -18,6 +18,8 @@ incremental plan patching, capability planning — multi-device at once:
   (fall back to the masked tile layout when the plan carries no ELL).
   Collective footprint per query: ``|T|·C + |n|·C`` floats, independent of
   window sizes — the paper's sharing structure keeps the wire format tiny.
+  :func:`query_sharded_many` batches a whole [B, n] ``run_many`` bucket
+  through the same shard-local fn in ONE launch (trailing values axis).
 
 * :func:`patch_sharded_plan` — streamed update propagation.  The changed
   tile groups are the wire format: after a batched index update only the
@@ -227,6 +229,11 @@ def build_sharded_plan(plan, mesh, axis="data", headroom: float = 0.0,
     base_stats = dict(stats or {})
     base_stats.setdefault("patched_bytes_total", 0)
     base_stats.setdefault("rebuilds", 0)
+    base_stats.setdefault("version", 0)
+    # a fresh layout lays out every member row the index holds — any
+    # previously device-compacted garbage rows are back, so the ledger
+    # the patcher keeps must restart empty
+    base_stats.pop("p1_compacted_ids", None)
     splan = ShardedDBPlan(
         mesh=mesh, axes=axes, ndev=ndev,
         n=plan.n, num_blocks=plan.num_blocks,
@@ -280,6 +287,14 @@ def _sharded_query_impl(sharded, repl, values, mesh, axes, aggs, cfg):
         else:
             p1g, p1s, p2g, p2s = shard_args
         (bsz,) = repl_args
+        # ``vals`` is [n] (one query) or [n, B] (a run_many bucket riding a
+        # trailing batched values axis through the same shard-local fn —
+        # gathers/segment reduces/collectives all carry the extra axis, so
+        # a whole [B, n] batch is ONE launch instead of B replays)
+        bat = vals.ndim == 2
+
+        def col(mask):  # broadcast a row mask over the batch axis
+            return mask[:, None] if bat else mask
 
         # ---- pass 1: block partials, one psum for the stacked channels --- #
         t_cols = {}
@@ -287,24 +302,30 @@ def _sharded_query_impl(sharded, repl, values, mesh, axes, aggs, cfg):
         if need_val:
             ok1 = p1s >= 0
             part = jax.ops.segment_sum(
-                jnp.where(ok1, jnp.take(vals, p1g), 0.0),
+                jnp.where(col(ok1), jnp.take(vals, p1g, axis=0), 0.0),
                 jnp.where(ok1, p1s, nb_seg),
                 num_segments=nb_seg + 1,
             )[:nb_seg]
             t_val = jax.lax.psum(part, axes)[:cap]
         for ci in sum_cols:
             # block cardinalities are host-exact replicated metadata
-            t_cols[ci] = bsz if pack.channels[ci][1] == "ones" else t_val
+            if pack.channels[ci][1] == "ones":
+                t_cols[ci] = (
+                    jnp.broadcast_to(bsz[:, None], (bsz.shape[0],) + vals.shape[1:])
+                    if bat else bsz
+                )
+            else:
+                t_cols[ci] = t_val
         for ci, m in minmax_cols:
             if has_ell:
-                red = _ell_reduce(e1, vals, m)  # [rows/shard]
+                red = _ell_reduce(e1, vals, m)  # [rows/shard(, B)]
                 part = _SEG[m](red, jnp.where(e1i >= 0, e1i, cap),
                                num_segments=cap + 1)[:cap]
                 t_cols[ci] = _COMB[m](part, axes)
             else:
                 ok1 = p1s >= 0
                 part = _SEG[m](
-                    jnp.where(ok1, jnp.take(vals, p1g), _FILL[m]),
+                    jnp.where(col(ok1), jnp.take(vals, p1g, axis=0), _FILL[m]),
                     jnp.where(ok1, p1s, nb_seg),
                     num_segments=nb_seg + 1,
                 )[:nb_seg]
@@ -317,7 +338,7 @@ def _sharded_query_impl(sharded, repl, values, mesh, axes, aggs, cfg):
             ok2 = p2s >= 0
             g2 = jnp.take(t_mat, p2g, axis=0)
             part = jax.ops.segment_sum(
-                jnp.where(ok2[:, None], g2, 0.0),
+                jnp.where(ok2[:, None, None] if bat else ok2[:, None], g2, 0.0),
                 jnp.where(ok2, p2s, n_seg),
                 num_segments=n_seg + 1,
             )[:n_seg]
@@ -333,7 +354,8 @@ def _sharded_query_impl(sharded, repl, values, mesh, axes, aggs, cfg):
             else:
                 ok2 = p2s >= 0
                 part = _SEG[m](
-                    jnp.where(ok2, jnp.take(t_cols[ci], p2g), _FILL[m]),
+                    jnp.where(col(ok2), jnp.take(t_cols[ci], p2g, axis=0),
+                              _FILL[m]),
                     jnp.where(ok2, p2s, n_seg),
                     num_segments=n_seg + 1,
                 )[:n_seg]
@@ -373,21 +395,49 @@ def query_cache_size() -> int:
     return _get_sharded_query()._cache_size() if _sharded_query else 0
 
 
+def _splan_call_args(splan: ShardedDBPlan):
+    sharded = (splan.p1_gather, splan.p1_seg, splan.p2_gather, splan.p2_seg)
+    if splan.has_ell:
+        sharded = sharded + (splan.e1, splan.e1_ids, splan.e2, splan.e2_ids)
+    cfg = (splan.n, splan.block_capacity, splan.nb_seg, splan.n_seg,
+           splan.has_ell)
+    return sharded, cfg
+
+
 def query_sharded_multi(splan: ShardedDBPlan, values, aggs: Sequence[str]):
     """Fused multi-aggregate sharded query; returns one array per aggregate,
     bit-identical to the single-host ``query_dbindex_multi`` results."""
     import jax.numpy as jnp
 
     values = jnp.asarray(values, jnp.float32)
-    sharded = (splan.p1_gather, splan.p1_seg, splan.p2_gather, splan.p2_seg)
-    if splan.has_ell:
-        sharded = sharded + (splan.e1, splan.e1_ids, splan.e2, splan.e2_ids)
-    cfg = (splan.n, splan.block_capacity, splan.nb_seg, splan.n_seg,
-           splan.has_ell)
+    sharded, cfg = _splan_call_args(splan)
     return _get_sharded_query()(
         sharded, (splan.block_sizes,), values,
         mesh=splan.mesh, axes=splan.axes, aggs=tuple(aggs), cfg=cfg,
     )
+
+
+def query_sharded_many(splan: ShardedDBPlan, values_batch,
+                       aggs: Sequence[str]):
+    """[B, n] serving traffic in ONE sharded launch.
+
+    The shard-local fn carries a trailing batched values axis, so
+    ``ShardedSession.run_many`` no longer replays the compiled executable
+    per batch row (the old ROADMAP open item) — one launch computes every
+    row, and the collective footprint stays one ``psum``/``pmin``/``pmax``
+    per pass with a ``B``-wide payload.  Returns one [B, n] array per
+    aggregate.
+    """
+    import jax.numpy as jnp
+
+    vb = jnp.asarray(values_batch, jnp.float32)
+    assert vb.ndim == 2, "values_batch must be [B, n]"
+    sharded, cfg = _splan_call_args(splan)
+    outs = _get_sharded_query()(
+        sharded, (splan.block_sizes,), vb.T,
+        mesh=splan.mesh, axes=splan.axes, aggs=tuple(aggs), cfg=cfg,
+    )
+    return tuple(o.T for o in outs)
 
 
 # ---------------------------------------------------------------------- #
@@ -408,7 +458,8 @@ def _group_rows(sorted_seg: np.ndarray, gather_src: np.ndarray, g: int,
 
 
 def patch_sharded_plan(
-    splan: ShardedDBPlan, index: DBIndex, changed_owners: np.ndarray
+    splan: ShardedDBPlan, index: DBIndex, changed_owners: np.ndarray,
+    compact_garbage: float = 0.25,
 ) -> ShardedDBPlan:
     """Propagate one streamed batch into the device-resident plan shards.
 
@@ -420,11 +471,25 @@ def patch_sharded_plan(
     id) and patched the same way.  Falls back to a full rebuild — a
     recompile-sized event, like capacity growth — when the updater rebuilt
     outright, capacity is exceeded, or a group/row no longer fits.
+
+    Delete-dominated streams accumulate *garbage blocks* (zero-link blocks
+    whose member rows still occupy pass-1 tiles).  When the garbage
+    fraction crosses ``compact_garbage``, pass 1 is re-packed **per shard,
+    in place**: every pass-1 group whose block range holds a garbage or
+    appended block is re-laid-out from the index with the garbage blocks'
+    member rows dropped and scattered into its owning shard's existing
+    flat rows (groups without either are bit-identical and ship nothing).
+    Shapes never change (no retrace, unlike the single-host compaction
+    which rebuilds pass 1), garbage partials simply become identities
+    nobody gathers — correctness is untouched because a garbage block by
+    definition has no pass-2 link — and the freed tile slots keep future
+    appends below the rebuild threshold.
     """
     import jax.numpy as jnp
 
     ts = splan.ts
     stats = dict(splan.stats)
+    stats["version"] = stats.get("version", 0) + 1
 
     def rebuild():
         from repro.core.engine_jax import plan_from_dbindex
@@ -436,6 +501,7 @@ def patch_sharded_plan(
                                  headroom=splan.headroom)
         stats["rebuilds"] = stats.get("rebuilds", 0) + 1
         stats["last_patch_groups"] = -1
+        stats["last_compaction"] = False
         out = build_sharded_plan(base, splan.mesh, splan.axes,
                                  headroom=splan.headroom, stats=stats)
         out.stats["last_patch_bytes"] = out.size_bytes()
@@ -461,14 +527,51 @@ def patch_sharded_plan(
     member_block = np.asarray(index.member_block_ids, np.int64)
     link_owner = np.asarray(index.link_owner_ids, np.int64)
 
+    # per-shard pass-1 garbage compaction.  Only groups whose block range
+    # holds *fresh* garbage (rows to drop that are still on device) or an
+    # appended block differ from the device content — everything else is
+    # bit-identical and ships nothing, so the changed-tile-groups wire
+    # format survives compaction.  ``p1_compacted_ids`` records which
+    # garbage blocks' rows are already gone from the device shards: the
+    # index keeps its garbage until a rebuild, so without the ledger every
+    # later batch would re-ship the same compacted groups; it also keeps
+    # pass-1 patches on the garbage-free row set once any compaction
+    # happened (a plain re-lay-out would resurrect the dropped rows).
+    linked = index.linked_blocks_mask()
+    garbage = np.flatnonzero(~linked[: index.num_blocks]).astype(np.int64)
+    already = np.asarray(stats.get("p1_compacted_ids", []), np.int64)
+    fresh_garbage = np.setdiff1d(garbage, already)
+    # same threshold semantics as the single-host ``patch_plan_dbindex``:
+    # fraction >= threshold compacts (0.0 = compact whenever garbage exists)
+    over = index.garbage_block_fraction(linked) >= compact_garbage
+    compacting = over and fresh_garbage.size > 0
+    filter_garbage = compacting or already.size > 0
+    if filter_garbage:
+        keep = linked[member_block]
+        p1_seg_src = member_block[keep]
+        p1_gather_src = index.block_members[keep]
+    else:
+        p1_seg_src, p1_gather_src = member_block, index.block_members
+    dirty = (
+        np.concatenate([fresh_garbage, new_blocks]) if compacting
+        else new_blocks
+    )
+    p1_groups = np.unique(dirty // ts)
+    if filter_garbage and p1_groups.size:
+        shipped = garbage[np.isin(garbage // ts, p1_groups)]
+        stats["p1_compacted_ids"] = np.union1d(already, shipped).tolist()
+    if compacting:
+        stats["p1_compactions"] = stats.get("p1_compactions", 0) + 1
+    stats["last_compaction"] = bool(compacting)
+
     per_shard = np.zeros(splan.ndev, np.int64)
     patches: List[Tuple] = []  # (pass_name, flat positions, seg, gather)
     groups_patched = 0
-    for pass_id, changed_ids, seg_src, gather_src in (
-        (1, new_blocks, member_block, index.block_members),
-        (2, owners, link_owner, index.link_block),
+    for pass_id, groups, seg_src, gather_src in (
+        (1, p1_groups, p1_seg_src, p1_gather_src),
+        (2, np.unique(owners // ts), link_owner, index.link_block),
     ):
-        if changed_ids.size == 0:
+        if groups.size == 0:
             continue
         tiles = splan.group_tiles1 if pass_id == 1 else splan.group_tiles2
         shard_of = splan.group_shard1 if pass_id == 1 else splan.group_shard2
@@ -476,7 +579,7 @@ def patch_sharded_plan(
         rows_cap = splan.rows1 if pass_id == 1 else splan.rows2
         tm = splan.tm
         pos_chunks, seg_chunks, gather_chunks = [], [], []
-        for g in np.unique(changed_ids // ts):
+        for g in groups:
             span = int(tiles[g]) * tm
             rows = _group_rows(seg_src, gather_src, int(g), ts, span)
             if rows is None:  # group outgrew its tile capacity
@@ -573,6 +676,10 @@ class ShardedStreamState:
         tm: int = 512,
         ts: int = 512,
         plan_headroom: float = 0.5,
+        # below StalenessPolicy.max_garbage_ratio (0.5) on purpose: the
+        # in-place sharded compaction is shape-stable (no retrace), so it
+        # should fire well before a policy rebuild is due
+        compact_garbage: float = 0.25,
         use_device_bfs: Optional[bool] = None,
     ):
         from repro.core.windows import TopologicalWindow
@@ -586,6 +693,7 @@ class ShardedStreamState:
         self.policy = policy or StalenessPolicy()
         self.tm, self.ts = tm, ts
         self.plan_headroom = plan_headroom
+        self.compact_garbage = compact_garbage
         self.use_device_bfs = use_device_bfs
         self.index_kind = "dbindex"
         self.batches_applied = 0
@@ -614,6 +722,7 @@ class ShardedStreamState:
                 last_patch_groups=-1,
                 last_patch_per_shard=[],
                 rebuilds=self.plan.stats.get("rebuilds", 0) + 1,
+                version=self.plan.stats.get("version", 0) + 1,
             )
         self.batches_since_reorg = 0
         if not initial:
@@ -650,7 +759,8 @@ class ShardedStreamState:
             self._build()
             reorganized = True
         else:
-            self.plan = patch_sharded_plan(self.plan, idx2, changed)
+            self.plan = patch_sharded_plan(self.plan, idx2, changed,
+                                           compact_garbage=self.compact_garbage)
         t_plan = time.perf_counter() - t1
         # the patcher itself may have rebuilt (updater full rebuild, capacity
         # or ELL-width overflow) — that is a full-plan re-upload too, and
@@ -659,6 +769,10 @@ class ShardedStreamState:
         return {
             "batch_size": batch.size,
             "affected": int(np.asarray(changed).size),
+            # the exact owner set the serving-layer cache invalidates
+            "affected_owners": np.asarray(changed, np.int32),
+            "plan_version": int(self.plan.stats.get("version", 0)),
+            "compacted": bool(self.plan.stats.get("last_compaction", False)),
             "affected_per_shard": [int(o.size) for o in per_shard_owners],
             "patch_bytes": int(self.plan.stats.get("last_patch_bytes", 0)),
             "patch_bytes_per_shard": self.plan.stats.get(
@@ -703,12 +817,12 @@ class ShardedSession(Session):
     mesh: query planning selects sharded capabilities, every distinct window
     gets per-shard device plans, and streamed ``UpdateBatch``es propagate as
     per-shard tile-group patches.  Construct directly or via
-    ``Session(g, specs, mesh=mesh)`` — all other Session kwargs (policy,
-    headroom, method, pins, ...) keep their meaning, except
-    ``compact_garbage``: the sharded patch path has no mid-stream pass-1
-    compaction yet (ROADMAP open item), so garbage blocks are reclaimed
-    only by a :class:`~repro.core.streaming.StalenessPolicy` rebuild
-    (tune ``max_garbage_ratio`` for delete-heavy sharded streams).
+    ``Session(g, specs, mesh=mesh)`` — all Session kwargs (policy, headroom,
+    method, pins, ``compact_garbage``, ...) keep their meaning; on
+    delete-dominated streams the patcher re-packs pass-1 shards in place
+    once the garbage-block fraction crosses ``compact_garbage`` (shapes
+    stable — no retrace, no rebuild), so streams stay patch-only until a
+    :class:`~repro.core.streaming.StalenessPolicy` rebuild is truly due.
     """
 
     _sharded = True
@@ -723,11 +837,13 @@ class ShardedSession(Session):
         if not sharded:  # e.g. explicitly pinned host / iindex groups
             return super()._make_state(window, kind, device, sharded)
         cfg = self._state_cfg
+        cg = cfg["compact_garbage"]
         return ShardedStreamState(
             self.graph, window, self.mesh, cfg["axis"],
             method=cfg["method"], policy=cfg["policy"],
             tm=cfg["tm"], ts=cfg["ts"],
             plan_headroom=cfg["plan_headroom"],
+            compact_garbage=0.25 if cg is None else cg,
             use_device_bfs=cfg["use_device_bfs"],
         )
 
@@ -744,14 +860,11 @@ class ShardedSession(Session):
         return index, plan
 
     # ------------------------------------------------------------------ #
-    def run_many(self, values_batch) -> List[np.ndarray]:
-        """Serving traffic across the mesh: the sharded fused query is jitted
-        per shape, so the batch loop replays one compiled executable per
-        group (no vmap-over-shard_map dependency)."""
-        vb = np.asarray(values_batch)
-        assert vb.ndim == 2, "values_batch must be [B, n]"
-        rows = [self.run(values=v) for v in vb]
-        return [
-            np.stack([np.asarray(r[i]) for r in rows])
-            for i in range(len(self.compiled.specs))
-        ]
+    def _exec_group_many(self, grp, index, plan, vb, graph=None):
+        """Serving traffic across the mesh: sharded groups ride the batched
+        values axis of the shard-local fn — one launch for the whole
+        [B, n] bucket instead of one executable replay per row."""
+        if isinstance(plan, ShardedDBPlan):
+            outs = query_sharded_many(plan, vb, grp.aggs)
+            return {a: np.asarray(o) for a, o in zip(grp.aggs, outs)}
+        return super()._exec_group_many(grp, index, plan, vb, graph=graph)

@@ -1,3 +1,16 @@
-"""Serving: batched request engine over prefill/decode step functions."""
+"""Serving layer: batched LM request engine + window-analytics service.
+
+* :class:`~repro.serve.engine.ServeEngine` — continuous-batching-lite over
+  prefill/decode step functions (the LM side of the repo).
+* :class:`~repro.serve.window_service.WindowService` — micro-batched,
+  versioned, cached front end over a window-analytics
+  :class:`~repro.core.api.Session` (point-vertex + full-graph traffic
+  against a live update stream).
+"""
 
 from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.window_service import (  # noqa: F401
+    AffectedOwnerCache,
+    Ticket,
+    WindowService,
+)

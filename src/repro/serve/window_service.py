@@ -1,0 +1,412 @@
+"""Window-analytics serving layer: scheduler + versioned reads + result cache.
+
+The paper's index makes ONE window query ~1e4x faster; this layer turns
+that into a *service*: many concurrent callers issuing point-vertex and
+full-graph reads against a live update stream, without blocking reads on
+writes and without ever recompiling the fused executables.  It fronts a
+:class:`repro.core.api.Session` (or ``Session(mesh=...)`` for a sharded
+runtime) with three mechanisms:
+
+* **Micro-batching scheduler** — requests queue in :meth:`WindowService.
+  submit` and :meth:`~WindowService.flush` coalesces them per (window,
+  attr) plan group into padded ``run_many`` launches at a fixed batch
+  bucket.  Same scale posture as :class:`repro.serve.engine.ServeEngine`'s
+  slot design: the [bucket, n] batch never reshapes, so the vmapped fused
+  executable compiles once and every flush replays it (zero retraces —
+  ``repro.core.api.run_many_cache_size`` is the counter).
+
+* **Versioned snapshot reads** — session state (graph, indices, plans) is
+  immutable and :meth:`Session.snapshot` captures it atomically.  The
+  service keeps one *active* :class:`~repro.core.api.SessionView` for
+  readers; :meth:`~WindowService.update` streams batches into the write
+  head (building version v+1 artifacts by incremental patching) while
+  reads keep answering at the pinned version v, and
+  :meth:`~WindowService.flip` publishes v+1 with one reference swap —
+  reader-side MVCC, so no query ever observes a half-patched plan.
+
+* **Affected-owner result cache** — :class:`AffectedOwnerCache` holds one
+  full result vector per (window, agg, attr) at vertex granularity.  An
+  update invalidates ONLY the affected-owner set the batched index
+  maintenance already computed (paper §4.3's locality: every other
+  vertex's window provably did not change), so steady-state point traffic
+  is an O(1) hit and an update costs ~|affected| invalidations instead of
+  a full cache flush.  The first post-update miss refreshes the whole
+  group vector with one fused launch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.api import QuerySpec, Session
+
+
+# ---------------------------------------------------------------------- #
+#  Tickets
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass
+class Ticket:
+    """One submitted request, completed by the flush that serves it.
+
+    ``result`` is a scalar for point reads ([n] vector for full-graph
+    reads); ``version`` is the snapshot version the answer was computed at
+    (the pinned read version — not necessarily the write head).
+    """
+
+    rid: int
+    spec_index: int
+    vertex: Optional[int]
+    values: Optional[np.ndarray]
+    submitted_s: float
+    result: Optional[object] = None
+    version: Optional[int] = None
+    cache_hit: bool = False
+    latency_s: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+
+# ---------------------------------------------------------------------- #
+#  Affected-owner result cache
+# ---------------------------------------------------------------------- #
+class AffectedOwnerCache:
+    """Vertex-level result cache invalidated by affected-owner sets.
+
+    One entry per compiled plan group: the fused query's full result
+    vectors (``{agg: [n]}``) plus a per-vertex validity mask.
+    :meth:`on_update` clears ONLY the affected owners' bits — their
+    windows are the only ones whose membership changed, so every other
+    cached aggregate is still exact; groups without incremental state
+    (no index to bound the blast radius) are dropped wholesale.
+
+    Reads and writes are version-gated: entries are valid at
+    :attr:`version` (advanced by ``on_update``), and a reader or writer
+    pinned at any other version bypasses the cache instead of polluting
+    it — that is what lets the serving layer keep reads pinned behind the
+    write head (``auto_flip=False``) without ever serving stale hits.
+    """
+
+    def __init__(self):
+        self.version = 0
+        self._entries: Dict[int, Dict] = {}
+        self.hits = 0
+        self.misses = 0
+        self.invalidated = 0  # per-vertex invalidations applied
+        self.full_drops = 0  # whole entries dropped (stateless groups)
+
+    def bind(self, session) -> None:
+        """Called by :meth:`Session.attach_cache`."""
+        self.version = session.version
+
+    # ------------------------------- reads ---------------------------- #
+    def get_group(self, gi: int, version: int):
+        """Full vectors of group ``gi`` if entirely valid at ``version``."""
+        e = self._entries.get(gi)
+        if version != self.version or e is None or not e["valid_all"]:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return {a: v.copy() for a, v in e["vectors"].items()}
+
+    def get_point(self, gi: int, agg: str, vertex: int, version: int):
+        """Cached aggregate of one vertex, or None on miss/stale.
+
+        Not counted in :attr:`hits`/:attr:`misses` — those track
+        full-vector group reads (refresh dedup); a point miss always falls
+        through to a group read, so counting both would double-book it.
+        The service keeps its own point-level counters.
+        """
+        e = self._entries.get(gi)
+        if version != self.version or e is None or not e["valid"][vertex]:
+            return None
+        return e["vectors"][agg][vertex]
+
+    # ------------------------------- writes --------------------------- #
+    def put_group(self, gi: int, version: int, vectors: Dict) -> None:
+        if version != self.version:
+            return  # writer pinned behind the head: do not pollute
+        vecs = {a: np.array(v) for a, v in vectors.items()}
+        n = len(next(iter(vecs.values())))
+        self._entries[gi] = {
+            "vectors": vecs,
+            "valid": np.ones(n, dtype=bool),
+            "valid_all": True,
+        }
+
+    def on_update(self, version: int, owner_map: Dict) -> None:
+        """Advance to ``version``.  ``owner_map[gi]`` is the group's
+        affected-owner array, or None when the group has no incremental
+        state (nothing bounds its staleness — drop the entry)."""
+        for gi, owners in owner_map.items():
+            e = self._entries.get(gi)
+            if e is None:
+                continue
+            if owners is None:
+                del self._entries[gi]
+                self.full_drops += 1
+                continue
+            owners = np.asarray(owners, np.int64)
+            e["valid"][owners] = False
+            e["valid_all"] = bool(e["valid"].all())
+            self.invalidated += int(owners.size)
+        self.version = version
+
+    # ------------------------------------------------------------------ #
+    def valid_fraction(self, gi: int) -> float:
+        e = self._entries.get(gi)
+        return float(e["valid"].mean()) if e is not None else 0.0
+
+    @property
+    def stats(self) -> Dict:
+        total = self.hits + self.misses
+        return {
+            "version": self.version,
+            "entries": len(self._entries),
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / max(total, 1),
+            "invalidated": self.invalidated,
+            "full_drops": self.full_drops,
+        }
+
+
+# ---------------------------------------------------------------------- #
+#  WindowService
+# ---------------------------------------------------------------------- #
+class WindowService:
+    """Micro-batched, versioned, cached front end over a Session.
+
+    ``bucket`` fixes the padded batch size of coalesced explicit-values
+    launches (the executable-reuse contract); ``auto_flip`` publishes every
+    update to readers immediately (turn it off to pin readers at a version
+    while a burst of updates lands, then :meth:`flip` once).
+
+    Request model: :meth:`submit` enqueues and returns a :class:`Ticket`;
+    :meth:`flush` serves everything pending against the active snapshot;
+    :meth:`query` is submit+flush for one-call convenience.  A request
+    names a compiled spec (index or the ``QuerySpec`` itself), optionally a
+    ``vertex`` (point read) and optionally an explicit ``values`` vector
+    (evaluate the spec's window under substitute attribute values — the
+    classic serving pattern where each caller brings its own features).
+    """
+
+    def __init__(self, session: Session, bucket: int = 8,
+                 auto_flip: bool = True, use_cache: bool = True):
+        self.session = session
+        self.bucket = int(bucket)
+        assert self.bucket >= 1
+        self.auto_flip = auto_flip
+        self.cache = AffectedOwnerCache() if use_cache else None
+        if self.cache is not None:
+            session.attach_cache(self.cache)
+        self._active = session.snapshot()
+        self._pending: List[Ticket] = []
+        self._rid = 0
+        self._spec_index = {s: i for i, s in enumerate(session.compiled.specs)}
+        # telemetry
+        self.flushes = 0
+        self.batched_launches = 0
+        self.padded_rows = 0
+        self.served = 0
+        self.point_hits = 0
+        self.point_misses = 0
+
+    # ------------------------------------------------------------------ #
+    @property
+    def version(self) -> int:
+        """The pinned read version (what queries answer at)."""
+        return self._active.version
+
+    @property
+    def head_version(self) -> int:
+        """The write head (latest applied update)."""
+        return self.session.version
+
+    # ------------------------------------------------------------------ #
+    def _resolve(self, spec) -> int:
+        if isinstance(spec, (int, np.integer)):
+            if not 0 <= int(spec) < len(self.session.compiled.specs):
+                raise IndexError(f"spec index {spec} out of range")
+            return int(spec)
+        if not isinstance(spec, QuerySpec):
+            raise TypeError(f"spec must be an int index or QuerySpec, "
+                            f"got {spec!r}")
+        if spec not in self._spec_index:
+            raise KeyError(
+                f"{spec} is not compiled into this session; compiled specs: "
+                f"{list(self.session.compiled.specs)}"
+            )
+        return self._spec_index[spec]
+
+    def submit(self, spec, vertex: Optional[int] = None,
+               values=None) -> Ticket:
+        """Enqueue one request; returns its (unfilled) :class:`Ticket`.
+
+        Everything is validated here, not at flush time — one malformed
+        request must fail its own submit, never poison a whole coalesced
+        flush of other callers' tickets."""
+        si = self._resolve(spec)
+        n = self.session.graph.n
+        if vertex is not None:
+            vertex = int(vertex)
+            if not 0 <= vertex < n:
+                raise IndexError(f"vertex {vertex} out of range [0, {n})")
+        if values is not None:
+            # f32 conversion here: a non-numeric vector must fail its own
+            # submit, not blow up mid-flush (the executors cast to f32
+            # anyway, so results are unchanged).  np.array (not asarray)
+            # so a caller reusing one scratch buffer between submit and
+            # flush cannot mutate an already-queued request.
+            values = np.array(values, np.float32)
+            if values.shape != (n,):
+                raise ValueError(
+                    f"per-request values must have shape ({n},), "
+                    f"got {values.shape}"
+                )
+        t = Ticket(
+            rid=self._rid, spec_index=si, vertex=vertex,
+            values=values, submitted_s=time.perf_counter(),
+        )
+        self._rid += 1
+        self._pending.append(t)
+        return t
+
+    def query(self, spec, vertex: Optional[int] = None, values=None):
+        """Submit + flush; returns the result directly."""
+        t = self.submit(spec, vertex=vertex, values=values)
+        self.flush()
+        return t.result
+
+    # ------------------------------------------------------------------ #
+    def _serve_snapshot(self, view, gi: int, agg: str,
+                        vertex: Optional[int], memo: Dict):
+        """Current-attribute read through the affected-owner cache.
+
+        ``memo`` holds group vectors already computed *this flush*: when
+        the versioned cache cannot serve (``use_cache=False``, or a reader
+        pinned behind the write head bypassing it), N point reads of one
+        group still cost one fused launch, not N.
+        """
+        if self.cache is not None and vertex is not None:
+            hit = self.cache.get_point(gi, agg, vertex, view.version)
+            if hit is not None:
+                self.point_hits += 1
+                return hit, True
+            self.point_misses += 1
+        # miss (or full read): one fused launch refreshes the whole group
+        # vector — in the cache (cache-aware run_group) and the flush memo
+        out = memo.get(gi)
+        if out is None:
+            out = memo[gi] = view.run_group(gi)
+        vec = out[agg]
+        # full reads copy at the ticket boundary: several tickets may share
+        # one memo/cache vector, and a caller mutating its result must not
+        # corrupt another caller's answer
+        return (vec[vertex] if vertex is not None else vec.copy()), False
+
+    def flush(self) -> List[Ticket]:
+        """Serve every pending request against the active snapshot.
+
+        Current-state requests (``values=None``) ride the affected-owner
+        cache — point reads are O(1) hits in steady state.  Explicit-values
+        requests coalesce per plan group into ``ceil(B / bucket)`` padded
+        ``run_many`` launches, so requests for *different* aggregates of
+        one (window, attr) group share a launch (they are channels of the
+        same fused plan) and the [bucket, n] executable never retraces.
+        """
+        pending, self._pending = self._pending, []
+        if not pending:
+            return pending
+        view = self._active
+        groups = self.session.compiled.groups
+        slots = self.session.compiled.spec_slots
+        by_group: Dict[int, List[Ticket]] = {}
+        memo: Dict[int, Dict] = {}  # group vectors computed this flush
+        for t in pending:
+            gi, ai = slots[t.spec_index]
+            if t.values is None:
+                t.result, t.cache_hit = self._serve_snapshot(
+                    view, gi, groups[gi].aggs[ai], t.vertex, memo
+                )
+                t.version = view.version
+            else:
+                by_group.setdefault(gi, []).append(t)
+        n = view.graph.n
+        for gi, reqs in by_group.items():
+            grp = groups[gi]
+            # padding buys executable reuse only on the jitted batched
+            # device paths; a host group would pay one full sequential
+            # query per pad row for nothing
+            pad = (
+                self.session.registry.capability(grp.engine).device
+                and view.artifacts[gi][1] is not None
+            )
+            for lo in range(0, len(reqs), self.bucket):
+                chunk = reqs[lo: lo + self.bucket]
+                rows_n = self.bucket if pad else len(chunk)
+                vb = np.zeros((rows_n, n), np.float32)  # fixed bucket
+                for row, t in enumerate(chunk):
+                    vb[row] = t.values
+                out = view.run_group_many(gi, vb)
+                self.batched_launches += 1
+                self.padded_rows += rows_n - len(chunk)
+                for row, t in enumerate(chunk):
+                    _, ai = slots[t.spec_index]
+                    vec = out[grp.aggs[ai]][row]
+                    t.result = (vec[t.vertex] if t.vertex is not None
+                                else np.asarray(vec))
+                    t.version = view.version
+        now = time.perf_counter()
+        for t in pending:
+            t.latency_s = now - t.submitted_s
+        self.flushes += 1
+        self.served += len(pending)
+        return pending
+
+    # ------------------------------------------------------------------ #
+    def update(self, batch) -> Dict:
+        """Stream one UpdateBatch into the write head.
+
+        Readers keep the active snapshot until :meth:`flip` (automatic
+        when ``auto_flip``).  The session invalidates the attached cache
+        for exactly the batch's affected-owner sets; version gating means
+        a reader still pinned behind the head simply bypasses the cache
+        rather than ever seeing version-v+1 data at version v.
+        """
+        reports = self.session.update(batch)
+        if self.auto_flip:
+            self.flip()
+        return reports
+
+    def flip(self) -> int:
+        """Atomically publish the newest version to readers: one reference
+        swap of an immutable snapshot (no reader ever holds a half-patched
+        plan — it holds either the old view or the new one)."""
+        self._active = self.session.snapshot()
+        return self._active.version
+
+    # ------------------------------------------------------------------ #
+    @property
+    def stats(self) -> Dict:
+        point = self.point_hits + self.point_misses
+        out = {
+            "served": self.served,
+            "flushes": self.flushes,
+            "batched_launches": self.batched_launches,
+            "padded_rows": self.padded_rows,
+            "bucket": self.bucket,
+            "active_version": self._active.version,
+            "head_version": self.session.version,
+            "point_hits": self.point_hits,
+            "point_misses": self.point_misses,
+            "point_hit_rate": self.point_hits / max(point, 1),
+        }
+        if self.cache is not None:
+            out["cache"] = self.cache.stats
+        return out

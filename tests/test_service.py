@@ -1,0 +1,443 @@
+"""Window-analytics serving layer (ISSUE 4).
+
+Covers the tentpole contracts:
+
+* **bit-identity** — every served result (cached point reads after K
+  interleaved update batches, coalesced explicit-values launches, pinned
+  snapshot reads) is bit-identical to a fresh, un-cached ``Session.run()``
+  oracle at the same version.  Attribute values are small integers, so
+  every f32 monoid reduction is exact regardless of evaluation order —
+  patched plans, fresh plans, vmapped and sharded executions must agree
+  bit-for-bit, not just approximately;
+* **scheduler executable reuse** — padded fixed-bucket launches never
+  recompile across >= 20 flushes of varying request counts;
+* **versioned snapshot reads** — with ``auto_flip=False`` readers stay
+  pinned (bitwise) at their version while updates land, and ``flip()``
+  publishes the head;
+* **affected-owner cache** — an update invalidates exactly the affected
+  owners; a vertex whose window overlaps the affected boundary (neighbor
+  of an owner) stays cached AND bit-correct;
+* **sharded serving** — ``ShardedSession.run_many`` serves a [B, n] bucket
+  in one launch (no per-row executable replay), and the per-shard pass-1
+  compaction keeps delete-dominated streams patch-only (tier-1 runs the
+  full code path on a 1-device mesh; the multi-device variant lives behind
+  the ``sharded`` marker).
+"""
+
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import api  # noqa: E402
+from repro.core.api import QuerySpec, Session  # noqa: E402
+from repro.core.query import brute_force  # noqa: E402
+from repro.core.streaming import StalenessPolicy  # noqa: E402
+from repro.core.updates import UpdateBatch  # noqa: E402
+from repro.graphs.generators import erdos_renyi  # noqa: E402
+from repro.serve import WindowService  # noqa: E402
+
+from test_updates import mixed  # noqa: E402  (stream helpers)
+
+ALL_AGGS = ("sum", "count", "min", "avg")
+
+
+def int_graph(n, deg, seed, lo=0, hi=50):
+    """Graph with small-integer 'val' attrs: every monoid reduce is exact
+    in f32, so differently-shaped plans must agree bit-for-bit."""
+    g = erdos_renyi(n, deg, directed=False, seed=seed)
+    vals = np.random.default_rng(seed + 1).integers(lo, hi, g.n)
+    return g.with_attr("val", vals.astype(np.float64))
+
+
+def int_vec(rng, n, lo=0, hi=50):
+    return rng.integers(lo, hi, n).astype(np.float64)
+
+
+# --------------------- differential cache correctness ------------------ #
+def test_served_bit_identical_after_interleaved_updates():
+    """The satellite differential test: a served point query after K
+    interleaved update batches is bit-identical to a fresh un-cached
+    ``Session.run()`` at the same version — including the adversarial
+    boundary case where an update touches a vertex whose cached window
+    overlaps the affected-set boundary."""
+    g = int_graph(300, 4.0, seed=7)
+    specs = [QuerySpec(("khop", 1), a) for a in ALL_AGGS] + [
+        QuerySpec(("khop", 2), "sum")
+    ]
+    sess = Session(g, specs, device=True, use_pallas=False, plan_headroom=1.0)
+    svc = WindowService(sess, bucket=4)
+    gi1 = sess.compiled.spec_slots[0][0]  # the fused khop[1] group
+    rng = np.random.default_rng(8)
+    sample = rng.integers(0, g.n, 12)
+    boundary_checked = 0
+    for step in range(6):
+        # pre-populate the cache so the update's invalidation is observable
+        for si in range(len(specs)):
+            svc.query(si)
+        reports = svc.update(mixed(svc.session.graph, rng, 4, 2))
+        owners = reports["khop[1]/dbindex"]["affected_owners"]
+        owners_set = set(map(int, owners))
+
+        # adversarial boundary: a neighbor of an affected owner is OUTSIDE
+        # the affected set — its window contains affected vertices but its
+        # own membership did not change, so its cache entry must survive
+        # the invalidation and still be bit-correct
+        g_cur = svc.session.graph
+        v_out = next(
+            (int(u) for o in owners for u in g_cur.out_neighbors(int(o))
+             if int(u) not in owners_set),
+            None,
+        )
+        entry = svc.cache._entries.get(gi1)
+        if v_out is not None and entry is not None and owners.size:
+            assert entry["valid"][v_out], "boundary vertex wrongly invalidated"
+            assert not entry["valid"][int(owners[0])], "owner not invalidated"
+            boundary_checked += 1
+
+        # fresh, un-cached oracle at the served version
+        fresh = Session(g_cur, specs, device=True, use_pallas=False)
+        refs = [np.asarray(r) for r in fresh.run()]
+        check = list(sample) + ([v_out, int(owners[0])] if v_out is not None
+                                and owners.size else [])
+        for si in range(len(specs)):
+            for v in check:
+                t = svc.submit(si, vertex=int(v))
+                svc.flush()
+                assert t.result == refs[si][v], (step, si, v)
+                assert t.version == svc.session.version
+        if v_out is not None:
+            t = svc.submit(0, vertex=v_out)
+            svc.flush()
+            assert t.cache_hit  # boundary vertex served straight from cache
+    assert boundary_checked > 0, "adversarial boundary case never exercised"
+    assert svc.stats["point_hit_rate"] > 0.5  # steady-state traffic hits
+
+
+def test_cache_invalidates_only_affected():
+    g = int_graph(250, 4.0, seed=11)
+    w = ("khop", 1)
+    sess = Session(g, [QuerySpec(w, "sum")], device=True, use_pallas=False,
+                   plan_headroom=1.0)
+    svc = WindowService(sess, bucket=2)
+    svc.query(0)  # populate
+    rng = np.random.default_rng(12)
+    rep = next(iter(svc.update(mixed(svc.session.graph, rng, 3, 1)).values()))
+    owners = rep["affected_owners"]
+    assert 0 < owners.size < g.n
+    assert svc.cache.invalidated == owners.size
+    gi = sess.compiled.spec_slots[0][0]
+    assert svc.cache.valid_fraction(gi) == pytest.approx(1 - owners.size / g.n)
+    # a point read on an unaffected vertex is served without any launch
+    entry = svc.cache._entries[gi]
+    v = int(np.flatnonzero(entry["valid"])[0])
+    misses0 = svc.point_misses
+    svc.query(0, vertex=v)
+    assert svc.point_misses == misses0
+    # version bookkeeping rode along
+    assert rep["version"] == sess.version == svc.cache.version
+    assert rep["plan_version"] >= 1
+
+
+# ----------------------- scheduler: fixed-bucket ------------------------ #
+def test_scheduler_fixed_bucket_zero_recompiles():
+    """>= 20 flushes of varying request counts (point + full, two specs)
+    coalesce into bucket-padded launches that never recompile after
+    warmup, and every answer is bit-identical to a direct Session.run."""
+    g = int_graph(200, 3.0, seed=21)
+    specs = [QuerySpec(("khop", 1), "sum"), QuerySpec(("khop", 1), "min")]
+    sess = Session(g, specs, device=True, use_pallas=False)
+    svc = WindowService(sess, bucket=4)
+    rng = np.random.default_rng(22)
+    # warmup compiles the [bucket, n] executable once
+    svc.submit(0, values=int_vec(rng, g.n))
+    svc.flush()
+    cache0 = api.run_many_cache_size()
+    assert cache0 > 0
+    flushes0 = svc.flushes
+    for f in range(21):
+        k = 1 + (f % 7)  # 1..7 requests: padding keeps the shape fixed
+        tickets = []
+        for j in range(k):
+            tickets.append(svc.submit(
+                (f + j) % 2,
+                vertex=None if j % 3 == 0 else int(rng.integers(g.n)),
+                values=int_vec(rng, g.n),
+            ))
+        svc.flush()
+        if f % 5 == 0:  # spot-check bitwise against the un-batched path
+            for t in tickets:
+                ref = np.asarray(sess.run(values=t.values)[t.spec_index])
+                got = t.result if t.vertex is None else np.asarray([t.result])
+                want = ref if t.vertex is None else ref[[t.vertex]]
+                assert np.array_equal(np.atleast_1d(got), want), (f, t.rid)
+    assert svc.flushes - flushes0 >= 21
+    assert api.run_many_cache_size() == cache0  # zero recompiles
+    assert svc.batched_launches >= 21
+    assert svc.padded_rows > 0  # partial buckets really were padded
+
+
+def test_submit_validates_without_poisoning_the_flush():
+    """A malformed request fails its own submit(); queued tickets from
+    other callers are unaffected and still served by the next flush."""
+    g = int_graph(150, 3.0, seed=25)
+    sess = Session(g, [QuerySpec(("khop", 1), "sum")], device=True,
+                   use_pallas=False)
+    svc = WindowService(sess, bucket=2)
+    ok = svc.submit(0, vertex=3)
+    with pytest.raises(IndexError, match="out of range"):
+        svc.submit(0, vertex=g.n)  # would wrap/raise only at flush time
+    with pytest.raises(IndexError, match="out of range"):
+        svc.submit(0, vertex=-1)  # numpy would silently wrap to n-1
+    with pytest.raises(ValueError, match="shape"):
+        svc.submit(0, values=np.ones(g.n + 5))
+    with pytest.raises(KeyError):
+        svc.submit(QuerySpec(("khop", 2), "sum"))  # not compiled
+    svc.flush()
+    assert ok.done
+    ref = brute_force(g, sess.compiled.groups[0].window, g.attrs["val"], "sum")
+    assert ok.result == np.float32(ref[3])
+
+
+def test_host_groups_skip_bucket_padding():
+    """Padding buys executable reuse only on jitted device paths; a host
+    group must not pay one full sequential query per pad row."""
+    g = int_graph(120, 3.0, seed=26)
+    sess = Session(g, [QuerySpec(("khop", 1), "sum", engine="bitset")],
+                   use_pallas=False)
+    svc = WindowService(sess, bucket=8)
+    rng = np.random.default_rng(27)
+    vals = int_vec(rng, g.n)
+    t = svc.submit(0, vertex=4, values=vals)
+    svc.flush()
+    assert svc.padded_rows == 0  # 1-row batch, not 8
+    ref = brute_force(g, sess.compiled.groups[0].window, vals, "sum")
+    assert np.allclose(t.result, ref[4])
+    # non-numeric values fail their own submit, not the shared flush
+    with pytest.raises((TypeError, ValueError)):
+        svc.submit(0, values=np.array(["x"] * g.n))
+
+
+def test_pinned_point_reads_share_one_launch_per_flush():
+    """With readers pinned behind the write head the versioned cache is
+    bypassed — N point reads of one group in a flush must still cost one
+    fused launch (flush-local memo), not N."""
+    g = int_graph(150, 3.0, seed=27)
+    sess = Session(g, [QuerySpec(("khop", 1), "sum")], device=True,
+                   use_pallas=False, plan_headroom=1.0)
+    svc = WindowService(sess, bucket=2, auto_flip=False)
+    rng = np.random.default_rng(28)
+    svc.update(mixed(svc.session.graph, rng, 3, 1))  # head moves, reader pinned
+    assert svc.version < svc.head_version
+    calls = []
+    orig = sess._exec_group
+    sess._exec_group = lambda *a, **k: calls.append(1) or orig(*a, **k)
+    try:
+        tickets = [svc.submit(0, vertex=v) for v in (1, 5, 9, 13, 21, 33)]
+        svc.flush()
+    finally:
+        sess._exec_group = orig
+    assert len(calls) == 1, f"{len(calls)} launches for one pinned flush"
+    # and the pinned answers are the v0 answers (g is the v0 graph)
+    ref = brute_force(g, sess.compiled.groups[0].window, g.attrs["val"], "sum")
+    for t, v in zip(tickets, (1, 5, 9, 13, 21, 33)):
+        assert t.version == 0 and t.result == np.float32(ref[v])
+
+
+# -------------------- versioned snapshot reads -------------------------- #
+def test_versioned_snapshot_pinned_reads():
+    g = int_graph(250, 4.0, seed=31)
+    specs = [QuerySpec(("khop", 1), "sum")]
+    sess = Session(g, specs, device=True, use_pallas=False, plan_headroom=1.0)
+    svc = WindowService(sess, bucket=2, auto_flip=False)
+    base = svc.query(0)
+    assert svc.version == svc.head_version == 0
+    rng = np.random.default_rng(32)
+    svc.update(mixed(svc.session.graph, rng, 4, 2))
+    # the write head advanced; readers stay pinned
+    assert svc.head_version == 1 and svc.version == 0
+    pinned = svc.query(0)
+    assert np.array_equal(pinned, base)  # bitwise: same artifacts, same result
+    # flip publishes v1 atomically; answers now match a fresh v1 oracle
+    assert svc.flip() == 1 and svc.version == 1
+    fresh = Session(svc.session.graph, specs, device=True, use_pallas=False)
+    assert np.array_equal(svc.query(0), np.asarray(fresh.run()[0]))
+
+
+def test_session_snapshot_is_immutable_under_updates():
+    """Session-level hook: a snapshot keeps answering at its version while
+    update() patches the next one (the MVCC property the service rides)."""
+    g = int_graph(250, 4.0, seed=41)
+    sess = Session(g, [QuerySpec(("khop", 1), "sum")], device=True,
+                   use_pallas=False, plan_headroom=1.0)
+    view = sess.snapshot()
+    before = np.asarray(view.run()[0])
+    rng = np.random.default_rng(42)
+    sess.update(mixed(sess.graph, rng, 5, 2))
+    assert sess.version == 1 and view.version == 0
+    assert np.array_equal(np.asarray(view.run()[0]), before)
+    # the head moved on
+    head = np.asarray(sess.run()[0])
+    ref = brute_force(sess.graph, sess.compiled.groups[0].window,
+                      sess.graph.attrs["val"], "sum")
+    assert np.array_equal(head, ref.astype(np.float32))
+
+
+# ------------------- sharded serving (1-device mesh) -------------------- #
+def test_sharded_run_many_single_launch():
+    """ShardedSession.run_many rides the batched values axis: one launch
+    per group for the whole [B, n] bucket, no recompiles on replay, rows
+    bit-identical to per-row run()."""
+    from repro.distributed import window_runtime as wr
+
+    g = int_graph(250, 3.0, seed=51)
+    specs = [QuerySpec(("khop", 1), a) for a in ("sum", "min", "avg")]
+    mesh = jax.make_mesh((1,), ("data",))
+    sess = Session(g, specs, mesh=mesh, plan_headroom=1.0)
+    rng = np.random.default_rng(52)
+    vb = np.stack([int_vec(rng, g.n) for _ in range(5)])
+    outs = sess.run_many(vb)  # warm the [n, B] executable
+    per_row = [np.asarray(sess.run(values=v)) for v in vb]  # warm [n]
+    c0 = wr.query_cache_size()
+    outs = sess.run_many(vb)
+    assert wr.query_cache_size() == c0  # replay, no recompile
+    for si in range(len(specs)):
+        assert outs[si].shape == (5, g.n)
+        for b in range(5):
+            assert np.array_equal(outs[si][b], per_row[b][si]), (si, b)
+    # the service coalesces sharded traffic the same way
+    svc = WindowService(sess, bucket=4)
+    t = svc.submit(0, vertex=3, values=vb[0])
+    svc.flush()
+    assert t.result == per_row[0][0][3]
+
+
+def test_sharded_patch_compaction_keeps_stream_patch_only():
+    """Delete-dominated sharded stream: once the garbage-block fraction
+    crosses ``compact_garbage`` the patcher re-packs pass-1 shards in
+    place (no rebuild, no recompile), and answers stay exact."""
+    from repro.distributed import window_runtime as wr
+
+    g = int_graph(400, 5.0, seed=61)
+    w = ("khop", 1)
+    mesh = jax.make_mesh((1,), ("data",))
+    sess = Session(
+        g, [QuerySpec(w, "sum"), QuerySpec(w, "count")], mesh=mesh,
+        plan_headroom=1.0, compact_garbage=0.02,
+        policy=StalenessPolicy(max_link_ratio=1e9, max_block_ratio=1e9,
+                               max_garbage_ratio=0.99),
+    )
+    sess.run()
+    cache0 = wr.query_cache_size()
+    rng = np.random.default_rng(62)
+    state = next(iter(sess._states.values()))
+    for step in range(8):
+        g_cur = sess.graph
+        ei = rng.choice(g_cur.n_edges, 5, replace=False)
+        rep = next(iter(sess.update(
+            UpdateBatch.deletes(g_cur.src[ei], g_cur.dst[ei])).values()))
+        assert not rep["plan_rebuilt"], (step, rep)
+        assert 0 < rep["patch_bytes"] < rep["full_plan_bytes"]
+        got = np.asarray(sess.run()[0])
+        ref = brute_force(sess.graph, state.window,
+                          sess.graph.attrs["val"], "sum")
+        assert np.array_equal(got, ref.astype(np.float32)), step
+    assert state.plan.stats.get("p1_compactions", 0) >= 1
+    assert state.plan.stats.get("rebuilds", 0) == 0
+    assert wr.query_cache_size() == cache0  # compaction never retraced
+    assert state.plan.stats["version"] == 8  # one patch per batch
+    # the ledger of device-dropped garbage rows exists, so later batches
+    # only ship groups with FRESH garbage instead of recompacting all
+    assert len(state.plan.stats["p1_compacted_ids"]) > 0
+    # a batch touching no blocks ships no pass-1 groups despite the index
+    # still being above the garbage threshold (ledger prevents re-shipping)
+    from repro.distributed.window_runtime import patch_sharded_plan
+
+    before = state.plan.stats.get("p1_compactions", 0)
+    replayed = patch_sharded_plan(state.plan, state.index,
+                                  np.empty(0, np.int64),
+                                  compact_garbage=0.02)
+    assert replayed.stats.get("p1_compactions", 0) == before
+
+
+def test_sharded_compaction_default_fires_before_policy_rebuild():
+    """The sharded compaction is shape-stable, so its default threshold
+    must sit BELOW the StalenessPolicy garbage rebuild threshold —
+    otherwise the policy's full rebuild always wins and the patch-only
+    promise of per-shard compaction is unreachable with default kwargs."""
+    import inspect
+
+    from repro.distributed.window_runtime import (
+        ShardedStreamState,
+        patch_sharded_plan,
+    )
+
+    policy_thresh = StalenessPolicy().max_garbage_ratio
+    for fn in (ShardedStreamState.__init__, patch_sharded_plan):
+        default = inspect.signature(fn).parameters["compact_garbage"].default
+        assert default < policy_thresh, fn
+
+
+# ------------------- sharded serving (multi-device) --------------------- #
+@pytest.mark.sharded
+def test_service_over_sharded_session_multi_device():
+    """2-shard mesh (subprocess — device count must be set before jax
+    initializes): the service's coalesced bucket rides ONE sharded launch,
+    point reads hit the affected-owner cache across updates, and every
+    answer matches the oracle."""
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent("""
+            import numpy as np, jax
+            from repro.core.api import QuerySpec, Session
+            from repro.core.query import brute_force
+            from repro.core.updates import UpdateBatch
+            from repro.distributed import window_runtime as wr
+            from repro.graphs.generators import erdos_renyi
+            from repro.serve import WindowService
+
+            mesh = jax.make_mesh((2,), ("data",))
+            rng = np.random.default_rng(71)
+            g = erdos_renyi(150, 3.0, directed=False, seed=71)
+            g = g.with_attr("val", rng.integers(0, 50, g.n).astype(np.float64))
+            specs = [QuerySpec(("khop", 1), a) for a in ("sum", "min")]
+            sess = Session(g, specs, mesh=mesh, plan_headroom=1.0)
+            svc = WindowService(sess, bucket=4)
+
+            vb = rng.integers(0, 50, size=(3, g.n)).astype(np.float64)
+            ts = [svc.submit(0, values=vb[i]) for i in range(3)]
+            svc.flush()
+            launches0 = svc.batched_launches
+            assert launches0 == 1, launches0  # one coalesced sharded launch
+            for i, t in enumerate(ts):
+                ref = brute_force(g, specs[0].window, vb[i], "sum")
+                assert np.array_equal(np.asarray(t.result),
+                                      ref.astype(np.float32)), i
+
+            # update stream + cached point reads
+            for step in range(3):
+                s = rng.integers(0, g.n, 4).astype(np.int32)
+                d = rng.integers(0, g.n, 4).astype(np.int32)
+                ok = (s != d) & ~svc.session.graph.contains_edges(s, d)
+                svc.update(UpdateBatch.inserts(s[ok], d[ok]))
+                vals = svc.session.graph.attrs["val"]
+                refs = [brute_force(svc.session.graph, sp.window, vals,
+                                    sp.agg) for sp in specs]
+                for si in range(2):
+                    for v in (1, 7, 42):
+                        got = svc.query(si, vertex=v)
+                        assert got == np.float32(refs[si][v]), (step, si, v)
+            assert svc.point_hits > 0
+            print("SERVICE_SHARDED_OK")
+        """)],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=2",
+             "HOME": "/root"},
+        cwd="/root/repo",
+    )
+    assert "SERVICE_SHARDED_OK" in r.stdout, (
+        r.stdout[-2000:] + r.stderr[-2000:])
