@@ -27,6 +27,7 @@ def main(argv=None) -> None:
         bench_scalability,
         bench_service,
         bench_updates,
+        bench_window_algebra,
     )
     from benchmarks.common import flush_csv
 
@@ -43,6 +44,8 @@ def main(argv=None) -> None:
         "updates": lambda: bench_updates.run(n=20_000 if args.fast else 100_000),
         "multiquery": lambda: bench_multiquery.run(n=8_000 if args.fast else 20_000),
         "service": lambda: bench_service.run(smoke=args.fast),
+        "window_algebra": lambda: bench_window_algebra.run(
+            n=4_000 if args.fast else 20_000),
     }
     # bench_sharded_stream is deliberately NOT in this table: it must force
     # the host-platform device count before jax initializes, so it runs

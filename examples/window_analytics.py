@@ -1,62 +1,102 @@
-"""Dynamic-graph window analytics on the Session API.
+"""Dynamic-graph window analytics on the WindowExpr algebra.
 
-The paper's §4.3/§5.3 workflow — build once, stream edge updates, answer
-queries continuously, reorganize periodically — behind the declarative
-facade: a `Session` owns the graph, the DBIndex, and the fused device
-plan, and keeps all three fresh under `UpdateBatch` streams via the
-incremental maintenance path (batched index update + tile-group plan
-patching + staleness policy).
+The paper fixes two window instantiations (k-hop, topological) — but its
+index is window-agnostic, so the query front end is an *algebra*: leaves
+`KHop(k, direction=...)` / `Topo()`, combinators `Union` / `Intersect` /
+`Diff`, and an attribute mask `Filter`.  Expressions canonicalize
+(commutative sort, dedup, containment rewrites: `Union(KHop(1), KHop(2))`
+IS `KHop(2)`), lower onto the existing DBIndex/device-plan pipeline, and
+— where the algebra allows — skip materialization entirely: idempotent
+monoids evaluate a Union as `combine(result(A), result(B))`, sum monoids
+ride inclusion–exclusion.
+
+Aggregates are an *open registry* too: `register_aggregate` adds derived
+aggregates (variance, L2, ...) as extra fused monoid channels with a pure
+finalizer — every engine (host, device, sharded, serving) picks them up
+without edits.
+
+Migration from the PR-2 API: `QuerySpec(("khop", 2), ...)` still works —
+`KHopWindow` / `TopologicalWindow` are the canonical leaves of the same
+algebra, and `GraphWindowQuery` remains a one-query shim.
 
 Run:  PYTHONPATH=src python examples/window_analytics.py
 """
 
 import numpy as np
 
+from repro.core.aggregates import AGGREGATES, register_aggregate
 from repro.core.api import QuerySpec, Session
 from repro.core.query import brute_force
 from repro.core.streaming import StalenessPolicy
 from repro.core.updates import UpdateBatch
+from repro.core.windows import Filter, KHop, KHopWindow, Union, canonicalize
 from repro.graphs.generators import erdos_renyi, with_random_attrs
 
 rng = np.random.default_rng(0)
-g = with_random_attrs(erdos_renyi(2_000, 6.0, seed=4), seed=5)
+g = with_random_attrs(erdos_renyi(2_000, 6.0, directed=True, seed=4), seed=5)
+g = g.with_attr("premium", (rng.random(g.n) < 0.3).astype(np.int64))
 
-specs = [QuerySpec(("khop", 2), a) for a in ("sum", "count", "avg")]
+# a derived aggregate: population std-dev, three fused channels + finalizer
+if "std" not in AGGREGATES:
+    register_aggregate(
+        "std", ("sum", "sum", "sum"), ("square", "value", "ones"),
+        finalize=lambda xp, s2, s, c: xp.sqrt(
+            xp.maximum(s2 / xp.maximum(c, 1e-30)
+                       - (s / xp.maximum(c, 1e-30)) ** 2, 0.0)),
+    )
+
+# composite windows: the 2-hop *neighborhood* (out ∪ in) and its premium slice
+nbhd = Union(KHop(2, "out"), KHop(2, "in"))
+premium_nbhd = Filter(nbhd, "premium")
+print(f"canonical: {canonicalize(nbhd).name()}")
+print(f"contained: Union(KHop(1), KHop(2)) -> "
+      f"{canonicalize(Union(KHop(1), KHop(2))).name()}")  # reuse the larger
+
+specs = [
+    QuerySpec(nbhd, "sum"),        # algebraic: sum(A∪B) = ΣA + ΣB − Σ(A∩B)
+    QuerySpec(nbhd, "min"),        # algebraic: min(A∪B) = min(minA, minB)
+    QuerySpec(nbhd, "std"),        # derived aggregate, fused channels
+    QuerySpec(premium_nbhd, "avg"),  # generic lowering: materialized blocks
+    QuerySpec(KHopWindow(2), "count"),  # classic paper window, same Session
+]
 sess = Session(
     g, specs, device=True, use_pallas=False, plan_headroom=0.5,
-    # 2-hop phase-1 merges shed sharing quickly; let a few batches amortize
     policy=StalenessPolicy(max_link_ratio=4.0, max_garbage_ratio=0.5,
                            min_batches=3),
 )
-for grp in sess.compiled.groups:
+for gi, grp in enumerate(sess.compiled.groups):
+    mode = "algebraic" if sess._programs[gi] else "generic"
     print(f"compiled: engine={grp.engine}, window={grp.window.name()}, "
-          f"fused aggs={grp.aggs}")
+          f"aggs={grp.aggs}, lowering={mode}")
 
-for step in range(8):
+for step in range(6):
     src = rng.integers(0, g.n, 6).astype(np.int32)
     dst = rng.integers(0, g.n, 6).astype(np.int32)
     ok = (src != dst) & ~sess.graph.contains_edges(src, dst)
     reports = sess.update(UpdateBatch.inserts(src[ok], dst[ok]))  # phase-1
-    rep = reports["khop[2]/dbindex"]
-    s, c, avg = sess.run()
-    ref = brute_force(sess.graph, specs[0].window, sess.graph.attrs["val"], "sum")
-    assert np.allclose(s, ref, rtol=1e-5, atol=1e-3)
-    print(f"step {step}: +{rep['batch_size']} edges -> {rep['affected']} "
-          f"windows touched, queries still exact"
-          + (" [reorganized]" if rep["reorganized"] else ""))
+    res = sess.run()
+    ref = brute_force(sess.graph, specs[0].window, sess.graph.attrs["val"],
+                      "sum", dtype=np.float32)
+    assert np.array_equal(np.asarray(res[0], np.float32), ref)
+    touched = max(r["affected"] for r in reports.values())
+    print(f"step {step}: +{int(ok.sum())} edges -> <= {touched} windows "
+          f"touched per term, composite queries still exact")
 
-# phase-2 telemetry: the staleness policy watches sharing loss AND garbage
-print(f"staleness after stream: {sess.staleness}")
+# attribute-value edits skip index maintenance entirely and invalidate
+# caches through the DBIndex reverse link map (owners containing the vertex)
+sess.update(UpdateBatch.attr_set("val", [1, 2, 3], [100.0, 101.0, 102.0]))
+res = sess.run()
+ref = brute_force(sess.graph, premium_nbhd, sess.graph.attrs["val"], "avg",
+                  dtype=np.float32)
+assert np.array_equal(np.asarray(res[3], np.float32), ref)
+print(f"attr edit applied; staleness: {sess.staleness}")
 
-# Serving many concurrent callers?  Don't call run() once per request —
-# front the Session with the serving layer (examples/window_service.py):
-# point reads become affected-owner-cache hits, explicit-values requests
-# coalesce into fixed-bucket padded launches, and reads are version-pinned
-# snapshots that never block on (or observe half of) an update.
+# Serving many concurrent callers?  Front the Session with the serving
+# layer (examples/window_service.py): point reads become affected-owner
+# cache hits — attr edits invalidate only the containing owners.
 from repro.serve import WindowService  # noqa: E402
 
 svc = WindowService(sess, bucket=8)
-t = svc.submit(specs[0], vertex=7)  # point read: O(1) hit in steady state
+t = svc.submit(specs[0], vertex=7)
 svc.flush()
-print(f"served sum(7)={t.result} at version {t.version}; "
-      f"point hit rate so far: {svc.stats['point_hit_rate']:.2f}")
+print(f"served sum(7)={t.result} at version {t.version}")

@@ -17,12 +17,23 @@ _LAZY = {
     "DeviceGraph": "repro.core.graph",
     "KHopWindow": "repro.core.windows",
     "TopologicalWindow": "repro.core.windows",
+    "KHop": "repro.core.windows",
+    "Topo": "repro.core.windows",
+    "Union": "repro.core.windows",
+    "Intersect": "repro.core.windows",
+    "Diff": "repro.core.windows",
+    "Filter": "repro.core.windows",
+    "WindowExpr": "repro.core.windows",
+    "canonicalize": "repro.core.windows",
     "GraphWindowQuery": "repro.core.query",
     "DBIndex": "repro.core.dbindex",
     "build_dbindex": "repro.core.dbindex",
     "IIndex": "repro.core.iindex",
     "build_iindex": "repro.core.iindex",
     "AGGREGATES": "repro.core.aggregates",
+    "register_aggregate": "repro.core.aggregates",
+    "QuerySpec": "repro.core.api",
+    "Session": "repro.core.api",
 }
 
 

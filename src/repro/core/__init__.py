@@ -1,6 +1,6 @@
 """Core of the paper: graph window queries, DBIndex, I-Index, baselines."""
 
-from repro.core.aggregates import AGGREGATES  # noqa: F401
+from repro.core.aggregates import AGGREGATES, register_aggregate  # noqa: F401
 from repro.core.api import (  # noqa: F401
     DEFAULT_REGISTRY,
     EngineCapability,
@@ -11,4 +11,15 @@ from repro.core.api import (  # noqa: F401
     compile_queries,
 )
 from repro.core.graph import DeviceGraph, Graph  # noqa: F401
-from repro.core.windows import KHopWindow, TopologicalWindow  # noqa: F401
+from repro.core.windows import (  # noqa: F401
+    Diff,
+    Filter,
+    Intersect,
+    KHop,
+    KHopWindow,
+    Topo,
+    TopologicalWindow,
+    Union,
+    WindowExpr,
+    canonicalize,
+)

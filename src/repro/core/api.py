@@ -4,9 +4,24 @@ The paper's GWQ abstraction (Definition 3) is one algebraic object —
 ``GWQ(G, W, Σ, A)`` — and this module gives it one API surface:
 
 * :class:`QuerySpec` — a declarative value object naming (W, Σ, A).  The
-  window may be given as a :class:`~repro.core.windows.KHopWindow` /
-  :class:`~repro.core.windows.TopologicalWindow` or shorthand
-  (``("khop", 2)``, ``"topological"``).
+  window may be any :class:`~repro.core.windows.WindowExpr` — the two
+  paper leaves (:class:`~repro.core.windows.KHopWindow` /
+  :class:`~repro.core.windows.TopologicalWindow`, or shorthand
+  ``("khop", 2)`` / ``"topological"``) or a composite expression
+  (``Union`` / ``Intersect`` / ``Diff`` / ``Filter`` over direction-aware
+  leaves).  Specs canonicalize their window, so algebraically equal
+  queries (``Union(A, B)`` vs ``Union(B, A)``) hit one cached plan.
+
+* **Window lowering** — two paths, chosen per (expression, monoid set) by
+  the planner (:func:`plan_window_program`): the *generic* path evaluates
+  the expression to per-vertex member sets (packed-bitset combinators) and
+  feeds the unchanged DBIndex builder/plan pipeline — dense-block sharing,
+  tile plans, patching and sharding all apply to any window sets; the
+  *algebraic* fast path skips materialization where the algebra allows —
+  idempotent monoids evaluate a ``Union`` as ``combine(result(A),
+  result(B))`` over the children's existing materializations, and
+  sum-monoid channels ride inclusion–exclusion (``Σ(A∪B) = Σ(A) + Σ(B) −
+  Σ(A∩B)``) with only the (smaller) intersection materialized.
 * :class:`EngineRegistry` — every backend declares an
   :class:`EngineCapability` (window kinds, aggregates, device / sharded /
   incremental flags) and the planner selects by capability; an
@@ -38,20 +53,37 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.aggregates import AGGREGATES
+from repro.core.aggregates import (
+    AGGREGATES,
+    ALL_REGISTERED,
+    CHANNEL_AGG,
+    register_aggregate,  # noqa: F401  (re-export: the open-registry API)
+)
 from repro.core.graph import Graph
-from repro.core.windows import KHopWindow, TopologicalWindow
+from repro.core.windows import (
+    Intersect,
+    KHopWindow,
+    TopologicalWindow,
+    Union,
+    WindowExpr,
+    canonicalize,
+    filter_attrs,
+    window_kind_of,
+)
 
-ALL_AGGREGATES = frozenset(AGGREGATES)
+#: live view over the open aggregate registry — capabilities declared with
+#: it serve aggregates registered *after* the engine was
+ALL_AGGREGATES = ALL_REGISTERED
 
 
 # ---------------------------------------------------------------------- #
 #  Declarative specs
 # ---------------------------------------------------------------------- #
 def as_window(spec):
-    """Normalize a window spec: window object | "topological" | ("khop", k)."""
-    if isinstance(spec, (KHopWindow, TopologicalWindow)):
-        return spec
+    """Normalize a window spec — a :class:`WindowExpr` (canonicalized),
+    ``"topological"`` or ``("khop", k)`` shorthand."""
+    if isinstance(spec, WindowExpr):
+        return canonicalize(spec)
     if spec == "topological":
         return TopologicalWindow()
     if isinstance(spec, (tuple, list)) and len(spec) == 2 and spec[0] == "khop":
@@ -60,11 +92,12 @@ def as_window(spec):
 
 
 def window_kind(window) -> str:
-    if isinstance(window, KHopWindow):
-        return "khop"
-    if isinstance(window, TopologicalWindow):
-        return "topological"
-    raise TypeError(window)
+    """Capability kind of a window: the two paper leaves keep their names;
+    everything else — combinators, filters, direction-variant k-hop leaves
+    — is ``"composite"`` and is served by the engines whose capability row
+    declares it (the generic materialized lowering or, where the algebra
+    allows, the fast path)."""
+    return window_kind_of(window)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -231,13 +264,17 @@ _VMANY: Dict[str, object] = {}
 
 
 def _get_vmany(engine: str):
+    # the vmapped executors jit the CHANNEL cores only; finalizers run
+    # eagerly on the [B, n] channel results (same contract as the unbatched
+    # wrappers — inside a jit XLA may FMA-contract a registered finalizer
+    # and re-round, which would make run_many bitwise-diverge from run)
     if engine not in _VMANY:
         import jax
 
         from repro.core import engine_jax as ej
 
-        fn = {"jax": ej.query_dbindex_multi,
-              "jax-iindex": ej.query_iindex_multi}[engine]
+        fn = {"jax": ej._query_dbindex_multi_channels,
+              "jax-iindex": ej._query_iindex_multi_channels}[engine]
         _VMANY[engine] = jax.jit(
             lambda plan, vb, aggs, interpret: jax.vmap(
                 lambda v: fn(plan, v, aggs, use_pallas=False,
@@ -348,17 +385,22 @@ def _run_jax_sharded(g, window, values, aggs, index=None, plan=None, **opts):
 def _default_registry() -> EngineRegistry:
     r = EngineRegistry()
     both = ("khop", "topological")
+    # "composite" marks the engines that consume *materialized* window sets
+    # (bitset algebra, DBIndex blocks and the device/sharded plans built
+    # from them) — the generic WindowExpr lowering; per-vertex-BFS and
+    # structure-specific backends (nonindex, eagr, iindex) stay leaf-only
+    any_w = both + ("composite",)
     r.register(EngineCapability("nonindex", both, ALL_AGGREGATES, priority=0),
                _run_nonindex)
-    r.register(EngineCapability("bitset", both, ALL_AGGREGATES, priority=10),
+    r.register(EngineCapability("bitset", any_w, ALL_AGGREGATES, priority=10),
                _run_bitset)
     r.register(EngineCapability("eagr", both, ALL_AGGREGATES, priority=20),
                _run_eagr)
-    r.register(EngineCapability("dbindex", both, ALL_AGGREGATES,
+    r.register(EngineCapability("dbindex", any_w, ALL_AGGREGATES,
                                 incremental=True, priority=30), _run_dbindex)
     r.register(EngineCapability("iindex", ("topological",), ALL_AGGREGATES,
                                 incremental=True, priority=40), _run_iindex)
-    r.register(EngineCapability("jax", both, ALL_AGGREGATES, device=True,
+    r.register(EngineCapability("jax", any_w, ALL_AGGREGATES, device=True,
                                 incremental=True, priority=50), _run_jax_dbindex)
     r.register(EngineCapability("jax-iindex", ("topological",), ALL_AGGREGATES,
                                 device=True, incremental=True, priority=60),
@@ -366,13 +408,105 @@ def _default_registry() -> EngineRegistry:
     # the stacked-channel sharded executor serves every monoid aggregate
     # (SUM/COUNT/AVG ride one psum, MIN/MAX ride pmin/pmax) — the old
     # SUM-only row predated repro.distributed.window_runtime
-    r.register(EngineCapability("jax-sharded", both, ALL_AGGREGATES,
+    r.register(EngineCapability("jax-sharded", any_w, ALL_AGGREGATES,
                                 device=True, sharded=True, incremental=True,
                                 priority=70), _run_jax_sharded)
     return r
 
 
 DEFAULT_REGISTRY = _default_registry()
+
+
+# ---------------------------------------------------------------------- #
+#  Algebraic fast-path planner (per (expr, monoid) lowering choice)
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class WindowProgram:
+    """Algebraic evaluation plan for one composite window.
+
+    ``terms`` are the canonical sub-expressions that get materialized
+    (index + plan each); the composite's monoid channels are reassembled
+    from the terms' channel results: sum-monoid channels as
+    ``Σ sum_coefs[t] · term[t]`` (inclusion–exclusion), idempotent channels
+    as ``combine(term[t] for t in idem_terms)``.  ``term_aggs`` is the
+    closed set of canonical channel aggregates requested from every term
+    (one fused multi-channel query per term).
+    """
+
+    terms: Tuple[object, ...]
+    term_aggs: Tuple[str, ...]
+    sum_coefs: Tuple[int, ...]
+    idem_terms: Tuple[int, ...]
+
+
+def _group_channels(aggs: Sequence[str]) -> set:
+    chans = set()
+    for name in aggs:
+        a = AGGREGATES[name]
+        chans |= set(zip((m.name for m in a.monoids), a.channel_sources))
+    return chans
+
+
+def plan_window_program(window, aggs: Sequence[str]):
+    """Fast-path plan for (window, aggs), or None → generic materialization.
+
+    The choice is per (expression shape, monoid set): a ``Union`` whose
+    aggregates are all idempotent (min/max) evaluates as a pointwise
+    combine over the children's materializations (any arity); once a
+    sum-monoid channel is involved, the union rides pairwise
+    inclusion–exclusion (``Σ(A∪B) = Σ(A) + Σ(B) − Σ(A∩B)``) — the
+    intersection is the only extra materialization and is never larger
+    than either child.  Wider unions with sum channels, and every other
+    combinator, take the generic path (still correct — just materialized).
+    """
+    if not isinstance(window, Union):
+        return None
+    channels = _group_channels(aggs)
+    if any(ch not in CHANNEL_AGG for ch in channels):
+        return None  # a channel with no canonical per-term aggregate
+    kids = window.exprs
+    has_sum = any(m == "sum" for m, _ in channels)
+    if has_sum:
+        if len(kids) != 2:
+            return None  # inclusion–exclusion kept pairwise (2^n terms)
+        terms = kids + (canonicalize(Intersect(*kids)),)
+        coefs = (1, 1, -1)
+    else:
+        terms = kids
+        coefs = (1,) * len(kids)
+    term_aggs = tuple(sorted({CHANNEL_AGG[ch] for ch in channels}))
+    return WindowProgram(terms=terms, term_aggs=term_aggs, sum_coefs=coefs,
+                         idem_terms=tuple(range(len(kids))))
+
+
+def _combine_program(prog: WindowProgram, aggs: Sequence[str], term_outs):
+    """Reassemble the composite's channels from per-term results and
+    finalize.  Pure pointwise arithmetic (works on [n] vectors and [B, n]
+    batches alike); exact — hence bit-identical to direct set evaluation —
+    on integer-valued attributes, and dtype-preserving on the int paths
+    (coefficients are ±1, so no float upcast sneaks in)."""
+    outs, chan_cache = {}, {}
+    for name in aggs:
+        a = AGGREGATES[name]
+        chans = []
+        for m, src in zip(a.monoids, a.channel_sources):
+            key = (m.name, src)
+            if key not in chan_cache:
+                ca = CHANNEL_AGG[key]
+                if m.name == "sum":
+                    acc = None
+                    for coef, out in zip(prog.sum_coefs, term_outs):
+                        v = np.asarray(out[ca])
+                        v = v if coef == 1 else v * coef
+                        acc = v if acc is None else acc + v
+                else:
+                    acc = np.asarray(term_outs[prog.idem_terms[0]][ca])
+                    for t in prog.idem_terms[1:]:
+                        acc = m.np_op(acc, np.asarray(term_outs[t][ca]))
+                chan_cache[key] = acc
+            chans.append(chan_cache[key])
+        outs[name] = a.finalize_np(*chans)
+    return outs
 
 
 # ---------------------------------------------------------------------- #
@@ -530,24 +664,35 @@ class Session:
         #: cache is keyed by it.
         self.version = 0
         self._result_cache = None
-        # one stateful engine per (window, index kind) — shared by every
-        # group on that key, so the device/sharded flags are the OR over the
-        # sharing groups (a host group must not strip the plan a device
-        # group compiled).  EAGR indices are rebuilt lazily after updates
-        # (EAGR has no incremental story).
+        # per-group lowering programs: composite windows on stateful
+        # dbindex-backed engines may decompose algebraically (their *terms*
+        # get materialized instead of the composite itself)
+        self._programs: Tuple[Optional[WindowProgram], ...] = tuple(
+            plan_window_program(grp.window, grp.aggs)
+            if (_kind_of(grp.engine) == "dbindex"
+                and window_kind(grp.window) == "composite")
+            else None
+            for grp in self.compiled.groups
+        )
+        # one stateful engine per (materialized window, index kind) — shared
+        # by every group (and every program term) on that key, so the
+        # device/sharded flags are the OR over the sharing groups (a host
+        # group must not strip the plan a device group compiled).  EAGR
+        # indices are rebuilt lazily after updates (no incremental story).
         self._states: Dict[Tuple[object, str], object] = {}
         self._eagr: Dict[object, object] = {}
         self._eagr_dirty = False
         need_device: Dict[Tuple[object, str], bool] = {}
         need_shard: Dict[Tuple[object, str], bool] = {}
-        for grp in self.compiled.groups:
+        for gi, grp in enumerate(self.compiled.groups):
             kind = _kind_of(grp.engine)
             if kind is None:
                 continue
-            key = (grp.window, kind)
             cap = self.registry.capability(grp.engine)
-            need_device[key] = need_device.get(key, False) or cap.device
-            need_shard[key] = need_shard.get(key, False) or cap.sharded
+            for term in self._group_terms(gi):
+                key = (term, kind)
+                need_device[key] = need_device.get(key, False) or cap.device
+                need_shard[key] = need_shard.get(key, False) or cap.sharded
         for (window, kind), dev in need_device.items():
             self._states[(window, kind)] = self._make_state(
                 window, kind, dev, need_shard[(window, kind)]
@@ -577,24 +722,34 @@ class Session:
         )
 
     # ------------------------------------------------------------------ #
-    def _state_for(self, grp: PlanGroup):
+    def _group_terms(self, gi: int) -> Tuple[object, ...]:
+        """Windows materialized for group ``gi``: the program's terms on
+        the algebraic fast path, else the group window itself."""
+        prog = self._programs[gi]
+        return prog.terms if prog is not None else (
+            self.compiled.groups[gi].window,)
+
+    def _group_artifacts(self, gi: int) -> Tuple[Tuple[object, object], ...]:
+        """Per-term (index, plan) pairs of group ``gi``."""
+        grp = self.compiled.groups[gi]
         kind = _kind_of(grp.engine)
-        return self._states.get((grp.window, kind)) if kind else None
+        out = []
+        for term in self._group_terms(gi):
+            state = self._states.get((term, kind)) if kind else None
+            if state is not None:
+                out.append((state.index, state.plan))
+            elif grp.engine == "eagr":
+                if self._eagr_dirty:
+                    self._eagr.clear()
+                    self._eagr_dirty = False
+                if term not in self._eagr:
+                    from repro.core.eagr import build_eagr
 
-    def _group_artifacts(self, grp: PlanGroup):
-        state = self._state_for(grp)
-        if state is not None:
-            return state.index, state.plan
-        if grp.engine == "eagr":
-            if self._eagr_dirty:
-                self._eagr.clear()
-                self._eagr_dirty = False
-            if grp.window not in self._eagr:
-                from repro.core.eagr import build_eagr
-
-                self._eagr[grp.window] = build_eagr(self.graph, grp.window)
-            return self._eagr[grp.window], None
-        return None, None
+                    self._eagr[term] = build_eagr(self.graph, term)
+                out.append((self._eagr[term], None))
+            else:
+                out.append((None, None))
+        return tuple(out)
 
     def _values_for(self, grp: PlanGroup, values, graph=None):
         if values is None:
@@ -606,36 +761,72 @@ class Session:
     # ------------------------------------------------------------------ #
     #  Group executors — shared by Session.run/run_many and SessionView
     # ------------------------------------------------------------------ #
-    def _exec_group(self, grp: PlanGroup, index, plan, values, graph=None):
-        g = self.graph if graph is None else graph
+    def _exec_term(self, grp: PlanGroup, window, index, plan, values, g,
+                   aggs):
         return self.registry.run(
-            grp.engine, g, grp.window,
-            self._values_for(grp, values, graph=g), grp.aggs,
+            grp.engine, g, window, values, aggs,
             index=index, plan=plan, **self._opts,
         )
 
-    def _exec_group_many(self, grp: PlanGroup, index, plan, vb, graph=None):
-        """One [B, n] batch of attribute vectors through one plan group.
+    def _exec_term_many(self, grp: PlanGroup, window, index, plan, vb, g,
+                        aggs):
+        """One [B, n] batch through one materialized window.
 
-        Device groups run the jitted vmapped fused executor (XLA lowering —
+        Device plans run the jitted vmapped fused executor (XLA lowering —
         batching a Pallas kernel is not supported on every backend, and the
         fused XLA path vmaps cleanly); host engines loop the batch.
         """
         if plan is not None and grp.engine in _VMANY_ENGINES:
             import jax.numpy as jnp
 
-            outs = _get_vmany(grp.engine)(
-                plan, jnp.asarray(vb, jnp.float32), grp.aggs,
+            from repro.core.aggregates import pack_channels
+
+            aggs = tuple(aggs)
+            chans = _get_vmany(grp.engine)(
+                plan, jnp.asarray(vb, jnp.float32), aggs,
                 self._opts["interpret"],
             )
-            return {a: np.asarray(o) for a, o in zip(grp.aggs, outs)}
-        g = self.graph if graph is None else graph
+            pack = pack_channels(aggs)
+            return {
+                a: np.asarray(pack.finalize(i, chans, xp=jnp))
+                for i, a in enumerate(aggs)
+            }
         rows = [
-            self.registry.run(grp.engine, g, grp.window, v, grp.aggs,
+            self.registry.run(grp.engine, g, window, v, aggs,
                               index=index, plan=plan, **self._opts)
             for v in vb
         ]
-        return {a: np.stack([r[a] for r in rows]) for a in grp.aggs}
+        return {a: np.stack([r[a] for r in rows]) for a in aggs}
+
+    def _exec_group(self, gi: int, arts, values, graph=None):
+        grp = self.compiled.groups[gi]
+        g = self.graph if graph is None else graph
+        vals = self._values_for(grp, values, graph=g)
+        prog = self._programs[gi]
+        if prog is None:
+            index, plan = arts[0]
+            return self._exec_term(grp, grp.window, index, plan, vals, g,
+                                   grp.aggs)
+        term_outs = [
+            self._exec_term(grp, term, index, plan, vals, g, prog.term_aggs)
+            for term, (index, plan) in zip(prog.terms, arts)
+        ]
+        return _combine_program(prog, grp.aggs, term_outs)
+
+    def _exec_group_many(self, gi: int, arts, vb, graph=None):
+        grp = self.compiled.groups[gi]
+        g = self.graph if graph is None else graph
+        prog = self._programs[gi]
+        if prog is None:
+            index, plan = arts[0]
+            return self._exec_term_many(grp, grp.window, index, plan, vb, g,
+                                        grp.aggs)
+        term_outs = [
+            self._exec_term_many(grp, term, index, plan, vb, g,
+                                 prog.term_aggs)
+            for term, (index, plan) in zip(prog.terms, arts)
+        ]
+        return _combine_program(prog, grp.aggs, term_outs)
 
     # ------------------------------------------------------------------ #
     #  Versioned snapshot reads + result cache hooks
@@ -653,8 +844,8 @@ class Session:
             session=self,
             graph=self.graph,
             version=self.version,
-            artifacts=tuple(self._group_artifacts(grp)
-                            for grp in self.compiled.groups),
+            artifacts=tuple(self._group_artifacts(gi)
+                            for gi in range(len(self.compiled.groups))),
         )
 
     def attach_cache(self, cache) -> None:
@@ -677,16 +868,20 @@ class Session:
         self._result_cache = cache
         cache.bind(self)
 
-    def group_state_key(self, gi: int) -> Optional[str]:
-        """Report key of the stateful engine behind group ``gi`` (the keys
-        of :meth:`update` reports / :attr:`staleness`), or None for groups
+    def group_state_keys(self, gi: int) -> Tuple[str, ...]:
+        """Report keys of the stateful engines behind group ``gi`` (the
+        keys of :meth:`update` reports / :attr:`staleness`) — one per
+        materialized term on the algebraic fast path, empty for groups
         with no incremental state (their cached results cannot be bounded
         by an affected set and must be dropped wholesale on update)."""
         grp = self.compiled.groups[gi]
         kind = _kind_of(grp.engine)
-        if kind is None or (grp.window, kind) not in self._states:
-            return None
-        return f"{grp.window.name()}/{kind}"
+        if kind is None:
+            return ()
+        return tuple(
+            f"{term.name()}/{kind}" for term in self._group_terms(gi)
+            if (term, kind) in self._states
+        )
 
     # ------------------------------------------------------------------ #
     def run(self, values=None) -> List[np.ndarray]:
@@ -712,26 +907,58 @@ class Session:
         index maintenance is per-window, the graph is not).  Bumps
         :attr:`version`; each report carries the new version and the
         engine's ``affected_owners`` array, and an attached result cache is
-        invalidated for exactly those owners."""
-        from repro.core.updates import apply_batch
+        invalidated for exactly those owners.
+
+        Attribute-value edits (``batch.attr_edits``) skip index and plan
+        maintenance entirely — both indices are structure-only — and
+        invalidate the result cache through the DBIndex *reverse link map*:
+        exactly the owners whose windows contain an edited vertex, instead
+        of flushing whole result vectors.  The exception is a
+        :class:`~repro.core.windows.Filter` predicate attribute, which
+        changes window *membership*: the touched states rebuild (their
+        streaming engines detect it) and invalidate wholesale."""
+        from repro.core.updates import apply_batch, containing_owners
 
         g2 = apply_batch(self.graph, batch)
         reports = {}
         for (window, kind), eng in self._states.items():
             reports[f"{window.name()}/{kind}"] = eng.apply(batch, graph=g2)
         self.graph = g2
-        self._eagr_dirty = bool(self._eagr) or self._eagr_dirty
+        self._eagr_dirty = (
+            bool(self._eagr) and batch.size > 0) or self._eagr_dirty
         self.updates_applied += 1
         self.version += 1
         for rep in reports.values():
             rep["version"] = self.version
         if self._result_cache is not None:
+            edited: Dict[str, list] = {}
+            for e in batch.attr_edits:
+                edited.setdefault(e.name, []).append(e.vertices)
             owner_map = {}
-            for gi in range(len(self.compiled.groups)):
-                key = self.group_state_key(gi)
-                owner_map[gi] = (
-                    reports[key]["affected_owners"] if key is not None else None
-                )
+            for gi, grp in enumerate(self.compiled.groups):
+                keys = self.group_state_keys(gi)
+                group_attr_touched = grp.attr in edited
+                if not keys:
+                    # no incremental state to bound the blast radius: drop
+                    # on any change that could affect the group, keep on a
+                    # provably-unrelated attr-only batch
+                    unrelated = (batch.size == 0 and not group_attr_touched
+                                 and not (set(edited)
+                                          & set(filter_attrs(grp.window))))
+                    owner_map[gi] = (
+                        np.empty(0, np.int32) if unrelated else None)
+                    continue
+                parts = [reports[k]["affected_owners"] for k in keys]
+                if group_attr_touched:
+                    verts = np.unique(np.concatenate(edited[grp.attr]))
+                    kind = _kind_of(grp.engine)
+                    for term in self._group_terms(gi):
+                        state = self._states.get((term, kind))
+                        if state is not None:
+                            parts.append(containing_owners(
+                                state.index, g2, term, verts))
+                owner_map[gi] = np.unique(np.concatenate(parts)).astype(
+                    np.int32) if parts else np.empty(0, np.int32)
             self._result_cache.on_update(self.version, owner_map)
         return reports
 
@@ -769,32 +996,32 @@ class SessionView:
     session: Session
     graph: Graph
     version: int
-    artifacts: Tuple[Tuple[object, object], ...]  # per group: (index, plan)
+    #: per group: per materialized term, an (index, plan) pair — generic
+    #: groups hold one term, algebraic fast-path groups one per program term
+    artifacts: Tuple[Tuple[Tuple[object, object], ...], ...]
 
     # ------------------------------------------------------------------ #
     def run_group(self, gi: int, values=None) -> Dict[str, np.ndarray]:
-        """All aggregates of plan group ``gi`` (one fused launch on device
-        engines), cache-aware for current-attribute reads."""
-        grp = self.session.compiled.groups[gi]
+        """All aggregates of plan group ``gi`` (one fused launch per
+        materialized term on device engines), cache-aware for
+        current-attribute reads."""
         cache = self.session._result_cache
         if values is None and cache is not None:
             hit = cache.get_group(gi, self.version)
             if hit is not None:
                 return hit
-        index, plan = self.artifacts[gi]
-        out = self.session._exec_group(grp, index, plan, values,
+        out = self.session._exec_group(gi, self.artifacts[gi], values,
                                        graph=self.graph)
         if values is None and cache is not None:
             cache.put_group(gi, self.version, out)
         return out
 
     def run_group_many(self, gi: int, values_batch) -> Dict[str, np.ndarray]:
-        """[B, n] batch through plan group ``gi`` — one vmapped launch on
-        device engines (the scheduler's coalesced flush path)."""
-        grp = self.session.compiled.groups[gi]
-        index, plan = self.artifacts[gi]
-        return self.session._exec_group_many(grp, index, plan, values_batch,
-                                             graph=self.graph)
+        """[B, n] batch through plan group ``gi`` — one vmapped launch per
+        materialized term on device engines (the scheduler's coalesced
+        flush path)."""
+        return self.session._exec_group_many(gi, self.artifacts[gi],
+                                             values_batch, graph=self.graph)
 
     # ------------------------------------------------------------------ #
     def run(self, values=None) -> List[np.ndarray]:

@@ -48,6 +48,8 @@ from repro.core.graph import Graph
 from repro.core.windows import (
     KHopWindow,
     TopologicalWindow,
+    WindowExpr,
+    expr_reach_bitsets,
     khop_reach_bitsets,
 )
 
@@ -71,15 +73,26 @@ class DBIndex:
     stats: Dict = dataclasses.field(default_factory=dict, repr=False)
 
     # ---------------------------------------------------------------- #
+    # the expanded id vectors are memoized on the (immutable) index —
+    # plan building/patching and the attr-edit reverse lookup all consume
+    # them, and re-materializing O(M)/O(L) arrays per call is pure waste
     @property
     def member_block_ids(self) -> Array:
-        sizes = np.diff(self.block_offsets)
-        return np.repeat(np.arange(self.num_blocks, dtype=np.int32), sizes)
+        cached = getattr(self, "_member_block_ids", None)
+        if cached is None:
+            sizes = np.diff(self.block_offsets)
+            cached = np.repeat(np.arange(self.num_blocks, dtype=np.int32), sizes)
+            object.__setattr__(self, "_member_block_ids", cached)
+        return cached
 
     @property
     def link_owner_ids(self) -> Array:
-        sizes = np.diff(self.link_owner_offsets)
-        return np.repeat(np.arange(self.n, dtype=np.int32), sizes)
+        cached = getattr(self, "_link_owner_ids", None)
+        if cached is None:
+            sizes = np.diff(self.link_owner_offsets)
+            cached = np.repeat(np.arange(self.n, dtype=np.int32), sizes)
+            object.__setattr__(self, "_link_owner_ids", cached)
+        return cached
 
     def block(self, b: int) -> Array:
         return self.block_members[self.block_offsets[b] : self.block_offsets[b + 1]]
@@ -124,29 +137,61 @@ class DBIndex:
             linked = self.linked_blocks_mask()
         return 1.0 - int(np.count_nonzero(linked)) / self.num_blocks
 
+    # ----------------------- reverse link map ------------------------ #
+    def owners_of_members(self, vertices: Array) -> Array:
+        """Owners whose windows contain any of the given vertices.
+
+        The bipartite structure already encodes the reverse mapping: a
+        vertex sits in some blocks (member lists), and the owners linking
+        any of those blocks are exactly the windows containing it.  This is
+        the attribute-update invalidation set — an attr edit changes only
+        the cached aggregates of these owners (membership is untouched).
+        """
+        vertices = np.asarray(vertices, np.int64)
+        if vertices.size == 0 or self.block_members.size == 0:
+            return np.empty(0, np.int32)
+        hit = np.zeros(self.n + 1, dtype=bool)
+        hit[np.clip(vertices, 0, self.n)] = True
+        blocks = np.unique(self.member_block_ids[hit[self.block_members]])
+        if blocks.size == 0:
+            return np.empty(0, np.int32)
+        bmask = np.zeros(self.num_blocks, dtype=bool)
+        bmask[blocks] = True
+        return np.unique(self.link_owner_ids[bmask[self.link_block]]).astype(
+            np.int32)
+
     # ------------------------- query (NumPy) ------------------------- #
     def query(self, values: Array, agg: str = "sum") -> Array:
-        """Two-stage shared aggregation (paper §4.1), NumPy executor."""
+        """Two-stage shared aggregation (paper §4.1), NumPy executor.
+
+        Dtype-safe: integer attributes ride int64 channels end to end with
+        per-dtype monoid identities — the serving layer's bitwise oracle
+        depends on the int path never silently upcasting to float (only a
+        finalizer may change the dtype).
+        """
         a: Aggregate = AGGREGATES[agg]
         chans = a.prepare(np.asarray(values))
         outs = []
         for monoid, chan in zip(a.monoids, chans):
+            ident = monoid.identity_for(chan.dtype)
             # pass 1: per-block partials
-            t = np.full(self.num_blocks, monoid.identity, dtype=np.float64)
+            t = np.full(self.num_blocks, ident, dtype=chan.dtype)
             if self.block_members.size:
                 gathered = chan[self.block_members]
                 starts = self.block_offsets[:-1]
                 nonempty = np.diff(self.block_offsets) > 0
                 red = monoid.np_op.reduceat(gathered, np.minimum(starts, gathered.size - 1))
-                t = np.where(nonempty, red, monoid.identity)
+                t = np.where(nonempty, red, ident)
             # pass 2: combine partials per owner
-            ans = np.full(self.n, monoid.identity, dtype=np.float64)
+            ans = np.full(self.n, ident, dtype=chan.dtype)
             if self.link_block.size:
                 g2 = t[self.link_block]
                 starts2 = self.link_owner_offsets[:-1]
                 nonempty2 = np.diff(self.link_owner_offsets) > 0
                 red2 = monoid.np_op.reduceat(g2, np.minimum(starts2, g2.size - 1))
-                ans = np.where(nonempty2, red2, monoid.identity)
+                ans = np.where(nonempty2, red2, ident)
+            assert ans.dtype == chan.dtype, (
+                f"monoid channel upcast: {chan.dtype} -> {ans.dtype}")
             outs.append(ans)
         return a.finalize_np(*outs)
 
@@ -337,6 +382,32 @@ def _paper_signatures_khop(
     return sig
 
 
+def _expr_signatures(g: Graph, expr, num_hashes: int, bfs_batch: int,
+                     seed: int) -> Array:
+    """MinHash signatures of composite-expression windows, by batched
+    materialization (the only generic option: a combinator's member set is
+    not reachable by message passing alone).  Same pattern as the paper's
+    MC first pass, with the window materializer swapped for the expression
+    evaluator — everything downstream (clustering, equivalence partition,
+    blocks) is unchanged, which is the point: DBIndex is window-agnostic."""
+    h = mh.vertex_hashes(g.n, num_hashes, seed)
+    sig = np.full((g.n, num_hashes), np.iinfo(np.uint64).max, dtype=np.uint64)
+    all_src = np.arange(g.n, dtype=np.int32)
+    for lo in range(0, g.n, bfs_batch):
+        batch = all_src[lo : lo + bfs_batch]
+        reach = expr_reach_bitsets(g, expr, batch)
+        member, owner_local = _pairs_from_packed(reach)
+        if member.size == 0:
+            continue
+        order = np.argsort(owner_local, kind="stable")
+        m_s, o_s = member[order], owner_local[order]
+        starts = np.flatnonzero(np.diff(o_s, prepend=-1))
+        owners = batch[o_s[starts]]
+        red = np.minimum.reduceat(h[m_s], starts, axis=0)
+        sig[owners] = red
+    return sig
+
+
 def _topo_ancestor_bitsets(g: Graph) -> Array:
     """Packed ancestor matrix [n, ceil(n/64)] (row v = W_t(v))."""
     order = g.topological_order()
@@ -366,10 +437,22 @@ def build_dbindex(
     method: "mc" (cluster on full window signatures) or "emc" (cluster on
     `cluster_hops`-hop signatures; default 1) — EMC only defined for k-hop
     windows (§4.2.2).
+
+    Composite :class:`~repro.core.windows.WindowExpr` windows (combinators,
+    direction-variant k-hop leaves) take the generic path: signatures by
+    batched expression materialization, then the *same* clustering /
+    equivalence-partition / block pipeline — dense-block sharing works for
+    any window sets (the paper's own observation), so the device plans,
+    patching and sharding downstream apply unchanged.
     """
     t0 = time.perf_counter()
     is_khop = isinstance(window, KHopWindow)
-    if is_khop:
+    is_expr = isinstance(window, WindowExpr) and not isinstance(
+        window, (KHopWindow, TopologicalWindow))
+    if is_expr:
+        method = "expr"
+        sig = _expr_signatures(g, window, num_hashes, bfs_batch, seed)
+    elif is_khop:
         if method == "mc_paper":
             # Paper Algorithm 1 lines 2-5 verbatim: materialize each window
             # (first of two BFS passes) and hash its member list.  Kept for
@@ -399,13 +482,19 @@ def build_dbindex(
 
     builder = _Builder(g.n)
     t1 = time.perf_counter()
-    anc = _topo_ancestor_bitsets(g) if not is_khop else None
+    # expression windows share the k-hop orientation ([member, owner] packed
+    # matrix per source batch), so they ride the same pair-extraction path
+    packed_cols = is_khop or is_expr
+    anc = _topo_ancestor_bitsets(g) if not packed_cols else None
 
     for blo in range(0, g.n, bfs_batch):
         sources = order[blo : blo + bfs_batch]
         src_clusters = cl_sorted[blo : blo + bfs_batch].astype(np.int64)
-        if is_khop:
-            reach = khop_reach_bitsets(g, window.k, sources)  # [n, words]
+        if packed_cols:
+            reach = (
+                khop_reach_bitsets(g, window.k, sources) if is_khop
+                else expr_reach_bitsets(g, window, sources)
+            )  # [n, words]
         # extract (owner_local, member) pairs in column chunks; split the
         # partition scope at the pair budget (prefer cluster boundaries)
         pend_member: List[Array] = []
@@ -429,7 +518,7 @@ def build_dbindex(
         col_chunk = 1024
         for clo in range(0, sources.size, col_chunk):
             chi = min(clo + col_chunk, sources.size)
-            if is_khop:
+            if packed_cols:
                 sub = reach[:, clo // 64 : (chi + 63) // 64]
                 member, owner_local = _pairs_from_packed(sub)
             else:

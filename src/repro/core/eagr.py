@@ -141,24 +141,25 @@ class EAGRIndex:
         chans = a.prepare(np.asarray(values))
         outs = []
         for monoid, chan in zip(a.monoids, chans):
-            vvals = np.full(len(self.virtual_members), monoid.identity)
+            ident = monoid.identity_for(chan.dtype)  # dtype-safe (no upcast)
+            vvals = np.full(len(self.virtual_members), ident, dtype=chan.dtype)
             # virtual nodes were appended in creation order: later virtuals
             # may reference earlier ones only -> evaluate in order
             for i, members in enumerate(self.virtual_members):
                 base = members[members < self.n]
                 virt = members[members >= self.n] - self.n
-                acc = monoid.identity
+                acc = ident
                 if base.size:
                     acc = monoid.np_op(acc, monoid.np_op.reduce(chan[base]))
                 if virt.size:
                     acc = monoid.np_op(acc, monoid.np_op.reduce(vvals[virt]))
                 vvals[i] = acc
-            ans = np.full(self.n, monoid.identity)
+            ans = np.full(self.n, ident, dtype=chan.dtype)
             for v in range(self.n):
                 items = self.overlay[v]
                 base = items[items < self.n]
                 virt = items[items >= self.n] - self.n
-                acc = monoid.identity
+                acc = ident
                 if base.size:
                     acc = monoid.np_op(acc, monoid.np_op.reduce(chan[base]))
                 if virt.size:

@@ -370,46 +370,45 @@ def _segment_minmax_gathered(plan, gathered, num_segments: int, op: str):
 
 
 @functools.partial(jax.jit, static_argnames=("aggs", "use_pallas", "interpret"))
-def query_dbindex_multi(plan: DBIndexPlan, values, aggs: tuple,
-                        use_pallas: bool = True, interpret: Optional[bool] = None):
-    """Fused multi-aggregate DBIndex query: one gather per pass feeds every
-    monoid channel (the Cao et al. multi-window-function sharing, applied to
-    graph windows).
-
-    ``aggs`` is a static tuple of aggregate names sharing one window; the
-    channels are deduped (``sum``/``avg`` share the value channel, ``count``/
-    ``avg`` the cardinality channel), pass 1 runs once over the deduped value
-    channels, and pass 2 gathers one stacked ``[block_capacity, C]`` matrix
-    feeding k per-monoid segment reduces.  Returns one array per aggregate,
-    in ``aggs`` order, bit-identical to the per-aggregate ``query_dbindex``
-    results.
-    """
+def _query_dbindex_multi_channels(plan: DBIndexPlan, values, aggs: tuple,
+                                  use_pallas: bool = True,
+                                  interpret: Optional[bool] = None):
+    """Jitted channel core of :func:`query_dbindex_multi`: returns the
+    deduped monoid channel results (finalizers run eagerly in the wrapper —
+    XLA fusion may contract a finalizer's multiply-add into an FMA, which
+    re-rounds; keeping the pure finalize outside the jit keeps registered
+    aggregates bit-identical to their NumPy evaluation)."""
     from repro.core.aggregates import pack_channels
 
     pack = pack_channels(aggs)
     values = jnp.asarray(values, jnp.float32)
     sum_cols = pack.channels_of("sum")
     minmax_cols = [
-        (ci, m) for ci, (m, _) in enumerate(pack.channels) if m != "sum"
+        (ci, m, s) for ci, (m, s) in enumerate(pack.channels) if m != "sum"
     ]
 
     # ---- pass 1: one shared gather of the attribute vector -------------- #
-    need_g1 = any(pack.channels[ci] == ("sum", "value") for ci in sum_cols) or (
-        plan.p1_ell is None and minmax_cols
-    )
+    # registered derived aggregates add "square" channels; they reuse the
+    # same gather (take(v², idx) == take(v, idx)² elementwise)
+    need_g1 = any(
+        pack.channels[ci][1] in ("value", "square") for ci in sum_cols
+    ) or (plan.p1_ell is None and minmax_cols)
     g1 = jnp.take(values, plan.pass1.gather_padded) if need_g1 else None
     t_cols = {}
     for ci in sum_cols:
-        if pack.channels[ci][1] == "ones":
+        src = pack.channels[ci][1]
+        if src == "ones":
             # block cardinalities are host-exact plan metadata: the count
             # channel skips pass 1 entirely (same as the per-agg path)
             t_cols[ci] = plan.block_sizes
         else:
-            t_cols[ci] = segment_sum_gathered(plan.pass1, g1,
-                                              use_pallas=use_pallas,
-                                              interpret=interpret)
-    for ci, mname in minmax_cols:
-        t_cols[ci] = _minmax_pass1(plan, values, mname, gathered=g1)
+            t_cols[ci] = segment_sum_gathered(
+                plan.pass1, g1 if src == "value" else g1 * g1,
+                use_pallas=use_pallas, interpret=interpret)
+    for ci, mname, src in minmax_cols:
+        vsrc = values if src == "value" else values * values
+        gsrc = g1 if (g1 is None or src == "value") else g1 * g1
+        t_cols[ci] = _minmax_pass1(plan, vsrc, mname, gathered=gsrc)
 
     # ---- pass 2: one gather of the stacked sum-channel matrix; min/max
     # ride the dense ELL layout (idempotent monoids, order-insensitive) --- #
@@ -424,13 +423,40 @@ def query_dbindex_multi(plan: DBIndexPlan, values, aggs: tuple,
             reduced = reduced[:, None]
         for j, ci in enumerate(sum_cols):
             outs[ci] = reduced[:, j]
-    for ci, mname in minmax_cols:
+    for ci, mname, _ in minmax_cols:
         outs[ci] = _minmax_pass2(plan, t_cols[ci], mname)
-    chans = [outs[ci] for ci in range(len(pack.channels))]
-    return tuple(
-        pack.finalize(i, chans, maximum=jnp.maximum)
-        for i in range(len(aggs))
-    )
+    return tuple(outs[ci] for ci in range(len(pack.channels)))
+
+
+def query_dbindex_multi(plan: DBIndexPlan, values, aggs: tuple,
+                        use_pallas: bool = True,
+                        interpret: Optional[bool] = None):
+    """Fused multi-aggregate DBIndex query: one gather per pass feeds every
+    monoid channel (the Cao et al. multi-window-function sharing, applied to
+    graph windows).
+
+    ``aggs`` is a static tuple of aggregate names sharing one window; the
+    channels are deduped (``sum``/``avg`` share the value channel, ``count``/
+    ``avg`` the cardinality channel, registered derived aggregates ride
+    extra ``square`` channels), pass 1 runs once over the deduped value
+    channels, and pass 2 gathers one stacked ``[block_capacity, C]`` matrix
+    feeding k per-monoid segment reduces.  Returns one array per aggregate,
+    in ``aggs`` order, bit-identical to the per-aggregate ``query_dbindex``
+    results.
+    """
+    from repro.core.aggregates import pack_channels
+
+    aggs = tuple(aggs)
+    chans = _query_dbindex_multi_channels(plan, values, aggs,
+                                          use_pallas=use_pallas,
+                                          interpret=interpret)
+    pack = pack_channels(aggs)
+    return tuple(pack.finalize(i, chans, xp=jnp) for i in range(len(aggs)))
+
+
+# the recompile counter the streaming/serving tests assert on lives on the
+# jitted channel core (the wrapper itself is plain Python)
+query_dbindex_multi._cache_size = _query_dbindex_multi_channels._cache_size
 
 
 def query_dbindex_sharded_multi(plan: DBIndexPlan, values, aggs: tuple,
@@ -588,28 +614,20 @@ def _inherit_scan(wdp, pid, level, max_level: int, n: int, monoid: str,
 
 @functools.partial(jax.jit,
                    static_argnames=("aggs", "schedule", "use_pallas", "interpret"))
-def query_iindex_multi(plan: IIndexPlan, values, aggs: tuple,
-                       schedule: str = "level", use_pallas: bool = True,
-                       interpret: Optional[bool] = None):
-    """Fused multi-aggregate topological query via inheritance.
-
-    One gather of the stacked channel matrix feeds every monoid's
-    window-difference reduce; the inheritance scan then runs once per
-    monoid (sum channels stacked into a single scan).  min/max ride the
-    per-monoid level inheritance — containment (Theorem 5.1) makes the
-    parent's finished aggregate a valid partial for *any* monoid, not just
-    SUM.  Returns one array per aggregate, in ``aggs`` order.
-    """
+def _query_iindex_multi_channels(plan: IIndexPlan, values, aggs: tuple,
+                                 schedule: str = "level",
+                                 use_pallas: bool = True,
+                                 interpret: Optional[bool] = None):
+    """Jitted channel core of :func:`query_iindex_multi` (finalizers run
+    eagerly in the wrapper — see ``_query_dbindex_multi_channels``)."""
     from repro.core.aggregates import pack_channels
 
     pack = pack_channels(aggs)
     values = jnp.asarray(values, jnp.float32)
     n = plan.n
     ones = jnp.ones(n, jnp.float32)
-    cols = jnp.stack(
-        [values if src == "value" else ones for _, src in pack.channels],
-        axis=1,
-    )  # [n, C]
+    srcs = {"value": values, "ones": ones, "square": values * values}
+    cols = jnp.stack([srcs[src] for _, src in pack.channels], axis=1)  # [n, C]
     g = jnp.take(cols, plan.wd_plan.gather_padded, axis=0)  # one gather
     chans = [None] * len(pack.channels)
     sum_cols = pack.channels_of("sum")
@@ -627,7 +645,30 @@ def query_iindex_multi(plan: IIndexPlan, values, aggs: tuple,
             wdp = _segment_minmax_gathered(plan.wd_plan, g[:, ci], n, mname)
             chans[ci] = _inherit_scan(wdp, plan.pid, plan.level,
                                       plan.max_level, n, mname, schedule)
-    return tuple(
-        pack.finalize(i, chans, maximum=jnp.maximum)
-        for i in range(len(aggs))
-    )
+    return tuple(chans)
+
+
+def query_iindex_multi(plan: IIndexPlan, values, aggs: tuple,
+                       schedule: str = "level", use_pallas: bool = True,
+                       interpret: Optional[bool] = None):
+    """Fused multi-aggregate topological query via inheritance.
+
+    One gather of the stacked channel matrix feeds every monoid's
+    window-difference reduce; the inheritance scan then runs once per
+    monoid (sum channels stacked into a single scan).  min/max ride the
+    per-monoid level inheritance — containment (Theorem 5.1) makes the
+    parent's finished aggregate a valid partial for *any* monoid, not just
+    SUM.  Returns one array per aggregate, in ``aggs`` order.
+    """
+    from repro.core.aggregates import pack_channels
+
+    aggs = tuple(aggs)
+    chans = _query_iindex_multi_channels(plan, values, aggs,
+                                         schedule=schedule,
+                                         use_pallas=use_pallas,
+                                         interpret=interpret)
+    pack = pack_channels(aggs)
+    return tuple(pack.finalize(i, chans, xp=jnp) for i in range(len(aggs)))
+
+
+query_iindex_multi._cache_size = _query_iindex_multi_channels._cache_size

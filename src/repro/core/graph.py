@@ -105,6 +105,28 @@ class Graph:
             attrs=dict(self.attrs),
         )
 
+    def reverse_view(self) -> "Graph":
+        """Edge-flipped graph sharing this graph's CSR caches, O(1).
+
+        The reverse adjacency already exists (``in_indptr``/``in_indices``),
+        so the flipped view just swaps the cached arrays instead of paying
+        ``__post_init__``'s edge sort + CSR builds — reverse traversals
+        (topological oracles, affected-owner BFS, ``KHop(k, "in")`` leaves)
+        sit in per-batch maintenance hot paths."""
+        if not self.directed:
+            return self
+        rv = object.__new__(Graph)
+        object.__setattr__(rv, "n", self.n)
+        object.__setattr__(rv, "src", self.dst)
+        object.__setattr__(rv, "dst", self.src)
+        object.__setattr__(rv, "directed", True)
+        object.__setattr__(rv, "attrs", self.attrs)
+        object.__setattr__(rv, "out_indptr", self.in_indptr)
+        object.__setattr__(rv, "out_indices", self.in_indices)
+        object.__setattr__(rv, "in_indptr", self.out_indptr)
+        object.__setattr__(rv, "in_indices", self.out_indices)
+        return rv
+
     # --------------------------- edge keys ---------------------------- #
     def edge_keys(self, src: Optional[Array] = None, dst: Optional[Array] = None) -> Array:
         """Canonical int64 key per edge (orientation-insensitive when

@@ -70,15 +70,16 @@ class IIndex:
         chans = a.prepare(np.asarray(values))
         outs = []
         for monoid, chan in zip(a.monoids, chans):
+            ident = monoid.identity_for(chan.dtype)  # dtype-safe (no upcast)
             # Σ(WD(v)) for all v in one reduceat
-            wdp = np.full(self.n, monoid.identity)
+            wdp = np.full(self.n, ident, dtype=chan.dtype)
             if self.wd_members.size:
                 starts = self.wd_offsets[:-1]
                 nonempty = np.diff(self.wd_offsets) > 0
                 red = monoid.np_op.reduceat(
                     chan[self.wd_members], np.minimum(starts, self.wd_members.size - 1)
                 )
-                wdp = np.where(nonempty, red, monoid.identity)
+                wdp = np.where(nonempty, red, ident)
             ans = wdp.copy()
             for v in self.topo_order:  # inherit parent's finished aggregate
                 p = self.pid[v]

@@ -48,18 +48,37 @@ class GraphWindowQuery:
         return np.asarray(out[self.agg])
 
 
-def brute_force(g: Graph, window, values: np.ndarray, agg: str = "sum") -> np.ndarray:
-    """Reference oracle used by property tests — independent code path."""
-    from repro.core.windows import khop_window_single, topological_window_single
+def brute_force(g: Graph, window, values: np.ndarray, agg: str = "sum",
+                dtype=None) -> np.ndarray:
+    """Reference oracle used by property tests — independent code path.
+
+    Per-vertex *set evaluation*: one frontier BFS per leaf, NumPy set ops
+    per combinator (:func:`~repro.core.windows.expr_window_single`), then a
+    direct monoid reduce over the member set — no bitsets, no blocks, no
+    sharing.  ``dtype`` pins the channel dtype (e.g. ``np.float32`` to
+    differentially match a device engine bit-for-bit on integer-valued
+    attributes: every partial is an exact integer, so evaluation order is
+    irrelevant and the finalizer is the only rounding step on both sides).
+    """
+    from repro.core.windows import (
+        expr_window_single,
+        khop_window_single,
+        topological_window_single,
+    )
 
     a = AGGREGATES[agg]
     chans = a.prepare(np.asarray(values))
-    outs = [np.full(g.n, m.identity) for m in a.monoids]
+    if dtype is not None:
+        chans = tuple(c.astype(dtype) for c in chans)
+    idents = [m.identity_for(c.dtype) for m, c in zip(a.monoids, chans)]
+    outs = [np.full(g.n, i, dtype=c.dtype) for i, c in zip(idents, chans)]
     for v in range(g.n):
         if isinstance(window, KHopWindow):
             w = khop_window_single(g, window.k, v)
-        else:
+        elif isinstance(window, TopologicalWindow):
             w = topological_window_single(g, v)
-        for o, m, c in zip(outs, a.monoids, chans):
-            o[v] = m.np_op.reduce(c[w]) if w.size else m.identity
+        else:
+            w = expr_window_single(g, window, v)
+        for o, m, c, i in zip(outs, a.monoids, chans, idents):
+            o[v] = m.np_op.reduce(c[w]) if w.size else i
     return a.finalize_np(*outs)

@@ -36,7 +36,7 @@ from repro.core.updates import (
     update_dbindex_batch,
     update_iindex_batch,
 )
-from repro.core.windows import KHopWindow, TopologicalWindow
+from repro.core.windows import KHopWindow, TopologicalWindow, filter_attrs
 
 
 def garbage_block_fraction(index) -> float:
@@ -79,6 +79,41 @@ class StalenessPolicy:
             or index.num_blocks > self.max_block_ratio * max(base_blocks, 1)
             or garbage_block_fraction(index) > self.max_garbage_ratio
         )
+
+
+def _attr_only_report(engine, batch, g2: Graph, t0: float) -> Optional[Dict]:
+    """Shared attr-edit handling for the streaming engines (single-host and
+    sharded).  Returns None when normal structural maintenance should run.
+
+    Two cases short-circuit it: a batch editing a :class:`Filter`
+    predicate attribute rebuilds outright (membership may change for every
+    owner — the indices are built over the *filtered* member sets), and a
+    pure attribute-value batch (``size == 0``) skips index/plan
+    maintenance entirely — both indices are structure-only, so swapping in
+    the attr-updated graph is the whole update.
+    """
+    touched = set(batch.edited_attrs()) & set(filter_attrs(engine.window))
+    if batch.size > 0 and not touched:
+        return None
+    engine.graph = g2
+    if touched:
+        engine._build()  # predicate edits re-filter every window
+        changed = np.arange(g2.n, dtype=np.int32)
+    else:
+        changed = np.empty(0, np.int32)
+    plan_version = getattr(engine, "plan_version", None)
+    if plan_version is None:
+        plan_version = int(engine.plan.stats.get("version", 0))
+    return {
+        "batch_size": batch.size,
+        "attr_edits": int(batch.attr_size),
+        "affected": int(changed.size),
+        "affected_owners": changed,
+        "plan_version": int(plan_version),
+        "t_index_s": time.perf_counter() - t0,
+        "t_plan_s": 0.0,
+        "reorganized": bool(touched),
+    }
 
 
 class StreamingEngine:
@@ -168,6 +203,9 @@ class StreamingEngine:
         """
         t0 = time.perf_counter()
         g2 = apply_batch(self.graph, batch) if graph is None else graph
+        fast = _attr_only_report(self, batch, g2, t0)
+        if fast is not None:
+            return fast
         if self.index_kind == "dbindex":
             idx2, changed = update_dbindex_batch(
                 self.index, g2, self.window, batch,

@@ -42,9 +42,15 @@ from repro.core.dbindex import DBIndex, _Builder, _blocks_from_windows, build_db
 from repro.core.graph import Graph
 from repro.core.iindex import IIndex, build_iindex
 from repro.core.windows import (
+    KHop,
     KHopWindow,
+    Topo,
     TopologicalWindow,
+    WindowExpr,
     descendants_multi,
+    expr_leaves,
+    expr_windows,
+    graph_view,
     khop_reach_bitsets,
     khop_windows,
 )
@@ -60,19 +66,45 @@ OP_DELETE = np.int8(-1)
 
 
 @dataclasses.dataclass(frozen=True)
+class AttrEdit:
+    """One vectorized attribute-value edit: ``attrs[name][vertices] = values``.
+
+    Attribute edits never touch window *membership* (both indices are
+    structure-only) — except for :class:`~repro.core.windows.Filter`
+    predicates, which the Session maintenance path detects and rebuilds.
+    What they do invalidate is cached *results*: exactly the owners whose
+    windows contain an edited vertex (the DBIndex reverse link map).
+    """
+
+    name: str
+    vertices: Array  # int64 [K]
+    values: Array  # [K], cast to the attribute's dtype on apply
+
+    def __post_init__(self):
+        object.__setattr__(self, "vertices",
+                           np.asarray(self.vertices, np.int64))
+        object.__setattr__(self, "values", np.asarray(self.values))
+        assert self.vertices.shape == self.values.shape
+
+
+@dataclasses.dataclass(frozen=True)
 class UpdateBatch:
     """A vectorized set of edge insertions/deletions, applied atomically.
 
     ``op[i]`` is +1 (insert) or -1 (delete).  ``ts`` is an optional
     per-edit timestamp used by stream replay (not by maintenance).
     Semantics of :func:`apply_batch`: deletions are resolved against the
-    *pre-batch* edge list first, then insertions are appended.
+    *pre-batch* edge list first, then insertions are appended, then
+    ``attr_edits`` (vectorized attribute-value assignments) land on the
+    new graph.  ``size`` counts structural edits only — an attr-only batch
+    (``size == 0``) skips index/plan maintenance entirely.
     """
 
     src: Array  # int32 [B]
     dst: Array  # int32 [B]
     op: Array  # int8  [B]
     ts: Optional[Array] = None  # float64 [B] or None
+    attr_edits: Tuple[AttrEdit, ...] = ()
 
     def __post_init__(self):
         object.__setattr__(self, "src", np.asarray(self.src, np.int32))
@@ -82,10 +114,18 @@ class UpdateBatch:
         if self.ts is not None:
             object.__setattr__(self, "ts", np.asarray(self.ts, np.float64))
             assert self.ts.shape == self.src.shape
+        object.__setattr__(self, "attr_edits", tuple(self.attr_edits))
 
     @property
     def size(self) -> int:
         return int(self.src.size)
+
+    @property
+    def attr_size(self) -> int:
+        return int(sum(e.vertices.size for e in self.attr_edits))
+
+    def edited_attrs(self) -> Tuple[str, ...]:
+        return tuple(dict.fromkeys(e.name for e in self.attr_edits))
 
     @staticmethod
     def inserts(src: Sequence[int], dst: Sequence[int], ts=None) -> "UpdateBatch":
@@ -100,6 +140,13 @@ class UpdateBatch:
                            np.full(src.size, OP_DELETE), ts)
 
     @staticmethod
+    def attr_set(name: str, vertices: Sequence[int], values) -> "UpdateBatch":
+        """An attribute-only batch: no structural edits, one value edit."""
+        empty = np.empty(0, np.int32)
+        return UpdateBatch(empty, empty, np.empty(0, np.int8),
+                           attr_edits=(AttrEdit(name, vertices, values),))
+
+    @staticmethod
     def concat(batches: Sequence["UpdateBatch"]) -> "UpdateBatch":
         ts = None
         if batches and all(b.ts is not None for b in batches):
@@ -109,13 +156,24 @@ class UpdateBatch:
             np.concatenate([b.dst for b in batches]) if batches else np.empty(0, np.int32),
             np.concatenate([b.op for b in batches]) if batches else np.empty(0, np.int8),
             ts,
+            tuple(e for b in batches for e in b.attr_edits),
         )
 
 
 def apply_batch(g: Graph, batch: UpdateBatch) -> Graph:
     """Apply a whole batch in O(E + B log B): vectorized key-matched
     deletions (first occurrence per requested multiplicity) + appended
-    insertions.  Raises KeyError if a deletion has no matching edge."""
+    insertions + attribute-value edits.  Raises KeyError if a deletion has
+    no matching edge."""
+    g = _apply_structural(g, batch)
+    for e in batch.attr_edits:
+        arr = np.array(g.attrs[e.name])  # copy: graphs are immutable
+        arr[e.vertices] = e.values.astype(arr.dtype)
+        g = g.with_attr(e.name, arr)
+    return g
+
+
+def _apply_structural(g: Graph, batch: UpdateBatch) -> Graph:
     if batch.size == 0:
         return g
     ins = batch.op > 0
@@ -210,11 +268,7 @@ def affected_owners_khop_multi(
     seeds = np.unique(np.asarray(seeds, np.int64))
     if seeds.size == 0:
         return np.empty(0, np.int32)
-    rg = (
-        Graph(n=g_new.n, src=g_new.dst, dst=g_new.src, directed=True)
-        if g_new.directed
-        else g_new
-    )
+    rg = g_new.reverse_view()  # O(1) CSR-cache swap (self when undirected)
     if use_device is None:  # auto-routing: device pays off past the
         # threshold, and only when there is at least one hop to expand
         use_device = seeds.size >= DEVICE_BFS_MIN_SEEDS and k > 1
@@ -256,6 +310,19 @@ def sharded_affected_owners(
             descendants_multi(g_new, s) if s.size else np.empty(0, np.int32)
             for s in slices
         ]
+    elif isinstance(window, WindowExpr):
+        # composite windows: affected sets distribute over *batch* unions
+        # (each leaf's set does), so slice the batch's edits over the data
+        # axis — the per-shard union is exactly the single-host set
+        idx_slices = np.array_split(np.arange(batch.size), max(num_shards, 1))
+        per_shard = [
+            affected_owners(
+                g_new, window,
+                UpdateBatch(batch.src[s], batch.dst[s], batch.op[s]),
+                use_device=use_device,
+            ) if s.size else np.empty(0, np.int32)
+            for s in idx_slices
+        ]
     else:
         raise TypeError(window)
     owners = (
@@ -265,26 +332,57 @@ def sharded_affected_owners(
     return owners, per_shard
 
 
+def _leaf_affected(g_new: Graph, leaf, batch: UpdateBatch,
+                   use_device: Optional[bool]) -> Array:
+    """Affected owners of one *leaf* window for a structural batch."""
+    if isinstance(leaf, KHopWindow):
+        return affected_owners_khop_multi(
+            g_new, leaf.k, _khop_seeds(g_new, batch), use_device=use_device
+        )
+    if isinstance(leaf, KHop):
+        view = graph_view(g_new, leaf.direction)
+        if leaf.direction == "in" and g_new.directed:
+            # W_in(v) = {u : u →≤k v}: an edit on (s, t) reaches v's window
+            # only through t, so the affected set is the forward (k-1)-ball
+            # of the heads — which IS the reverse ball in the flipped view
+            seeds = batch.dst.astype(np.int64)
+        else:
+            seeds = _khop_seeds(view, batch)
+        return affected_owners_khop_multi(view, leaf.k, seeds,
+                                          use_device=use_device)
+    if isinstance(leaf, (TopologicalWindow, Topo)):
+        return descendants_multi(g_new, batch.dst.astype(np.int64))
+    raise TypeError(leaf)
+
+
 def affected_owners(
     g_new: Graph, window, batch: UpdateBatch,
     use_device: Optional[bool] = None,
 ) -> Array:
-    """Affected-owner set of one batch for any window kind — the exact set
-    whose windows the batched maintenance recomputes, and therefore the
-    exact invalidation set for any cached per-vertex results (everything
-    outside it provably keeps its window, so a serving-layer cache entry
-    for it stays valid across the batch).
+    """Affected-owner set of one batch for any window expression — the
+    exact set whose windows the batched maintenance recomputes, and
+    therefore the exact invalidation set for any cached per-vertex results
+    (everything outside it provably keeps its window, so a serving-layer
+    cache entry for it stays valid across the batch).
 
     K-hop windows: every vertex reaching a touched endpoint within k-1
     hops (plus the endpoints); topological windows: the descendant cone of
-    the touched edge heads.  ``use_device`` pins the k-hop BFS routing.
+    the touched edge heads.  Composite windows inherit the property from
+    their leaves: set operations are pointwise on per-vertex member sets,
+    so a composite window of ``v`` can only change if some leaf window of
+    ``v`` changed — the union of the leaves' affected sets is a sound (and
+    leaf-exact) invalidation set.  ``use_device`` pins the k-hop BFS
+    routing.
     """
     if isinstance(window, KHopWindow):
-        return affected_owners_khop_multi(
-            g_new, window.k, _khop_seeds(g_new, batch), use_device=use_device
-        )
+        return _leaf_affected(g_new, window, batch, use_device)
     if isinstance(window, TopologicalWindow):
-        return descendants_multi(g_new, batch.dst.astype(np.int64))
+        return _leaf_affected(g_new, window, batch, use_device)
+    if isinstance(window, WindowExpr):
+        leaves = {l for l in expr_leaves(window)}
+        sets = [_leaf_affected(g_new, l, batch, use_device) for l in leaves]
+        return (np.unique(np.concatenate(sets)).astype(np.int32)
+                if sets else np.empty(0, np.int32))
     raise TypeError(window)
 
 
@@ -297,6 +395,27 @@ def affected_owners_khop(g_new: Graph, k: int, s: int, t: int) -> Array:
 def descendants(g: Graph, t: int) -> Array:
     """t plus all vertices reachable from t (directed)."""
     return descendants_multi(g, np.array([t], np.int64))
+
+
+def containing_owners(index, g: Graph, window, vertices: Array) -> Array:
+    """Owners whose windows *contain* any of the given vertices — the
+    attribute-update invalidation set (an attr edit changes the cached
+    aggregate of exactly the windows the edited vertex sits in; window
+    membership itself is untouched).
+
+    For a DBIndex the bipartite link structure already encodes the reverse
+    mapping (:meth:`~repro.core.dbindex.DBIndex.owners_of_members`); for an
+    I-Index, ``u ∈ W_t(v)`` iff ``v`` is a descendant of ``u``, so the set
+    is one forward multi-source BFS.
+    """
+    vertices = np.asarray(vertices, np.int64)
+    if vertices.size == 0:
+        return np.empty(0, np.int32)
+    if isinstance(index, DBIndex):
+        return index.owners_of_members(vertices)
+    if isinstance(index, IIndex):
+        return descendants_multi(g, vertices)
+    raise TypeError(f"no reverse window map for {type(index).__name__}")
 
 
 def _khop_seeds(g: Graph, batch: UpdateBatch) -> Array:
@@ -452,6 +571,11 @@ def update_dbindex_batch(
         order = g_new.topological_order()
         packed, _ = _cone_windows_from_old(g_new, owners, index.window_of, order)
         wins = [_unpack_bits(packed[int(v)], index.n) for v in owners]
+    elif isinstance(window, WindowExpr):
+        # composite windows: re-evaluate the expression for the affected
+        # owners only (batched bitset evaluation); the phase-1 merge and
+        # everything downstream is window-agnostic
+        wins = expr_windows(g_new, window, owners)
     else:
         raise TypeError(window)
     return _merge_affected(index, owners, wins), owners

@@ -1,4 +1,4 @@
-"""Window specifications and host-side window computation.
+"""Window specifications, the window expression algebra, and host evaluation.
 
 Implements the paper's two window instantiations (Definitions 1 and 2):
 
@@ -9,6 +9,24 @@ Implements the paper's two window instantiations (Definitions 1 and 2):
 * :class:`TopologicalWindow` — ``W_t(v)`` = ``{v}`` plus all ancestors of
   ``v`` in a DAG (the paper's example ``W_t(E) = {A,B,C,D,E}`` includes
   ``E``).
+
+The paper notes DBIndex is agnostic to *how* per-vertex windows are defined
+— dense-block sharing works for any window sets — so the two instantiations
+are merely the **leaves** of an open :class:`WindowExpr` algebra:
+
+* leaves :class:`KHop` (direction-aware k-hop ball) and :class:`Topo`;
+* combinators :class:`Union`, :class:`Intersect`, :class:`Diff` (per-vertex
+  set operations on the member sets);
+* :class:`Filter` — mask window members by a boolean vertex attribute.
+
+All expressions are hashable value objects; :func:`canonicalize` flattens
+nested combinators, sorts commutative children, dedups, and applies
+containment rewrites (``KHop(1) ⊆ KHop(2)`` so their union IS ``KHop(2)``
+— reuse the larger materialization).  Evaluation rides the same packed
+bitset machinery the leaves use: a combinator is one vectorized bitwise
+op over the children's reachability matrices (:func:`expr_reach_bitsets`),
+so the *existing* DBIndex builder/plan pipeline consumes composite windows
+unchanged.
 
 Host computation uses *batched multi-source bitset BFS*: reachability bits
 for a batch of B source vertices are packed into ``uint64`` words and the
@@ -32,10 +50,28 @@ Array = np.ndarray
 
 
 # ---------------------------------------------------------------------- #
-#  Window specs
+#  Window expression algebra
+# ---------------------------------------------------------------------- #
+class WindowExpr:
+    """Base class of all window expressions (leaves and combinators).
+
+    Subclasses are frozen dataclasses — hashable value objects usable as
+    dict keys (plan groups, session states).  ``_key()`` returns a nested
+    tuple that totally orders expressions for canonical child sorting.
+    """
+
+    def name(self) -> str:
+        raise NotImplementedError
+
+    def _key(self) -> tuple:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------- #
+#  Window specs (canonical leaves)
 # ---------------------------------------------------------------------- #
 @dataclasses.dataclass(frozen=True)
-class KHopWindow:
+class KHopWindow(WindowExpr):
     """k-hop window (Definition 1)."""
 
     k: int
@@ -46,6 +82,9 @@ class KHopWindow:
     def name(self) -> str:
         return f"khop[{self.k}]"
 
+    def _key(self) -> tuple:
+        return ("khop", self.k, "out")
+
     def windows(self, g: Graph, sources: Optional[Array] = None) -> List[Array]:
         return khop_windows(g, self.k, sources)
 
@@ -54,17 +93,240 @@ class KHopWindow:
 
 
 @dataclasses.dataclass(frozen=True)
-class TopologicalWindow:
+class TopologicalWindow(WindowExpr):
     """Topological window (Definition 2) — ancestors in a DAG, plus self."""
 
     def name(self) -> str:
         return "topological"
 
+    def _key(self) -> tuple:
+        return ("topological",)
+
     def windows(self, g: Graph, sources: Optional[Array] = None) -> List[Array]:
         return topological_windows(g, sources)
 
 
-WindowSpec = object  # typing alias; either of the dataclasses above
+@dataclasses.dataclass(frozen=True)
+class KHop(WindowExpr):
+    """Direction-aware k-hop leaf.
+
+    ``direction="out"`` is Definition 1 (canonicalizes to
+    :class:`KHopWindow`); ``"in"`` follows reverse edges (the k-hop
+    *audience* of a vertex); ``"both"`` ignores orientation.  On undirected
+    graphs all three coincide (the CSR caches are symmetrized), but
+    canonicalization is graph-independent so only ``"out"`` is rewritten.
+    """
+
+    k: int
+    direction: str = "out"
+
+    def __post_init__(self):
+        assert self.k >= 1
+        assert self.direction in ("out", "in", "both"), self.direction
+
+    def name(self) -> str:
+        return f"khop[{self.k},{self.direction}]"
+
+    def _key(self) -> tuple:
+        return ("khop", self.k, self.direction)
+
+
+@dataclasses.dataclass(frozen=True)
+class Topo(WindowExpr):
+    """Spelling alias of :class:`TopologicalWindow` (canonicalizes to it)."""
+
+    def name(self) -> str:
+        return "topological"
+
+    def _key(self) -> tuple:
+        return ("topological",)
+
+
+@dataclasses.dataclass(frozen=True, init=False)
+class Union(WindowExpr):
+    """W(v) = union of the children's windows of ``v`` (commutative)."""
+
+    exprs: Tuple[WindowExpr, ...]
+
+    def __init__(self, *exprs):
+        assert exprs, "Union needs at least one child window"
+        object.__setattr__(self, "exprs", tuple(exprs))
+
+    def name(self) -> str:
+        return "union(" + ",".join(e.name() for e in self.exprs) + ")"
+
+    def _key(self) -> tuple:
+        return ("union",) + tuple(e._key() for e in self.exprs)
+
+
+@dataclasses.dataclass(frozen=True, init=False)
+class Intersect(WindowExpr):
+    """W(v) = intersection of the children's windows of ``v`` (commutative)."""
+
+    exprs: Tuple[WindowExpr, ...]
+
+    def __init__(self, *exprs):
+        assert exprs, "Intersect needs at least one child window"
+        object.__setattr__(self, "exprs", tuple(exprs))
+
+    def name(self) -> str:
+        return "intersect(" + ",".join(e.name() for e in self.exprs) + ")"
+
+    def _key(self) -> tuple:
+        return ("intersect",) + tuple(e._key() for e in self.exprs)
+
+
+@dataclasses.dataclass(frozen=True)
+class Diff(WindowExpr):
+    """W(v) = a's window of ``v`` minus b's window of ``v``."""
+
+    a: WindowExpr
+    b: WindowExpr
+
+    def name(self) -> str:
+        return f"diff({self.a.name()},{self.b.name()})"
+
+    def _key(self) -> tuple:
+        return ("diff", self.a._key(), self.b._key())
+
+
+@dataclasses.dataclass(frozen=True)
+class Filter(WindowExpr):
+    """W(v) = members u of the child's window with ``attrs[pred][u]`` truthy.
+
+    The predicate is a *vertex attribute name*: membership depends on
+    attribute values, so attribute edits to ``predicate_attr`` are
+    structural for the windows (the maintenance path rebuilds the affected
+    state — see ``Session.update``).
+    """
+
+    expr: WindowExpr
+    predicate_attr: str
+
+    def name(self) -> str:
+        return f"filter({self.expr.name()},{self.predicate_attr})"
+
+    def _key(self) -> tuple:
+        return ("filter", self.expr._key(), self.predicate_attr)
+
+
+def is_leaf(expr) -> bool:
+    """True for the materialization primitives (no child expressions)."""
+    return isinstance(expr, (KHopWindow, TopologicalWindow, KHop, Topo))
+
+
+def window_kind_of(window) -> str:
+    """Capability kind: "khop" / "topological" for the paper leaves,
+    "composite" for combinators and direction-variant k-hop leaves."""
+    if isinstance(window, KHopWindow):
+        return "khop"
+    if isinstance(window, (TopologicalWindow, Topo)):
+        return "topological"
+    if isinstance(window, KHop):
+        return "khop" if window.direction == "out" else "composite"
+    if isinstance(window, WindowExpr):
+        return "composite"
+    raise TypeError(window)
+
+
+def contains(a, b) -> bool:
+    """Provable ``b ⊆ a`` (conservative: False means "unknown").
+
+    Drives the canonicalization containment rewrites: a union drops every
+    child some sibling provably contains (reuse the larger materialization),
+    an intersection drops every child that provably contains a sibling.
+    """
+    if a == b:
+        return True
+    ka, kb = a._key(), b._key()
+    if ka[0] == kb[0] == "khop" and ka[2] == kb[2]:
+        return kb[1] <= ka[1]
+    if isinstance(a, Union) and any(contains(c, b) for c in a.exprs):
+        return True
+    if isinstance(b, Intersect) and any(contains(a, c) for c in b.exprs):
+        return True
+    if isinstance(b, Filter) and contains(a, b.expr):
+        return True
+    return False
+
+
+def canonicalize(expr):
+    """Canonical form: flatten, sort + dedup commutative children, rewrite
+    containment, normalize leaf spellings.  Equal queries — e.g.
+    ``Union(A, B)`` and ``Union(B, A)`` — canonicalize to one value object
+    and therefore hit one cached plan."""
+    if isinstance(expr, (KHopWindow, TopologicalWindow)):
+        return expr
+    if isinstance(expr, KHop):
+        return KHopWindow(expr.k) if expr.direction == "out" else expr
+    if isinstance(expr, Topo):
+        return TopologicalWindow()
+    if isinstance(expr, (Union, Intersect)):
+        cls = type(expr)
+        flat: List[WindowExpr] = []
+        for c in expr.exprs:
+            c = canonicalize(c)
+            flat.extend(c.exprs if isinstance(c, cls) else [c])
+        flat = sorted(set(flat), key=lambda e: e._key())
+        kept = _drop_contained(flat, larger_wins=cls is Union)
+        if len(kept) == 1:
+            return kept[0]
+        return cls(*kept)
+    if isinstance(expr, Diff):
+        return Diff(canonicalize(expr.a), canonicalize(expr.b))
+    if isinstance(expr, Filter):
+        child = canonicalize(expr.expr)
+        if isinstance(child, Filter) and child.predicate_attr == expr.predicate_attr:
+            return child
+        return Filter(child, expr.predicate_attr)
+    raise TypeError(f"not a window expression: {expr!r}")
+
+
+def _drop_contained(exprs: Sequence[WindowExpr], larger_wins: bool) -> List[WindowExpr]:
+    """Containment filter for deduped commutative children: a union keeps
+    the larger of a provably nested pair, an intersection the smaller."""
+    out: List[WindowExpr] = []
+    for c in exprs:
+        if larger_wins:
+            redundant = any(o != c and contains(o, c) for o in exprs)
+        else:
+            redundant = any(o != c and contains(c, o) for o in exprs)
+        if not redundant:
+            out.append(c)
+    return out
+
+
+def expr_leaves(expr) -> List[WindowExpr]:
+    """All leaf windows of an expression, in evaluation order."""
+    if is_leaf(expr):
+        return [expr]
+    if isinstance(expr, (Union, Intersect)):
+        return [l for c in expr.exprs for l in expr_leaves(c)]
+    if isinstance(expr, Diff):
+        return expr_leaves(expr.a) + expr_leaves(expr.b)
+    if isinstance(expr, Filter):
+        return expr_leaves(expr.expr)
+    raise TypeError(expr)
+
+
+def filter_attrs(expr) -> frozenset:
+    """Attribute names any :class:`Filter` in the expression predicates on
+    (edits to them change window *membership*, not just values)."""
+    if is_leaf(expr):
+        return frozenset()
+    if isinstance(expr, Filter):
+        return frozenset({expr.predicate_attr}) | filter_attrs(expr.expr)
+    if isinstance(expr, (Union, Intersect)):
+        out = frozenset()
+        for c in expr.exprs:
+            out |= filter_attrs(c)
+        return out
+    if isinstance(expr, Diff):
+        return filter_attrs(expr.a) | filter_attrs(expr.b)
+    raise TypeError(expr)
+
+
+WindowSpec = object  # typing alias; any WindowExpr
 
 
 # ---------------------------------------------------------------------- #
@@ -255,3 +517,111 @@ def topological_window_single(g: Graph, v: int) -> Array:
                 seen[p] = True
                 frontier.append(int(p))
     return np.flatnonzero(seen).astype(np.int32)
+
+
+# ---------------------------------------------------------------------- #
+#  Expression evaluation (packed bitsets — the generic lowering path)
+# ---------------------------------------------------------------------- #
+def graph_view(g: Graph, direction: str) -> Graph:
+    """Directed graph reinterpreted for a leaf's traversal direction.
+
+    ``"out"`` is the graph itself; ``"in"`` swaps edge orientation;
+    ``"both"`` drops orientation.  Undirected graphs are returned as-is
+    (their CSR caches are already symmetrized).  Views are memoized on the
+    graph object (graphs are immutable — updates build new ones): callers
+    sit in hot loops (per-vertex oracle BFS, per-chunk expression
+    materialization, per-batch affected-owner maintenance) and must not
+    pay the O(E log E) CSR rebuild on every call."""
+    if not g.directed or direction == "out":
+        return g
+    if direction == "in":
+        return g.reverse_view()  # O(1): swaps the existing CSR caches
+    memo = getattr(g, "_dir_views", None)
+    if memo is None:
+        memo = {}
+        object.__setattr__(g, "_dir_views", memo)
+    if direction not in memo:
+        # "both" genuinely needs the symmetrized CSR built once per graph
+        memo[direction] = Graph(n=g.n, src=g.src, dst=g.dst, directed=False)
+    return memo[direction]
+
+
+def expr_reach_bitsets(g: Graph, expr, sources: Array) -> Array:
+    """Packed membership matrix of a window expression: bit ``j`` of word
+    row ``u`` says ``u ∈ W_expr(sources[j])``.  Combinators are single
+    vectorized bitwise ops over the children's matrices — the same
+    ``[n, ceil(B/64)]`` layout the leaf BFS produces, so the DBIndex
+    builder's pair-extraction path consumes composite windows unchanged."""
+    sources = np.asarray(sources, np.int32)
+    if isinstance(expr, KHopWindow):
+        return khop_reach_bitsets(g, expr.k, sources)
+    if isinstance(expr, KHop):
+        return khop_reach_bitsets(graph_view(g, expr.direction), expr.k, sources)
+    if isinstance(expr, (TopologicalWindow, Topo)):
+        # u ∈ W_t(v) iff u reaches v: one reverse multi-source BFS, run to
+        # convergence (khop_reach_bitsets breaks on a fixed point)
+        return khop_reach_bitsets(graph_view(g, "in"), max(g.n, 1), sources)
+    if isinstance(expr, Union):
+        out = expr_reach_bitsets(g, expr.exprs[0], sources)
+        for c in expr.exprs[1:]:
+            out = out | expr_reach_bitsets(g, c, sources)
+        return out
+    if isinstance(expr, Intersect):
+        out = expr_reach_bitsets(g, expr.exprs[0], sources)
+        for c in expr.exprs[1:]:
+            out = out & expr_reach_bitsets(g, c, sources)
+        return out
+    if isinstance(expr, Diff):
+        return expr_reach_bitsets(g, expr.a, sources) & ~expr_reach_bitsets(
+            g, expr.b, sources)
+    if isinstance(expr, Filter):
+        out = expr_reach_bitsets(g, expr.expr, sources).copy()
+        pred = np.asarray(g.attrs[expr.predicate_attr])
+        out[pred == 0] = 0  # member rows failing the predicate drop out
+        return out
+    raise TypeError(f"not a window expression: {expr!r}")
+
+
+def expr_windows(g: Graph, expr, sources: Optional[Array] = None,
+                 batch: int = 4096) -> List[Array]:
+    """Materialize W_expr for the given sources (default: all vertices)."""
+    if sources is None:
+        sources = np.arange(g.n, dtype=np.int32)
+    sources = np.asarray(sources, np.int32)
+    out: List[Array] = []
+    for lo in range(0, sources.size, batch):
+        chunk = sources[lo : lo + batch]
+        reach = expr_reach_bitsets(g, expr, chunk)
+        out.extend(_bitsets_to_windows(reach, chunk))
+    return out
+
+
+def expr_window_single(g: Graph, expr, v: int) -> Array:
+    """Per-vertex set evaluation — the brute-force oracle path, kept
+    independent of the bitset machinery (frontier BFS per leaf + NumPy set
+    ops per combinator)."""
+    if isinstance(expr, KHopWindow):
+        return khop_window_single(g, expr.k, v)
+    if isinstance(expr, KHop):
+        return khop_window_single(graph_view(g, expr.direction), expr.k, v)
+    if isinstance(expr, (TopologicalWindow, Topo)):
+        return topological_window_single(g, v)
+    if isinstance(expr, Union):
+        out = expr_window_single(g, expr.exprs[0], v)
+        for c in expr.exprs[1:]:
+            out = np.union1d(out, expr_window_single(g, c, v))
+        return out.astype(np.int32)
+    if isinstance(expr, Intersect):
+        out = expr_window_single(g, expr.exprs[0], v)
+        for c in expr.exprs[1:]:
+            out = np.intersect1d(out, expr_window_single(g, c, v))
+        return out.astype(np.int32)
+    if isinstance(expr, Diff):
+        return np.setdiff1d(
+            expr_window_single(g, expr.a, v), expr_window_single(g, expr.b, v)
+        ).astype(np.int32)
+    if isinstance(expr, Filter):
+        members = expr_window_single(g, expr.expr, v)
+        pred = np.asarray(g.attrs[expr.predicate_attr])
+        return members[pred[members] != 0].astype(np.int32)
+    raise TypeError(f"not a window expression: {expr!r}")

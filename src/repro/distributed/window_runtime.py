@@ -275,7 +275,7 @@ def _sharded_query_impl(sharded, repl, values, mesh, axes, aggs, cfg):
     pack = pack_channels(aggs)
     sum_cols = pack.channels_of("sum")
     minmax_cols = [
-        (ci, m) for ci, (m, _) in enumerate(pack.channels) if m != "sum"
+        (ci, m, s) for ci, (m, s) in enumerate(pack.channels) if m != "sum"
     ]
     _SEG = {"min": jax.ops.segment_min, "max": jax.ops.segment_max}
     _COMB = {"min": jax.lax.pmin, "max": jax.lax.pmax}
@@ -297,16 +297,24 @@ def _sharded_query_impl(sharded, repl, values, mesh, axes, aggs, cfg):
             return mask[:, None] if bat else mask
 
         # ---- pass 1: block partials, one psum for the stacked channels --- #
+        # "square" channels (registered derived aggregates) square the
+        # gathered rows — take(v², idx) == take(v, idx)², so no extra gather
         t_cols = {}
-        need_val = any(pack.channels[ci] == ("sum", "value") for ci in sum_cols)
-        if need_val:
+
+        def sum_pass1(rows):
             ok1 = p1s >= 0
             part = jax.ops.segment_sum(
-                jnp.where(col(ok1), jnp.take(vals, p1g, axis=0), 0.0),
+                jnp.where(col(ok1), rows, 0.0),
                 jnp.where(ok1, p1s, nb_seg),
                 num_segments=nb_seg + 1,
             )[:nb_seg]
-            t_val = jax.lax.psum(part, axes)[:cap]
+            return jax.lax.psum(part, axes)[:cap]
+
+        srcs_needed = {pack.channels[ci][1] for ci in sum_cols} - {"ones"}
+        if srcs_needed:
+            rows1 = jnp.take(vals, p1g, axis=0)
+            t_src = {s: sum_pass1(rows1 if s == "value" else rows1 * rows1)
+                     for s in srcs_needed}
         for ci in sum_cols:
             # block cardinalities are host-exact replicated metadata
             if pack.channels[ci][1] == "ones":
@@ -315,17 +323,18 @@ def _sharded_query_impl(sharded, repl, values, mesh, axes, aggs, cfg):
                     if bat else bsz
                 )
             else:
-                t_cols[ci] = t_val
-        for ci, m in minmax_cols:
+                t_cols[ci] = t_src[pack.channels[ci][1]]
+        for ci, m, s in minmax_cols:
+            v_in = vals if s == "value" else vals * vals
             if has_ell:
-                red = _ell_reduce(e1, vals, m)  # [rows/shard(, B)]
+                red = _ell_reduce(e1, v_in, m)  # [rows/shard(, B)]
                 part = _SEG[m](red, jnp.where(e1i >= 0, e1i, cap),
                                num_segments=cap + 1)[:cap]
                 t_cols[ci] = _COMB[m](part, axes)
             else:
                 ok1 = p1s >= 0
                 part = _SEG[m](
-                    jnp.where(col(ok1), jnp.take(vals, p1g, axis=0), _FILL[m]),
+                    jnp.where(col(ok1), jnp.take(v_in, p1g, axis=0), _FILL[m]),
                     jnp.where(ok1, p1s, nb_seg),
                     num_segments=nb_seg + 1,
                 )[:nb_seg]
@@ -345,7 +354,7 @@ def _sharded_query_impl(sharded, repl, values, mesh, axes, aggs, cfg):
             red = jax.lax.psum(part, axes)[:n]
             for j, ci in enumerate(sum_cols):
                 outs[ci] = red[:, j]
-        for ci, m in minmax_cols:
+        for ci, m, _ in minmax_cols:
             if has_ell:
                 red = _ell_reduce(e2, t_cols[ci], m)
                 part = _SEG[m](red, jnp.where(e2i >= 0, e2i, n),
@@ -370,10 +379,10 @@ def _sharded_query_impl(sharded, repl, values, mesh, axes, aggs, cfg):
         out_specs=tuple(P() for _ in pack.channels),
         check_rep=False,
     )
-    chans = fn(sharded, repl, values)
-    return tuple(
-        pack.finalize(i, chans, maximum=jnp.maximum) for i in range(len(aggs))
-    )
+    # channel results only — finalizers run eagerly in the public wrappers
+    # (XLA fusion may FMA-contract a finalizer and re-round; outside the jit
+    # a registered pure finalize matches its NumPy evaluation bit for bit)
+    return fn(sharded, repl, values)
 
 
 _sharded_query = None  # jitted lazily (keeps module import JAX-light)
@@ -404,6 +413,15 @@ def _splan_call_args(splan: ShardedDBPlan):
     return sharded, cfg
 
 
+def _finalize_chans(aggs: tuple, chans):
+    import jax.numpy as jnp
+
+    from repro.core.aggregates import pack_channels
+
+    pack = pack_channels(aggs)
+    return tuple(pack.finalize(i, chans, xp=jnp) for i in range(len(aggs)))
+
+
 def query_sharded_multi(splan: ShardedDBPlan, values, aggs: Sequence[str]):
     """Fused multi-aggregate sharded query; returns one array per aggregate,
     bit-identical to the single-host ``query_dbindex_multi`` results."""
@@ -411,10 +429,11 @@ def query_sharded_multi(splan: ShardedDBPlan, values, aggs: Sequence[str]):
 
     values = jnp.asarray(values, jnp.float32)
     sharded, cfg = _splan_call_args(splan)
-    return _get_sharded_query()(
+    chans = _get_sharded_query()(
         sharded, (splan.block_sizes,), values,
         mesh=splan.mesh, axes=splan.axes, aggs=tuple(aggs), cfg=cfg,
     )
+    return _finalize_chans(tuple(aggs), chans)
 
 
 def query_sharded_many(splan: ShardedDBPlan, values_batch,
@@ -433,11 +452,11 @@ def query_sharded_many(splan: ShardedDBPlan, values_batch,
     vb = jnp.asarray(values_batch, jnp.float32)
     assert vb.ndim == 2, "values_batch must be [B, n]"
     sharded, cfg = _splan_call_args(splan)
-    outs = _get_sharded_query()(
+    chans = _get_sharded_query()(
         sharded, (splan.block_sizes,), vb.T,
         mesh=splan.mesh, axes=splan.axes, aggs=tuple(aggs), cfg=cfg,
     )
-    return tuple(o.T for o in outs)
+    return tuple(o.T for o in _finalize_chans(tuple(aggs), chans))
 
 
 # ---------------------------------------------------------------------- #
@@ -732,10 +751,20 @@ class ShardedStreamState:
     def apply(self, batch: UpdateBatch, graph: Optional[Graph] = None) -> Dict:
         """Apply one batch; the affected-owner BFS runs one seed shard per
         mesh shard, and only changed tile groups ship to the plan shards."""
+        from repro.core.streaming import _attr_only_report
         from repro.core.updates import apply_batch
 
         t0 = time.perf_counter()
         g2 = apply_batch(self.graph, batch) if graph is None else graph
+        fast = _attr_only_report(self, batch, g2, t0)
+        if fast is not None:
+            fast.update(
+                affected_per_shard=[], compacted=False,
+                patch_bytes=0, patch_bytes_per_shard=[],
+                full_plan_bytes=int(self.plan.stats.get("full_bytes", 0)),
+                plan_rebuilt=fast["reorganized"],
+            )
+            return fast
         owners, per_shard_owners = sharded_affected_owners(
             g2, self.window, batch, self.plan.ndev,
             use_device=self.use_device_bfs,
@@ -847,24 +876,26 @@ class ShardedSession(Session):
             use_device_bfs=cfg["use_device_bfs"],
         )
 
-    def _group_artifacts(self, grp):
+    def _group_artifacts(self, gi):
         """A (window, kind) state shared between a sharded group and a
         pinned non-sharded device group holds a :class:`ShardedDBPlan`,
         which single-host executors cannot consume — hand those groups the
         index only (their runner builds a host plan per call)."""
-        index, plan = super()._group_artifacts(grp)
-        if isinstance(plan, ShardedDBPlan):
-            cap = self.registry.capability(grp.engine)
-            if not cap.sharded:
-                return index, None
-        return index, plan
+        arts = super()._group_artifacts(gi)
+        cap = self.registry.capability(self.compiled.groups[gi].engine)
+        if not cap.sharded:
+            arts = tuple(
+                (index, None if isinstance(plan, ShardedDBPlan) else plan)
+                for index, plan in arts
+            )
+        return arts
 
     # ------------------------------------------------------------------ #
-    def _exec_group_many(self, grp, index, plan, vb, graph=None):
-        """Serving traffic across the mesh: sharded groups ride the batched
+    def _exec_term_many(self, grp, window, index, plan, vb, g, aggs):
+        """Serving traffic across the mesh: sharded plans ride the batched
         values axis of the shard-local fn — one launch for the whole
         [B, n] bucket instead of one executable replay per row."""
         if isinstance(plan, ShardedDBPlan):
-            outs = query_sharded_many(plan, vb, grp.aggs)
-            return {a: np.asarray(o) for a, o in zip(grp.aggs, outs)}
-        return super()._exec_group_many(grp, index, plan, vb, graph=graph)
+            outs = query_sharded_many(plan, vb, tuple(aggs))
+            return {a: np.asarray(o) for a, o in zip(aggs, outs)}
+        return super()._exec_term_many(grp, window, index, plan, vb, g, aggs)

@@ -342,10 +342,12 @@ class WindowService:
             grp = groups[gi]
             # padding buys executable reuse only on the jitted batched
             # device paths; a host group would pay one full sequential
-            # query per pad row for nothing
+            # query per pad row for nothing.  artifacts[gi] holds one
+            # (index, plan) pair per materialized term (composite windows
+            # on the algebraic fast path carry several).
             pad = (
                 self.session.registry.capability(grp.engine).device
-                and view.artifacts[gi][1] is not None
+                and any(p is not None for _, p in view.artifacts[gi])
             )
             for lo in range(0, len(reqs), self.bucket):
                 chunk = reqs[lo: lo + self.bucket]
