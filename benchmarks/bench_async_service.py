@@ -1,0 +1,248 @@
+"""Async serving tier benchmark: deadline batching, shedding, recovery.
+
+Acceptance targets (ISSUE 6), asserted here and recorded in
+``BENCH_async_service.json``:
+
+* **p50/p99 latency per request class** for >= 64 concurrent client
+  threads against a live concurrent update stream (every update is also
+  WAL-appended — durability is on the measured path);
+* **deadline flushing beats fill-only flushing on p99 at low load**: a
+  trickle of point reads is bounded by the class deadline instead of
+  waiting for the bucket to fill;
+* **load shedding engages under overload** (sheddable full-graph scans
+  evicted, point reads never) and the shed rate is reported;
+* **crash recovery replay time**: rebuilding the session by replaying the
+  WAL written during the benchmark, verified bit-identical at head.
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_async_service [--smoke]``.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, emit_json, mixed_update_batch
+
+
+def _pcts(lat_s):
+    lat = np.asarray(lat_s, np.float64) * 1e6
+    if lat.size == 0:
+        return 0.0, 0.0
+    return float(np.percentile(lat, 50)), float(np.percentile(lat, 99))
+
+
+def run(n: int = 20_000, deg: float = 6.0, k: int = 1, clients: int = 64,
+        bucket: int = 16, updates: int = 8, max_reqs_per_client: int = 5_000,
+        smoke: bool = False,
+        json_path: str = "BENCH_async_service.json") -> dict:
+    from repro.core.api import QuerySpec, Session
+    from repro.graphs.generators import erdos_renyi
+    from repro.serve import (
+        AsyncWindowService,
+        LoadShedError,
+        RequestClass,
+        WindowService,
+    )
+
+    if smoke:
+        n, updates = 2_000, 12
+    assert clients >= 64, "acceptance: >= 64 concurrent clients"
+
+    rng = np.random.default_rng(0)
+    g = erdos_renyi(n, deg, directed=False, seed=0)
+    g = g.with_attr("val", rng.integers(0, 100, g.n).astype(np.float64))
+    specs = [QuerySpec(("khop", k), a) for a in ("sum", "min")]
+
+    def make_session():
+        return Session(g, specs, device=True, use_pallas=False,
+                       plan_headroom=1.0)
+
+    wal_path = os.path.join(tempfile.mkdtemp(prefix="bench_wal_"), "svc.wal")
+
+    # ------------- phase 1: concurrent clients + update stream ---------- #
+    svc = AsyncWindowService(make_session(), bucket=bucket, wal=wal_path,
+                             max_pending=8 * clients)
+    svc.query(0, vertex=0)  # warm the query compile caches off the clock
+    # warm the maintenance path too (first update compiles the affected-
+    # owner BFS + patch executables); it is WAL-logged like any other
+    svc.update(mixed_update_batch(svc.session.graph,
+                                  np.random.default_rng(99), 8, 4))
+    done = threading.Event()
+    n_updates = [1]
+
+    def writer():
+        # the writer is the phase clock: back-to-back updates (index/plan
+        # maintenance is the pacing), clients hammer reads the whole time
+        wrng = np.random.default_rng(1)
+        while n_updates[0] < updates:
+            svc.update(mixed_update_batch(svc.session.graph, wrng, 8, 4))
+            n_updates[0] += 1
+        done.set()
+
+    tickets_by_class = {"point": [], "interactive": [], "batch": []}
+    lock = threading.Lock()
+
+    def client(cid: int):
+        crng = np.random.default_rng(100 + cid)
+        mine = {"point": [], "interactive": [], "batch": []}
+        for i in range(max_reqs_per_client):
+            if done.is_set():
+                break
+            # 80% point reads, 15% interactive point reads, 5% batch scans
+            r = crng.random()
+            if r < 0.80:
+                cls = "point"
+                t = svc.submit(int(crng.integers(len(specs))),
+                               vertex=int(crng.integers(n)))
+            elif r < 0.95:
+                cls = "interactive"
+                t = svc.submit(int(crng.integers(len(specs))),
+                               vertex=int(crng.integers(n)),
+                               request_class="interactive")
+            else:
+                cls = "batch"
+                try:
+                    t = svc.submit(int(crng.integers(len(specs))),
+                                   request_class="batch")
+                except LoadShedError:
+                    continue
+            try:
+                t.get(timeout=60)
+                mine[cls].append(t)
+            except LoadShedError:
+                pass
+            time.sleep(float(crng.random()) * 2e-3)
+        with lock:
+            for c, ts in mine.items():
+                tickets_by_class[c].extend(ts)
+
+    with svc:
+        wt = threading.Thread(target=writer)
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(clients)]
+        t0 = time.perf_counter()
+        wt.start()
+        for t in threads:
+            t.start()
+        wt.join()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        stats = svc.stats
+    svc.wal.close()
+
+    served = sum(len(v) for v in tickets_by_class.values())
+    per_class = {}
+    for cls, ts in tickets_by_class.items():
+        p50, p99 = _pcts([t.latency_s for t in ts])
+        per_class[cls] = {"count": len(ts), "p50_us": p50, "p99_us": p99}
+        emit(f"async_service/{cls}_p99/n{n}c{clients}", p99,
+             f"p50={p50:.0f}us")
+    qps = served / wall
+    emit(f"async_service/qps/n{n}c{clients}", 1e6 / max(qps, 1e-9),
+         f"{qps:.0f}qps")
+
+    # ------------- phase 2: crash recovery replay time ------------------ #
+    head = np.asarray(WindowService(
+        Session.restore_from_wal(g, specs, wal_path, device=True,
+                                 use_pallas=False, plan_headroom=1.0)
+    ).query(0))  # smoke the whole pipeline once before timing
+    t0 = time.perf_counter()
+    recovered = Session.restore_from_wal(g, specs, wal_path, device=True,
+                                         use_pallas=False, plan_headroom=1.0)
+    replay_s = time.perf_counter() - t0
+    assert recovered.version == n_updates[0]
+    assert np.array_equal(np.asarray(recovered.run()[0]), head), \
+        "recovery is not deterministic"
+    emit(f"async_service/recovery_replay/{n_updates[0]}batches",
+         replay_s * 1e6, f"{replay_s:.3f}s")
+
+    # ------------- phase 3: shed rate under overload -------------------- #
+    shed_svc = AsyncWindowService(make_session(), bucket=4, max_pending=8)
+    shed_svc._flush_lock.acquire()  # stall the flusher: forced overload
+    shed_svc.start()
+    submitted = 64
+    held = []
+    for i in range(submitted):
+        try:
+            held.append(shed_svc.submit(0, request_class="batch"))
+        except LoadShedError:
+            pass
+    shed = shed_svc.shed
+    shed_svc._flush_lock.release()
+    shed_svc.stop()
+    shed_rate = shed / submitted
+    assert shed > 0, "overload never shed anything"
+    emit(f"async_service/shed_rate/{submitted}scans", shed_rate * 1e2,
+         f"{shed}shed")
+
+    # ------------- phase 4: deadline vs fill-only at low load ----------- #
+    def trickle(classes, cls_name, n_req=40, gap_s=0.01):
+        s = AsyncWindowService(make_session(), bucket=8, classes=classes)
+        s.query(0, vertex=0)
+        lat = []
+        with s:
+            ts = []
+            for i in range(n_req):
+                ts.append(s.submit(0, vertex=i % n, request_class=cls_name))
+                time.sleep(gap_s)
+            for t in ts:
+                t.get(timeout=60)
+                lat.append(t.latency_s)
+        return lat
+
+    dl_lat = trickle(None, "point")  # 2 ms deadline class
+    fill_only = {"fill": RequestClass("fill", max_delay_ms=600_000.0,
+                                      priority=100, sheddable=False)}
+    fo_lat = trickle(fill_only, "fill")  # completes only on bucket fill
+    dl_p50, dl_p99 = _pcts(dl_lat)
+    fo_p50, fo_p99 = _pcts(fo_lat)
+    assert dl_p99 < fo_p99, (
+        f"deadline p99 {dl_p99:.0f}us must beat fill-only {fo_p99:.0f}us "
+        f"at low load")
+    emit("async_service/lowload_deadline_p99", dl_p99, f"p50={dl_p50:.0f}us")
+    emit("async_service/lowload_fillonly_p99", fo_p99, f"p50={fo_p50:.0f}us")
+
+    payload = {
+        "config": {"n": n, "avg_degree": deg, "k": k, "clients": clients,
+                   "updates": updates, "bucket": bucket,
+                   "update_batch": "8 inserts + 4 deletes per tick",
+                   "smoke": smoke},
+        "concurrent": {
+            "qps": qps, "wall_s": wall, "served": served,
+            "updates_applied": n_updates[0],
+            "per_class": per_class,
+            "deadline_flushes": stats["deadline_flushes"],
+            "fill_flushes": stats["fill_flushes"],
+            "shed": stats["shed"],
+            "backpressure_waits": stats["backpressure_waits"],
+            "cache_hit_rate": stats["point_hit_rate"],
+        },
+        "recovery": {"replay_s": replay_s, "batches": n_updates[0],
+                     "wal_bytes": os.path.getsize(wal_path),
+                     "bit_identical": True},
+        "shedding": {"submitted": submitted, "shed": shed,
+                     "rate": shed_rate},
+        "low_load": {"deadline_p50_us": dl_p50, "deadline_p99_us": dl_p99,
+                     "fillonly_p50_us": fo_p50, "fillonly_p99_us": fo_p99,
+                     "deadline_beats_fillonly": bool(dl_p99 < fo_p99)},
+    }
+    emit_json(json_path, payload)
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep for CI (n=2k; still 64 concurrent "
+                         "clients, shedding, recovery, and the "
+                         "deadline-vs-fill-only acceptance)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

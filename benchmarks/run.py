@@ -18,6 +18,7 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (
+        bench_async_service,
         bench_dbindex_eagr,
         bench_iindex,
         bench_kernels,
@@ -44,6 +45,7 @@ def main(argv=None) -> None:
         "updates": lambda: bench_updates.run(n=20_000 if args.fast else 100_000),
         "multiquery": lambda: bench_multiquery.run(n=8_000 if args.fast else 20_000),
         "service": lambda: bench_service.run(smoke=args.fast),
+        "async_service": lambda: bench_async_service.run(smoke=args.fast),
         "window_algebra": lambda: bench_window_algebra.run(
             n=4_000 if args.fast else 20_000),
     }

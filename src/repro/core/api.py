@@ -49,6 +49,7 @@ The paper's GWQ abstraction (Definition 3) is one algebraic object —
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -961,6 +962,56 @@ class Session:
                     np.int32) if parts else np.empty(0, np.int32)
             self._result_cache.on_update(self.version, owner_map)
         return reports
+
+    # ------------------------------------------------------------------ #
+    def replay(self, batches) -> int:
+        """Replay an ordered batch stream through :meth:`update`.
+
+        ``batches`` yields :class:`~repro.core.updates.UpdateBatch`es or
+        ``(version, batch)`` pairs (the WAL record shape — versions are
+        informational here; :attr:`version` advances once per batch either
+        way, so a replay of the full log reproduces the live session's
+        version numbering).  Returns the number of batches applied.  The
+        zero-recompile contract holds across a replay exactly as it does
+        across the live stream: same batches, same shapes, same plans.
+        """
+        applied = 0
+        for item in batches:
+            batch = item[1] if isinstance(item, tuple) else item
+            self.update(batch)
+            applied += 1
+        return applied
+
+    @classmethod
+    def restore_from_wal(cls, g: Graph, specs, wal, *,
+                         upto_version: Optional[int] = None, **kw):
+        """Crash recovery: rebuild a session by replaying a write-ahead log.
+
+        ``g`` and ``specs`` must be the *base* graph and compiled specs the
+        crashed session started from (the WAL records every batch applied
+        since); ``wal`` is a log file path, an open
+        :class:`~repro.serve.wal.WriteAheadLog`, or any iterable of
+        ``(version, batch)`` pairs.  ``upto_version`` stops the replay
+        early (point-in-time recovery).  All other kwargs are forwarded to
+        the constructor — they must match the crashed session's for
+        bit-identical results.
+        """
+        if hasattr(wal, "replay"):
+            records = list(wal.replay())
+        elif isinstance(wal, (str, os.PathLike)):
+            from repro.serve.wal import read_wal_records
+
+            records = read_wal_records(wal)[0]
+        else:
+            records = list(wal)
+        session = cls(g, specs, **kw)
+        for item in records:
+            version, batch = item if isinstance(item, tuple) else (None, item)
+            if upto_version is not None and version is not None \
+                    and version > upto_version:
+                break
+            session.update(batch)
+        return session
 
     @property
     def staleness(self) -> Dict[str, Dict]:

@@ -207,7 +207,12 @@ def patch_plan_dbindex(
                                  block_capacity=cap, headroom=headroom)
     member_block = np.asarray(index.member_block_ids, np.int64)
     linked = index.linked_blocks_mask()
-    if index.garbage_block_fraction(linked) >= compact_garbage:
+    # require actual garbage, not just fraction >= threshold: an empty or
+    # garbage-free index with compact_garbage == 0.0 would otherwise take
+    # the full pass-1 re-layout every batch (a spurious compaction that
+    # drops nothing — the delete-everything / zero-block degenerate cases)
+    has_garbage = index.num_blocks > 0 and bool(np.any(~linked))
+    if has_garbage and index.garbage_block_fraction(linked) >= compact_garbage:
         keep = linked[member_block]
         pass1 = build_tile_plan(
             index.block_members[keep], member_block[keep], cap,

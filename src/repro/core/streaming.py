@@ -46,6 +46,11 @@ def garbage_block_fraction(index) -> float:
     definition in one place)."""
     if getattr(index, "link_block", None) is None:
         return 0.0
+    # zero-block guard here as well as in the method: a duck-typed index
+    # reaching the unbound call must not divide by num_blocks == 0 (a graph
+    # whose edges — or whose filtered windows — were all deleted)
+    if not getattr(index, "num_blocks", 0):
+        return 0.0
     return DBIndex.garbage_block_fraction(index, DBIndex.linked_blocks_mask(index))
 
 
@@ -73,6 +78,12 @@ class StalenessPolicy:
     ) -> bool:
         if batches_since < self.min_batches:
             return False
+        if not index.num_blocks:
+            # an empty index (every edge — or every filtered window —
+            # deleted) has nothing to reorganize; without this guard the
+            # block-ratio test against a max(base, 1) baseline can trip
+            # forever on a drained graph, rebuilding an empty index each tick
+            return False
         links = int(index.stats.get("num_links", 0))
         return (
             links > self.max_link_ratio * max(base_links, 1)
@@ -81,26 +92,105 @@ class StalenessPolicy:
         )
 
 
+def _flipped_vertices(g_old: Graph, g_new: Graph, batch: UpdateBatch,
+                      touched) -> np.ndarray:
+    """Edited vertices whose *truthiness* changed for any touched
+    predicate attribute.  Edits that keep truthiness (e.g. ``1 → 2``) do
+    not move window membership — ``Filter`` tests ``pred != 0`` — so they
+    need no index maintenance at all."""
+    flipped = []
+    for name in touched:
+        verts = np.unique(np.concatenate(
+            [e.vertices for e in batch.attr_edits if e.name == name]
+        ))
+        old = np.asarray(g_old.attrs[name])[verts] != 0
+        new = np.asarray(g_new.attrs[name])[verts] != 0
+        flipped.append(verts[old != new])
+    if not flipped:
+        return np.empty(0, np.int64)
+    return np.unique(np.concatenate(flipped)).astype(np.int64)
+
+
+def _filter_flip_owners(index, g_new: Graph, window,
+                        flipped: np.ndarray) -> np.ndarray:
+    """Exact affected-owner set of a predicate truthiness flip.
+
+    Combinators are pointwise per-owner set operations (k-hop/topological
+    expansion exists only at the leaves, *below* every Filter), so a flip
+    at ``u`` can only change ``u``'s own membership in any ``W(v)``.  The
+    owners whose windows change are therefore exactly covered by
+
+        {v : u ∈ W_old(v)}  ∪  {v : u ∈ W_new(v)}    for flipped u
+
+    The old side is the DBIndex reverse link map
+    (:meth:`~repro.core.dbindex.DBIndex.owners_of_members` — the flipped
+    members' blocks' owners).  The new side only matters for *gained*
+    members (falsy → truthy) or a :class:`~repro.core.windows.Diff`
+    subtrahend (where a loss below adds members above); every window
+    expression is otherwise monotone in its predicates, so a loss-only
+    flip satisfies ``W_new(v) ⊆ W_old(v)`` and the reverse map alone is
+    exact.  The new side, when needed, is one reverse-direction bitset
+    sweep on the updated graph
+    (:func:`~repro.core.windows.expr_containing_owners`).
+    """
+    from repro.core.windows import expr_containing_owners, has_diff
+
+    owners = np.asarray(index.owners_of_members(flipped), np.int64)
+    gains = np.any(np.asarray(
+        [g_new.attrs[a][flipped] != 0 for a in filter_attrs(window)]
+    )) if flipped.size else False
+    if gains or has_diff(window):
+        new_side = expr_containing_owners(g_new, window, flipped)
+        owners = np.union1d(owners, np.asarray(new_side, np.int64))
+    return owners.astype(np.int32)
+
+
 def _attr_only_report(engine, batch, g2: Graph, t0: float) -> Optional[Dict]:
     """Shared attr-edit handling for the streaming engines (single-host and
     sharded).  Returns None when normal structural maintenance should run.
 
-    Two cases short-circuit it: a batch editing a :class:`Filter`
-    predicate attribute rebuilds outright (membership may change for every
-    owner — the indices are built over the *filtered* member sets), and a
-    pure attribute-value batch (``size == 0``) skips index/plan
+    A pure attribute-value batch (``size == 0``) skips index/plan
     maintenance entirely — both indices are structure-only, so swapping in
-    the attr-updated graph is the whole update.
+    the attr-updated graph is the whole update.  The exception is a batch
+    editing a :class:`Filter` predicate attribute: membership may change
+    for the flipped vertices, so the engine re-filters exactly the owners
+    whose windows can change (``engine._refilter``), falling back to a
+    full rebuild only when the flip reaches more than half the owners or
+    the batch also carries structural edits.
     """
     touched = set(batch.edited_attrs()) & set(filter_attrs(engine.window))
     if batch.size > 0 and not touched:
         return None
-    engine.graph = g2
-    if touched:
-        engine._build()  # predicate edits re-filter every window
+    refiltered = False
+    reorganized = False
+    changed = np.empty(0, np.int32)
+    if touched and batch.size > 0:
+        # mixed structural + predicate batch: membership moves for both
+        # reasons at once — rebuild outright rather than composing bounds
+        engine.graph = g2
+        engine._build()
         changed = np.arange(g2.n, dtype=np.int32)
+        reorganized = True
+    elif touched:
+        flipped = _flipped_vertices(engine.graph, g2, batch, touched)
+        refilter = getattr(engine, "_refilter", None)
+        if flipped.size == 0:
+            engine.graph = g2  # truthiness unchanged: structure unchanged
+        else:
+            owners = _filter_flip_owners(engine.index, g2, engine.window,
+                                         flipped)
+            engine.graph = g2
+            if refilter is None or owners.size > g2.n // 2:
+                engine._build()
+                changed = np.arange(g2.n, dtype=np.int32)
+                reorganized = True
+            else:
+                reorganized = refilter(owners)
+                changed = (np.arange(g2.n, dtype=np.int32) if reorganized
+                           else owners)
+                refiltered = not reorganized
     else:
-        changed = np.empty(0, np.int32)
+        engine.graph = g2
     plan_version = getattr(engine, "plan_version", None)
     if plan_version is None:
         plan_version = int(engine.plan.stats.get("version", 0))
@@ -112,7 +202,8 @@ def _attr_only_report(engine, batch, g2: Graph, t0: float) -> Optional[Dict]:
         "plan_version": int(plan_version),
         "t_index_s": time.perf_counter() - t0,
         "t_plan_s": 0.0,
-        "reorganized": bool(touched),
+        "reorganized": reorganized,
+        "refiltered": refiltered,
     }
 
 
@@ -191,6 +282,38 @@ class StreamingEngine:
         if not initial:
             self.reorg_count += 1
             self.plan_version += 1
+
+    # ------------------------------------------------------------------ #
+    def _refilter(self, owners: np.ndarray) -> bool:
+        """Re-evaluate exactly ``owners``'s windows after a predicate
+        truthiness flip and phase-1-merge them into the index (the flip
+        analogue of a structural batch: drop the owners' links, append
+        secondary blocks over their re-filtered windows, patch only the
+        touched tile groups).  Returns True when the merge tripped the
+        staleness policy and the engine reorganized instead."""
+        from repro.core.updates import _merge_affected
+        from repro.core.windows import expr_windows
+
+        wins = expr_windows(self.graph, self.window, owners)
+        self.index = _merge_affected(self.index, owners, wins)
+        self.batches_applied += 1
+        self.batches_since_reorg += 1
+        if self.policy.should_reorganize(
+            self.index, self._base_links, self._base_blocks,
+            self.batches_since_reorg,
+        ):
+            self._build()
+            return True
+        if self.device:
+            from repro.core import engine_jax as ej
+
+            self.plan = ej.patch_plan_dbindex(
+                self.plan, self.index, owners,
+                compact_garbage=self.compact_garbage,
+                headroom=self.plan_headroom,
+            )
+        self.plan_version += 1
+        return False
 
     # ------------------------------------------------------------------ #
     def apply(self, batch: UpdateBatch, graph: Optional[Graph] = None) -> Dict:

@@ -146,6 +146,14 @@ class UpdateBatch:
         return UpdateBatch(empty, empty, np.empty(0, np.int8),
                            attr_edits=(AttrEdit(name, vertices, values),))
 
+    def to_bytes(self) -> bytes:
+        """Deterministic byte encoding (WAL record / replication payload)."""
+        return encode_update_batch(self)
+
+    @staticmethod
+    def from_bytes(data: bytes) -> "UpdateBatch":
+        return decode_update_batch(data)
+
     @staticmethod
     def concat(batches: Sequence["UpdateBatch"]) -> "UpdateBatch":
         ts = None
@@ -684,3 +692,85 @@ def update_iindex(index: IIndex, g_new: Graph, s: int, t: int) -> IIndex:
     """Single-edge wrapper over the batched path."""
     new_index, _ = update_iindex_batch(index, g_new, UpdateBatch.inserts([s], [t]))
     return new_index
+
+
+# ------------------------- serialization (WAL) ------------------------ #
+# One UpdateBatch <-> bytes, for the write-ahead log and the replication
+# stream.  Layout (all little-endian, arrays raw C-order):
+#
+#   magic "UB1\0" | flags u8 | n_attr_edits u16 | n_structural u64
+#   src i32[m] | dst i32[m] | op i8[m] | [ts f64[m] if flags & 1]
+#   per attr edit:
+#     name_len u16 | dtype_len u8 | k u64 | name utf-8 | dtype np-str
+#     vertices i64[k] | values dtype[k]
+#
+# The encoding is deterministic (same batch -> same bytes), so WAL records
+# can be checksummed and replicas can be diffed byte-for-byte.
+_CODEC_MAGIC = b"UB1\x00"
+_CODEC_HDR = "<BHQ"
+_CODEC_EDIT_HDR = "<HBQ"
+
+
+def encode_update_batch(batch: UpdateBatch) -> bytes:
+    import struct
+
+    flags = 1 if batch.ts is not None else 0
+    out = [
+        _CODEC_MAGIC,
+        struct.pack(_CODEC_HDR, flags, len(batch.attr_edits), batch.size),
+        np.ascontiguousarray(batch.src, np.int32).tobytes(),
+        np.ascontiguousarray(batch.dst, np.int32).tobytes(),
+        np.ascontiguousarray(batch.op, np.int8).tobytes(),
+    ]
+    if batch.ts is not None:
+        out.append(np.ascontiguousarray(batch.ts, np.float64).tobytes())
+    for e in batch.attr_edits:
+        name = e.name.encode("utf-8")
+        dt = np.dtype(e.values.dtype).str.encode("ascii")  # e.g. b"<f4"
+        out.append(struct.pack(_CODEC_EDIT_HDR, len(name), len(dt),
+                               e.vertices.size))
+        out.append(name)
+        out.append(dt)
+        out.append(np.ascontiguousarray(e.vertices, np.int64).tobytes())
+        out.append(np.ascontiguousarray(e.values).tobytes())
+    return b"".join(out)
+
+
+def decode_update_batch(data: bytes) -> UpdateBatch:
+    import struct
+
+    mv = memoryview(data)
+    if bytes(mv[:4]) != _CODEC_MAGIC:
+        raise ValueError("not an UpdateBatch record (bad magic)")
+    off = 4
+    flags, n_edits, m = struct.unpack_from(_CODEC_HDR, mv, off)
+    off += struct.calcsize(_CODEC_HDR)
+
+    def take(dtype, count):
+        nonlocal off
+        dt = np.dtype(dtype)
+        end = off + dt.itemsize * count
+        if end > len(data):
+            raise ValueError("truncated UpdateBatch record")
+        arr = np.frombuffer(mv, dtype=dt, count=count, offset=off).copy()
+        off = end
+        return arr
+
+    src = take(np.int32, m)
+    dst = take(np.int32, m)
+    op = take(np.int8, m)
+    ts = take(np.float64, m) if flags & 1 else None
+    edits = []
+    for _ in range(n_edits):
+        name_len, dt_len, k = struct.unpack_from(_CODEC_EDIT_HDR, mv, off)
+        off += struct.calcsize(_CODEC_EDIT_HDR)
+        name = bytes(mv[off: off + name_len]).decode("utf-8")
+        off += name_len
+        dt = np.dtype(bytes(mv[off: off + dt_len]).decode("ascii"))
+        off += dt_len
+        verts = take(np.int64, k)
+        vals = take(dt, k)
+        edits.append(AttrEdit(name, verts, vals))
+    if off != len(data):
+        raise ValueError(f"{len(data) - off} trailing byte(s) after record")
+    return UpdateBatch(src, dst, op, ts, tuple(edits))

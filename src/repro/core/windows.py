@@ -625,3 +625,112 @@ def expr_window_single(g: Graph, expr, v: int) -> Array:
         pred = np.asarray(g.attrs[expr.predicate_attr])
         return members[pred[members] != 0].astype(np.int32)
     raise TypeError(f"not a window expression: {expr!r}")
+
+
+# ---------------------------------------------------------------------- #
+#  Reverse membership (containing-owner) evaluation
+# ---------------------------------------------------------------------- #
+def _flip_direction(direction: str) -> str:
+    return {"out": "in", "in": "out", "both": "both"}[direction]
+
+
+def expr_containing_bitsets(
+    g: Graph, expr, sources: Array,
+    uncertain_attrs: frozenset = frozenset(), upper: bool = True,
+) -> Array:
+    """Packed *reverse* membership matrix: bit ``j`` of word row ``v`` says
+    ``sources[j] ∈ W_expr(v)`` — the transpose question of
+    :func:`expr_reach_bitsets`, answered without materializing any window.
+    Leaves run the same multi-source bitset BFS with the traversal
+    direction flipped (``u ∈ W_khop(v)`` iff ``u`` reaches ``v`` in the
+    reversed view; ``u ∈ W_topo(v)`` iff ``u`` reaches ``v`` forward);
+    combinators stay pointwise; a :class:`Filter` masks bit *columns*
+    (the sources failing its predicate) instead of member rows.
+
+    ``uncertain_attrs`` computes an *envelope* instead of the exact
+    matrix: a Filter predicating on an uncertain attribute is treated as
+    free to admit (``upper=True``) or reject (``upper=False``) every
+    source.  ``Diff`` swaps the envelope side for its subtrahend, so the
+    upper matrix is a sound superset of membership under ANY truth
+    assignment of the uncertain predicates at the sources — which is what
+    bounds the affected-owner set of a predicate-attribute edit (the
+    sources being exactly the vertices whose truthiness flipped).
+    """
+    sources = np.asarray(sources, np.int32)
+    if isinstance(expr, KHopWindow):
+        return khop_reach_bitsets(graph_view(g, "in"), expr.k, sources)
+    if isinstance(expr, KHop):
+        view = graph_view(g, _flip_direction(expr.direction))
+        return khop_reach_bitsets(view, expr.k, sources)
+    if isinstance(expr, (TopologicalWindow, Topo)):
+        # u ∈ W_t(v) iff u reaches v: forward BFS, run to convergence
+        return khop_reach_bitsets(g, max(g.n, 1), sources)
+    if isinstance(expr, Union):
+        out = expr_containing_bitsets(g, expr.exprs[0], sources,
+                                      uncertain_attrs, upper)
+        for c in expr.exprs[1:]:
+            out = out | expr_containing_bitsets(g, c, sources,
+                                                uncertain_attrs, upper)
+        return out
+    if isinstance(expr, Intersect):
+        out = expr_containing_bitsets(g, expr.exprs[0], sources,
+                                      uncertain_attrs, upper)
+        for c in expr.exprs[1:]:
+            out = out & expr_containing_bitsets(g, c, sources,
+                                                uncertain_attrs, upper)
+        return out
+    if isinstance(expr, Diff):
+        # the subtrahend flips envelope side: possibly-in(a \ b) needs
+        # definitely-in(b), and vice versa
+        return expr_containing_bitsets(
+            g, expr.a, sources, uncertain_attrs, upper
+        ) & ~expr_containing_bitsets(
+            g, expr.b, sources, uncertain_attrs, not upper)
+    if isinstance(expr, Filter):
+        child = expr_containing_bitsets(g, expr.expr, sources,
+                                        uncertain_attrs, upper)
+        if expr.predicate_attr in uncertain_attrs:
+            if upper:
+                return child  # predicate may admit every source
+            return np.zeros_like(child)  # ... or reject every source
+        pred = np.asarray(g.attrs[expr.predicate_attr])
+        cols = np.flatnonzero(pred[sources.astype(np.int64)] != 0)
+        mask = np.zeros((sources.size + 63) // 64, dtype=np.uint64)
+        np.bitwise_or.at(  # duplicate word slots: plain |= keeps one bit
+            mask, cols // 64, np.uint64(1) << (cols % 64).astype(np.uint64))
+        return child & mask  # broadcasts over rows
+    raise TypeError(f"not a window expression: {expr!r}")
+
+
+def expr_containing_owners(
+    g: Graph, expr, vertices: Array,
+    uncertain_attrs: frozenset = frozenset(), batch: int = 4096,
+) -> Array:
+    """Owners ``v`` with ``W_expr(v) ∩ vertices ≠ ∅`` (with
+    ``uncertain_attrs``: owners that could contain one under *some* truth
+    assignment of those predicates at the vertices) — the index-free
+    reverse window map.  Chunked like :func:`expr_windows`."""
+    vertices = np.asarray(vertices, np.int64)
+    if vertices.size == 0:
+        return np.empty(0, np.int32)
+    hit = np.zeros(g.n, dtype=bool)
+    for lo in range(0, vertices.size, batch):
+        m = expr_containing_bitsets(g, expr, vertices[lo: lo + batch],
+                                    uncertain_attrs, upper=True)
+        hit |= (m != 0).any(axis=1)
+    return np.flatnonzero(hit).astype(np.int32)
+
+
+def has_diff(expr) -> bool:
+    """True when the expression contains a :class:`Diff` node (predicate
+    flips can then *add* members through the subtrahend, so a pure-loss
+    edit is not guaranteed to only shrink windows)."""
+    if is_leaf(expr):
+        return False
+    if isinstance(expr, Diff):
+        return True
+    if isinstance(expr, (Union, Intersect)):
+        return any(has_diff(c) for c in expr.exprs)
+    if isinstance(expr, Filter):
+        return has_diff(expr.expr)
+    raise TypeError(expr)

@@ -478,7 +478,7 @@ def _group_rows(sorted_seg: np.ndarray, gather_src: np.ndarray, g: int,
 
 def patch_sharded_plan(
     splan: ShardedDBPlan, index: DBIndex, changed_owners: np.ndarray,
-    compact_garbage: float = 0.25,
+    compact_garbage: float = 0.25, wire: Optional[list] = None,
 ) -> ShardedDBPlan:
     """Propagate one streamed batch into the device-resident plan shards.
 
@@ -503,6 +503,14 @@ def patch_sharded_plan(
     nobody gathers — correctness is untouched because a garbage block by
     definition has no pass-2 link — and the freed tile slots keep future
     appends below the rebuild threshold.
+
+    ``wire``, when a list, receives one serializable *replication message*
+    describing exactly what this call shipped to the shards: the changed
+    tile groups' flat positions and rows, the appended block sizes and ELL
+    rows (kind ``"patch"``), or the full index on a rebuild (kind
+    ``"resync"``).  A follower holding the same pre-patch plan replays the
+    message with :func:`apply_wire_message` and lands on a bit-identical
+    plan — the patch stream *is* the replication stream.
     """
     import jax.numpy as jnp
 
@@ -524,6 +532,8 @@ def patch_sharded_plan(
         out = build_sharded_plan(base, splan.mesh, splan.axes,
                                  headroom=splan.headroom, stats=stats)
         out.stats["last_patch_bytes"] = out.size_bytes()
+        if wire is not None:
+            wire.append({"kind": "resync", "index": index})
         return out
 
     if (index.stats.get("last_full_rebuild")
@@ -561,8 +571,11 @@ def patch_sharded_plan(
     already = np.asarray(stats.get("p1_compacted_ids", []), np.int64)
     fresh_garbage = np.setdiff1d(garbage, already)
     # same threshold semantics as the single-host ``patch_plan_dbindex``:
-    # fraction >= threshold compacts (0.0 = compact whenever garbage exists)
-    over = index.garbage_block_fraction(linked) >= compact_garbage
+    # fraction >= threshold compacts (0.0 = compact whenever garbage exists);
+    # zero-block indices never compact (nothing to drop, and the fraction
+    # is defined as 0.0 for them)
+    over = (index.num_blocks > 0
+            and index.garbage_block_fraction(linked) >= compact_garbage)
     compacting = over and fresh_garbage.size > 0
     filter_garbage = compacting or already.size > 0
     if filter_garbage:
@@ -609,14 +622,16 @@ def patch_sharded_plan(
             gather_chunks.append(rows[1])
             per_shard[int(shard_of[g])] += span * 8  # seg + gather, i32 each
             groups_patched += 1
-        pos = jnp.asarray(np.concatenate(pos_chunks))
-        seg_new = jnp.asarray(np.concatenate(seg_chunks))
-        gather_new = jnp.asarray(np.concatenate(gather_chunks))
-        patches.append((f"p{pass_id}", pos, seg_new, gather_new))
+        patches.append((f"p{pass_id}", np.concatenate(pos_chunks),
+                        np.concatenate(seg_chunks),
+                        np.concatenate(gather_chunks)))
 
     p1_seg, p1_gather = splan.p1_seg, splan.p1_gather
     p2_seg, p2_gather = splan.p2_seg, splan.p2_gather
-    for name, pos, seg_new, gather_new in patches:
+    for name, pos_np, seg_np, gather_np in patches:
+        pos = jnp.asarray(pos_np)
+        seg_new = jnp.asarray(seg_np)
+        gather_new = jnp.asarray(gather_np)
         if name == "p1":
             p1_seg = p1_seg.at[pos].set(seg_new)
             p1_gather = p1_gather.at[pos].set(gather_new)
@@ -625,6 +640,7 @@ def patch_sharded_plan(
             p2_gather = p2_gather.at[pos].set(gather_new)
 
     block_sizes = splan.block_sizes
+    sizes = np.empty(0, np.float32)
     if new_blocks.size:
         sizes = np.diff(index.block_offsets)[new_blocks].astype(np.float32)
         block_sizes = block_sizes.at[jnp.asarray(new_blocks)].set(
@@ -632,6 +648,7 @@ def patch_sharded_plan(
         per_shard += (new_blocks.size * 4) // splan.ndev  # replicated bcast
 
     e1, e1_ids, e2, e2_ids = splan.e1, splan.e1_ids, splan.e2, splan.e2_ids
+    e1_rows = e2_rows = None
     if splan.has_ell:  # widths already validated before the tile scatters
         from repro.core.engine_jax import (
             _ell_rows_for_new_blocks,
@@ -639,16 +656,32 @@ def patch_sharded_plan(
         )
 
         if new_blocks.size:
-            rows = _ell_rows_for_new_blocks(index, splan.num_blocks, r1)
-            e1 = e1.at[jnp.asarray(new_blocks)].set(jnp.asarray(rows))
+            e1_rows = _ell_rows_for_new_blocks(index, splan.num_blocks, r1)
+            e1 = e1.at[jnp.asarray(new_blocks)].set(jnp.asarray(e1_rows))
             rs1 = splan.e1.shape[0] // splan.ndev
             np.add.at(per_shard, (new_blocks // rs1).astype(np.int64),
                       r1 * 4)
         if owners.size:
-            rows = _ell_rows_for_owners(index, owners, r2)
-            e2 = e2.at[jnp.asarray(owners)].set(jnp.asarray(rows))
+            e2_rows = _ell_rows_for_owners(index, owners, r2)
+            e2 = e2.at[jnp.asarray(owners)].set(jnp.asarray(e2_rows))
             rs2 = splan.e2.shape[0] // splan.ndev
             np.add.at(per_shard, (owners // rs2).astype(np.int64), r2 * 4)
+
+    if wire is not None:
+        wire.append({
+            "kind": "patch",
+            "num_blocks": int(index.num_blocks),
+            "patches": [(name, pos_np, seg_np, gather_np)
+                        for name, pos_np, seg_np, gather_np in patches],
+            "block_ids": new_blocks,
+            "block_sizes": sizes,
+            "e1_ids": new_blocks if e1_rows is not None
+            else np.empty(0, np.int64),
+            "e1_rows": e1_rows,
+            "e2_ids": owners if e2_rows is not None
+            else np.empty(0, np.int64),
+            "e2_rows": e2_rows,
+        })
 
     patch_bytes = int(per_shard.sum())
     stats.update(
@@ -666,6 +699,148 @@ def patch_sharded_plan(
         e1=e1, e1_ids=e1_ids, e2=e2, e2_ids=e2_ids,
         stats=stats,
     )
+
+
+# ---------------------------------------------------------------------- #
+#  Replication messages (the patch stream on the wire)
+# ---------------------------------------------------------------------- #
+def apply_wire_message(splan: ShardedDBPlan, msg: Dict) -> ShardedDBPlan:
+    """Replay one :func:`patch_sharded_plan` wire message on a follower's
+    plan.  The follower must hold the same plan state the leader held
+    before the message was produced (apply the stream in order, no gaps);
+    positions and row ids in a ``"patch"`` message are absolute, so the
+    replay is exactly the leader's device scatters.  A ``"resync"``
+    message (leader rebuilt) carries the full index and rebuilds the
+    follower the same deterministic way."""
+    import jax.numpy as jnp
+
+    if msg["kind"] == "resync":
+        from repro.core.engine_jax import plan_from_dbindex
+
+        index = msg["index"]
+        cap = splan.block_capacity
+        if index.num_blocks > cap:
+            cap = 1 << (index.num_blocks - 1).bit_length()
+        base = plan_from_dbindex(index, splan.tm, splan.ts,
+                                 block_capacity=cap,
+                                 headroom=splan.headroom)
+        stats = dict(splan.stats)
+        stats["version"] = stats.get("version", 0) + 1
+        stats["rebuilds"] = stats.get("rebuilds", 0) + 1
+        return build_sharded_plan(base, splan.mesh, splan.axes,
+                                  headroom=splan.headroom, stats=stats)
+
+    assert msg["kind"] == "patch", msg["kind"]
+    p1_seg, p1_gather = splan.p1_seg, splan.p1_gather
+    p2_seg, p2_gather = splan.p2_seg, splan.p2_gather
+    for name, pos_np, seg_np, gather_np in msg["patches"]:
+        pos = jnp.asarray(pos_np)
+        seg_new = jnp.asarray(seg_np)
+        gather_new = jnp.asarray(gather_np)
+        if name == "p1":
+            p1_seg = p1_seg.at[pos].set(seg_new)
+            p1_gather = p1_gather.at[pos].set(gather_new)
+        else:
+            p2_seg = p2_seg.at[pos].set(seg_new)
+            p2_gather = p2_gather.at[pos].set(gather_new)
+    block_sizes = splan.block_sizes
+    if msg["block_ids"].size:
+        block_sizes = block_sizes.at[jnp.asarray(msg["block_ids"])].set(
+            jnp.asarray(msg["block_sizes"]))
+    e1, e2 = splan.e1, splan.e2
+    if msg["e1_rows"] is not None and msg["e1_ids"].size:
+        e1 = e1.at[jnp.asarray(msg["e1_ids"])].set(
+            jnp.asarray(msg["e1_rows"]))
+    if msg["e2_rows"] is not None and msg["e2_ids"].size:
+        e2 = e2.at[jnp.asarray(msg["e2_ids"])].set(
+            jnp.asarray(msg["e2_rows"]))
+    stats = dict(splan.stats)
+    stats["version"] = stats.get("version", 0) + 1
+    return dataclasses.replace(
+        splan,
+        num_blocks=int(msg["num_blocks"]),
+        p1_seg=p1_seg, p1_gather=p1_gather,
+        p2_seg=p2_seg, p2_gather=p2_gather,
+        block_sizes=block_sizes,
+        e1=e1, e2=e2,
+        stats=stats,
+    )
+
+
+def encode_wire_message(msg: Dict) -> bytes:
+    """Serialize one replication message to bytes (``np.savez``-framed;
+    no pickling — index stats ride as JSON)."""
+    import io
+    import json
+
+    arrays: Dict[str, np.ndarray] = {}
+    meta: Dict = {"kind": msg["kind"]}
+    if msg["kind"] == "resync":
+        idx = msg["index"]
+        meta["n"] = int(idx.n)
+        meta["num_blocks"] = int(idx.num_blocks)
+        meta["stats"] = {k: v for k, v in idx.stats.items()
+                         if isinstance(v, (int, float, bool, str))}
+        arrays["block_members"] = np.asarray(idx.block_members)
+        arrays["block_offsets"] = np.asarray(idx.block_offsets)
+        arrays["link_block"] = np.asarray(idx.link_block)
+        arrays["link_owner_offsets"] = np.asarray(idx.link_owner_offsets)
+    else:
+        meta["num_blocks"] = int(msg["num_blocks"])
+        meta["patch_names"] = [name for name, *_ in msg["patches"]]
+        for i, (name, pos, seg, gather) in enumerate(msg["patches"]):
+            arrays[f"patch{i}_pos"] = pos
+            arrays[f"patch{i}_seg"] = seg
+            arrays[f"patch{i}_gather"] = gather
+        arrays["block_ids"] = msg["block_ids"]
+        arrays["block_sizes"] = msg["block_sizes"]
+        for key in ("e1", "e2"):
+            rows = msg[f"{key}_rows"]
+            meta[f"has_{key}"] = rows is not None
+            arrays[f"{key}_ids"] = np.asarray(msg[f"{key}_ids"])
+            if rows is not None:
+                arrays[f"{key}_rows"] = rows
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    payload = buf.getvalue()
+    header = json.dumps(meta).encode()
+    return (len(header).to_bytes(4, "little") + header + payload)
+
+
+def decode_wire_message(data: bytes) -> Dict:
+    """Inverse of :func:`encode_wire_message`."""
+    import io
+    import json
+
+    hlen = int.from_bytes(data[:4], "little")
+    meta = json.loads(data[4: 4 + hlen].decode())
+    arrays = dict(np.load(io.BytesIO(data[4 + hlen:]), allow_pickle=False))
+    if meta["kind"] == "resync":
+        index = DBIndex(
+            n=int(meta["n"]),
+            num_blocks=int(meta["num_blocks"]),
+            block_members=arrays["block_members"],
+            block_offsets=arrays["block_offsets"],
+            link_block=arrays["link_block"],
+            link_owner_offsets=arrays["link_owner_offsets"],
+            stats=dict(meta["stats"]),
+        )
+        return {"kind": "resync", "index": index}
+    msg: Dict = {
+        "kind": "patch",
+        "num_blocks": int(meta["num_blocks"]),
+        "patches": [
+            (name, arrays[f"patch{i}_pos"], arrays[f"patch{i}_seg"],
+             arrays[f"patch{i}_gather"])
+            for i, name in enumerate(meta["patch_names"])
+        ],
+        "block_ids": arrays["block_ids"],
+        "block_sizes": arrays["block_sizes"],
+    }
+    for key in ("e1", "e2"):
+        msg[f"{key}_ids"] = arrays[f"{key}_ids"]
+        msg[f"{key}_rows"] = arrays[f"{key}_rows"] if meta[f"has_{key}"] else None
+    return msg
 
 
 # ---------------------------------------------------------------------- #
@@ -700,11 +875,15 @@ class ShardedStreamState:
         # should fire well before a policy rebuild is due
         compact_garbage: float = 0.25,
         use_device_bfs: Optional[bool] = None,
+        capture_wire: bool = False,
     ):
         from repro.core.windows import TopologicalWindow
 
         if isinstance(window, TopologicalWindow) and method == "emc":
             method = "mc"  # EMC is k-hop only (paper §4.2.2)
+        #: replication stream: one message per applied batch when enabled
+        #: (``patch_sharded_plan``'s wire format — see ``apply_wire_message``)
+        self.wire_log: Optional[list] = [] if capture_wire else None
         self.graph = g
         self.window = window
         self.mesh, self.axes = mesh, _axes_tuple(axis)
@@ -746,6 +925,32 @@ class ShardedStreamState:
         self.batches_since_reorg = 0
         if not initial:
             self.reorg_count += 1
+            if self.wire_log is not None:
+                self.wire_log.append({"kind": "resync", "index": self.index})
+
+    # ------------------------------------------------------------------ #
+    def _refilter(self, owners: np.ndarray) -> bool:
+        """Sharded analogue of :meth:`StreamingEngine._refilter`: phase-1
+        merge the flipped owners' re-filtered windows, then ship only the
+        changed tile groups to the shards that own them.  Returns True when
+        the merge tripped the staleness policy and the state rebuilt."""
+        from repro.core.updates import _merge_affected
+        from repro.core.windows import expr_windows
+
+        wins = expr_windows(self.graph, self.window, owners)
+        self.index = _merge_affected(self.index, owners, wins)
+        self.batches_applied += 1
+        self.batches_since_reorg += 1
+        if self.policy.should_reorganize(
+            self.index, self._base_links, self._base_blocks,
+            self.batches_since_reorg,
+        ):
+            self._build()
+            return True
+        self.plan = patch_sharded_plan(self.plan, self.index, owners,
+                                       compact_garbage=self.compact_garbage,
+                                       wire=self.wire_log)
+        return False
 
     # ------------------------------------------------------------------ #
     def apply(self, batch: UpdateBatch, graph: Optional[Graph] = None) -> Dict:
@@ -758,9 +963,15 @@ class ShardedStreamState:
         g2 = apply_batch(self.graph, batch) if graph is None else graph
         fast = _attr_only_report(self, batch, g2, t0)
         if fast is not None:
+            refiltered = fast.get("refiltered", False)
             fast.update(
-                affected_per_shard=[], compacted=False,
-                patch_bytes=0, patch_bytes_per_shard=[],
+                affected_per_shard=[],
+                compacted=bool(self.plan.stats.get("last_compaction", False))
+                if refiltered else False,
+                patch_bytes=int(self.plan.stats.get("last_patch_bytes", 0))
+                if refiltered else 0,
+                patch_bytes_per_shard=self.plan.stats.get(
+                    "last_patch_per_shard", []) if refiltered else [],
                 full_plan_bytes=int(self.plan.stats.get("full_bytes", 0)),
                 plan_rebuilt=fast["reorganized"],
             )
@@ -789,7 +1000,8 @@ class ShardedStreamState:
             reorganized = True
         else:
             self.plan = patch_sharded_plan(self.plan, idx2, changed,
-                                           compact_garbage=self.compact_garbage)
+                                           compact_garbage=self.compact_garbage,
+                                           wire=self.wire_log)
         t_plan = time.perf_counter() - t1
         # the patcher itself may have rebuilt (updater full rebuild, capacity
         # or ELL-width overflow) — that is a full-plan re-upload too, and

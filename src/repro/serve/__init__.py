@@ -6,11 +6,28 @@
   versioned, cached front end over a window-analytics
   :class:`~repro.core.api.Session` (point-vertex + full-graph traffic
   against a live update stream).
+* :class:`~repro.serve.window_service.AsyncWindowService` — continuous
+  batching on top: deadline-driven background flusher, staleness-aware
+  backpressure/load shedding, and WAL durability (append-before-apply).
+* :class:`~repro.serve.wal.WriteAheadLog` — crash-tolerant update log;
+  :meth:`repro.core.api.Session.restore_from_wal` replays it.
+* :class:`~repro.serve.replica.ReadReplica` — follower session tailing
+  the WAL by byte offset (pinned reads, explicit catch-up + flip).
 """
 
 from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.replica import ReadReplica  # noqa: F401
+from repro.serve.wal import (  # noqa: F401
+    WriteAheadLog,
+    read_wal_records,
+    replay_wal,
+)
 from repro.serve.window_service import (  # noqa: F401
     AffectedOwnerCache,
+    AsyncWindowService,
+    DEFAULT_REQUEST_CLASSES,
+    LoadShedError,
+    RequestClass,
     Ticket,
     WindowService,
 )

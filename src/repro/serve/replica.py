@@ -1,0 +1,167 @@
+"""Read replicas: follower sessions tailing the leader's write-ahead log.
+
+The WAL (:mod:`repro.serve.wal`) is append-before-apply, so its durable
+prefix is exactly the leader's update history.  A replica is a follower
+:class:`~repro.core.api.Session` built from the same base graph + specs
+that *tails the log file by byte offset*: :meth:`ReadReplica.poll` decodes
+any newly appended records (:func:`repro.serve.wal.read_wal_records`
+returns the next offset, tolerating a partially appended tail) and applies
+them through the ordinary incremental maintenance path — the follower pays
+the same patch costs as the leader and stays recompile-free.
+
+Serving is MVCC like the leader's: applied batches advance the follower's
+write head, but readers stay **pinned** at the replica's published
+snapshot until :meth:`ReadReplica.flip` — a lagging replica keeps serving
+a consistent old version (never a half-applied one), and
+:meth:`catch_up` = poll + flip.  Results at any published version are
+bit-identical to what the leader served at that version: both sides ran
+the same batches through the same deterministic maintenance.
+
+For sharded runtimes the update stream can also be propagated *below* the
+session, as the changed-tile-group patch messages of
+:func:`repro.distributed.window_runtime.patch_sharded_plan` (its ``wire``
+output) applied with :func:`repro.distributed.window_runtime.
+apply_wire_message` — shipping only the dirty tiles instead of re-deriving
+them.  The WAL path above remains the source of truth; the wire path is
+the transport optimization for followers that already hold a plan shard.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional
+
+from repro.core.api import Session
+from repro.serve.wal import read_wal_records
+from repro.serve.window_service import WindowService
+
+
+class ReadReplica:
+    """A follower :class:`Session` + serving front end fed from a WAL file.
+
+    ``graph`` and ``specs`` must match what the leader's session was built
+    from (the log holds only the *updates*); ``session_kw`` forwards to the
+    follower's Session constructor, so a replica may run a different
+    engine/device configuration than the leader — results are still
+    bit-identical because every engine agrees with the set-evaluation
+    semantics.
+    """
+
+    def __init__(self, graph, specs, wal_path, *, bucket: int = 8,
+                 use_cache: bool = True, **session_kw):
+        self.path = os.fspath(wal_path)
+        self.session = Session(graph, specs, **session_kw)
+        #: serving front end pinned behind the apply head (auto_flip off:
+        #: publishing is the replica's explicit flip decision)
+        self.service = WindowService(self.session, bucket=bucket,
+                                     auto_flip=False, use_cache=use_cache)
+        self._offset = 0  # byte offset of the next unread WAL record
+        self.records_applied = 0
+        self.polls = 0
+
+    # ------------------------------------------------------------------ #
+    def poll(self, upto_version: Optional[int] = None) -> int:
+        """Apply newly appended WAL records to the follower's write head
+        (readers stay pinned).  Returns the number applied.
+
+        ``upto_version`` stops early — a replica can deliberately hold at
+        a point-in-time version.  Unconsumed records stay unconsumed (the
+        offset only advances past applied records), so a later poll
+        resumes exactly there.
+        """
+        records, end = read_wal_records(self.path, self._offset)
+        self.polls += 1
+        if not records:
+            self._offset = max(self._offset, end)
+            return 0
+        applied = 0
+        stop_at = None
+        for i, (version, batch) in enumerate(records):
+            if upto_version is not None and version > upto_version:
+                stop_at = i
+                break
+            self.session.update(batch)
+            applied += 1
+        if stop_at is None:
+            self._offset = end
+        else:
+            # partial consumption: read_wal_records reports only the final
+            # offset, so rescan the applied prefix for the byte boundary of
+            # the first unapplied record
+            self._offset = _offset_after(self.path, self._offset, stop_at)
+        self.records_applied += applied
+        return applied
+
+    def flip(self) -> int:
+        """Publish the apply head to readers (one snapshot swap)."""
+        return self.service.flip()
+
+    def catch_up(self) -> int:
+        """Poll to the end of the log, then publish.  Returns the number
+        of records applied."""
+        n = self.poll()
+        self.flip()
+        return n
+
+    # ------------------------------------------------------------------ #
+    @property
+    def version(self) -> int:
+        """The published (reader-visible) version."""
+        return self.service.version
+
+    @property
+    def head_version(self) -> int:
+        """The applied-but-possibly-unpublished version."""
+        return self.session.version
+
+    @property
+    def lag(self) -> Dict:
+        """How far behind the log this replica is: unapplied bytes in the
+        file plus unpublished versions at the head."""
+        try:
+            size = os.path.getsize(self.path)
+        except OSError:
+            size = 0
+        return {
+            "behind_bytes": max(size - self._offset, 0),
+            "unpublished_versions": self.session.version
+            - self.service.version,
+            "published_version": self.service.version,
+            "head_version": self.session.version,
+        }
+
+    # ------------------------------- reads ---------------------------- #
+    def query(self, spec, vertex: Optional[int] = None, values=None):
+        """Serve one read at the published version."""
+        return self.service.query(spec, vertex=vertex, values=values)
+
+    @property
+    def stats(self) -> Dict:
+        out = dict(self.service.stats)
+        out.update(records_applied=self.records_applied, polls=self.polls,
+                   lag=self.lag)
+        return out
+
+
+def _offset_after(path, offset: int, n_records: int) -> int:
+    """Byte offset after the first ``n_records`` complete records past
+    ``offset`` (0 = whole-file scan from the header)."""
+    import zlib
+
+    from repro.serve.wal import _FILE_MAGIC, _REC_HDR, _REC_MAGIC
+
+    with open(path, "rb") as f:
+        data = f.read()
+    off = int(offset)
+    if off == 0:
+        off = len(_FILE_MAGIC)
+    for _ in range(n_records):
+        magic, _version, length, crc = _REC_HDR.unpack_from(data, off)
+        if magic != _REC_MAGIC:
+            break
+        end = off + _REC_HDR.size + length
+        if end > len(data) or zlib.crc32(data[off + _REC_HDR.size: end]
+                                         ) & 0xFFFFFFFF != crc:
+            break
+        off = end
+    return off

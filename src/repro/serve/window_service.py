@@ -32,17 +32,64 @@ runtime) with three mechanisms:
   is an O(1) hit and an update costs ~|affected| invalidations instead of
   a full cache flush.  The first post-update miss refreshes the whole
   group vector with one fused launch.
+
+:class:`AsyncWindowService` adds the continuous-batching front end on
+top: a background flusher launches a bucket when it *fills* or when the
+earliest request's latency **deadline** expires (``max_delay_ms`` per
+:class:`RequestClass`); admission control sheds the lowest-priority
+sheddable full-graph scans first (never point reads) and applies
+backpressure otherwise, with the admission window shrinking as the
+session's staleness approaches the :class:`~repro.core.streaming.
+StalenessPolicy` thresholds; and every update is appended to a
+:class:`~repro.serve.wal.WriteAheadLog` *before* it is applied, so a
+crash recovers by replay (:meth:`~repro.core.api.Session.
+restore_from_wal`) and a follower tailing the log is a read replica
+(:class:`~repro.serve.replica.ReadReplica`).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 import numpy as np
 
 from repro.core.api import QuerySpec, Session
+
+
+class LoadShedError(RuntimeError):
+    """The request was rejected (or evicted) by admission control."""
+
+
+# ---------------------------------------------------------------------- #
+#  Request classes
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class RequestClass:
+    """Latency/priority contract of a request.
+
+    ``max_delay_ms`` is the continuous-batching deadline: a pending
+    request is launched no later than this after submit, even in a
+    partially filled bucket.  ``priority`` orders load shedding (lower
+    sheds first).  ``sheddable`` marks requests admission control may
+    reject under overload; point reads are *never* shed regardless (they
+    are O(1) cache hits in steady state — shedding them buys nothing).
+    """
+
+    name: str
+    max_delay_ms: float = 5.0
+    priority: int = 10
+    sheddable: bool = True
+
+
+DEFAULT_REQUEST_CLASSES = {
+    "point": RequestClass("point", max_delay_ms=2.0, priority=100,
+                          sheddable=False),
+    "interactive": RequestClass("interactive", max_delay_ms=5.0, priority=10),
+    "batch": RequestClass("batch", max_delay_ms=50.0, priority=0),
+}
 
 
 # ---------------------------------------------------------------------- #
@@ -50,11 +97,14 @@ from repro.core.api import QuerySpec, Session
 # ---------------------------------------------------------------------- #
 @dataclasses.dataclass
 class Ticket:
-    """One submitted request, completed by the flush that serves it.
+    """One submitted request, completed (or failed) by the flush that
+    serves it — a future.
 
     ``result`` is a scalar for point reads ([n] vector for full-graph
     reads); ``version`` is the snapshot version the answer was computed at
-    (the pinned read version — not necessarily the write head).
+    (the pinned read version — not necessarily the write head).  A flush
+    that raises mid-launch records the exception on ``error`` for exactly
+    the affected tickets; :meth:`get` re-raises it in the submitter.
     """
 
     rid: int
@@ -66,10 +116,36 @@ class Ticket:
     version: Optional[int] = None
     cache_hit: bool = False
     latency_s: float = 0.0
+    error: Optional[BaseException] = None
+    request_class: Optional[RequestClass] = None
+    deadline_s: Optional[float] = None
+    _event: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False, compare=False)
 
     @property
     def done(self) -> bool:
-        return self.result is not None
+        return self._event.is_set()
+
+    @property
+    def failed(self) -> bool:
+        return self.error is not None
+
+    @property
+    def priority(self) -> int:
+        return self.request_class.priority if self.request_class else 10
+
+    def _finish(self) -> None:
+        self._event.set()
+
+    def get(self, timeout: Optional[float] = None):
+        """Block until served; return the result or re-raise the recorded
+        error (``LoadShedError`` if admission control evicted it)."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"ticket {self.rid} not served "
+                               f"within {timeout}s")
+        if self.error is not None:
+            raise self.error
+        return self.result
 
 
 # ---------------------------------------------------------------------- #
@@ -142,7 +218,17 @@ class AffectedOwnerCache:
     def on_update(self, version: int, owner_map: Dict) -> None:
         """Advance to ``version``.  ``owner_map[gi]`` is the group's
         affected-owner array, or None when the group has no incremental
-        state (nothing bounds its staleness — drop the entry)."""
+        state (nothing bounds its staleness — drop the entry).
+
+        The version advances *first*: a concurrent reader that computed a
+        group vector at the old version must find its ``put_group``
+        rejected by the gate rather than landing between the invalidation
+        sweep and the bump (which would resurrect a stale vector at the
+        new version — the lost-invalidation race).  No reader can be
+        pinned *at* the new version yet: the serving layer flips only
+        after this returns.
+        """
+        self.version = version
         for gi, owners in owner_map.items():
             e = self._entries.get(gi)
             if e is None:
@@ -155,7 +241,6 @@ class AffectedOwnerCache:
             e["valid"][owners] = False
             e["valid_all"] = bool(e["valid"].all())
             self.invalidated += int(owners.size)
-        self.version = version
 
     # ------------------------------------------------------------------ #
     def valid_fraction(self, gi: int) -> float:
@@ -194,6 +279,12 @@ class WindowService:
     ``vertex`` (point read) and optionally an explicit ``values`` vector
     (evaluate the spec's window under substitute attribute values — the
     classic serving pattern where each caller brings its own features).
+
+    Flushes are exception-safe: a fused launch that raises fails exactly
+    the tickets it was serving (error recorded on each
+    :class:`Ticket`), the queue is already detached so nothing is
+    stranded, the version-gated cache never holds partial results, and
+    the next flush starts clean.
     """
 
     def __init__(self, session: Session, bucket: int = 8,
@@ -207,6 +298,8 @@ class WindowService:
             session.attach_cache(self.cache)
         self._active = session.snapshot()
         self._pending: List[Ticket] = []
+        self._lock = threading.RLock()  # guards _pending + _rid
+        self._flush_lock = threading.Lock()  # serializes _serve bodies
         self._rid = 0
         self._spec_index = {s: i for i, s in enumerate(session.compiled.specs)}
         # telemetry
@@ -214,6 +307,7 @@ class WindowService:
         self.batched_launches = 0
         self.padded_rows = 0
         self.served = 0
+        self.failed = 0
         self.point_hits = 0
         self.point_misses = 0
 
@@ -244,9 +338,9 @@ class WindowService:
             )
         return self._spec_index[spec]
 
-    def submit(self, spec, vertex: Optional[int] = None,
-               values=None) -> Ticket:
-        """Enqueue one request; returns its (unfilled) :class:`Ticket`.
+    def _make_ticket(self, spec, vertex: Optional[int], values,
+                     request_class: Optional[RequestClass] = None) -> Ticket:
+        """Validate and build (but do not enqueue) one request.
 
         Everything is validated here, not at flush time — one malformed
         request must fail its own submit, never poison a whole coalesced
@@ -269,19 +363,32 @@ class WindowService:
                     f"per-request values must have shape ({n},), "
                     f"got {values.shape}"
                 )
-        t = Ticket(
-            rid=self._rid, spec_index=si, vertex=vertex,
-            values=values, submitted_s=time.perf_counter(),
+        now = time.perf_counter()
+        deadline = (now + request_class.max_delay_ms / 1e3
+                    if request_class is not None else None)
+        with self._lock:
+            rid = self._rid
+            self._rid += 1
+        return Ticket(
+            rid=rid, spec_index=si, vertex=vertex, values=values,
+            submitted_s=now, request_class=request_class,
+            deadline_s=deadline,
         )
-        self._rid += 1
-        self._pending.append(t)
+
+    def submit(self, spec, vertex: Optional[int] = None,
+               values=None) -> Ticket:
+        """Enqueue one request; returns its (unfilled) :class:`Ticket`."""
+        t = self._make_ticket(spec, vertex, values)
+        with self._lock:
+            self._pending.append(t)
         return t
 
     def query(self, spec, vertex: Optional[int] = None, values=None):
-        """Submit + flush; returns the result directly."""
+        """Submit + flush; returns the result directly (raises the
+        recorded error if the serving launch failed)."""
         t = self.submit(spec, vertex=vertex, values=values)
         self.flush()
-        return t.result
+        return t.get(timeout=0)
 
     # ------------------------------------------------------------------ #
     def _serve_snapshot(self, view, gi: int, agg: str,
@@ -291,7 +398,9 @@ class WindowService:
         ``memo`` holds group vectors already computed *this flush*: when
         the versioned cache cannot serve (``use_cache=False``, or a reader
         pinned behind the write head bypassing it), N point reads of one
-        group still cost one fused launch, not N.
+        group still cost one fused launch, not N.  A failed group launch
+        poisons the memo slot with its exception, so later tickets of the
+        same group fail fast instead of re-raising from a fresh launch.
         """
         if self.cache is not None and vertex is not None:
             hit = self.cache.get_point(gi, agg, vertex, view.version)
@@ -302,13 +411,25 @@ class WindowService:
         # miss (or full read): one fused launch refreshes the whole group
         # vector — in the cache (cache-aware run_group) and the flush memo
         out = memo.get(gi)
+        if isinstance(out, BaseException):
+            raise out
         if out is None:
-            out = memo[gi] = view.run_group(gi)
+            try:
+                out = memo[gi] = view.run_group(gi)
+            except BaseException as e:
+                memo[gi] = e
+                raise
         vec = out[agg]
         # full reads copy at the ticket boundary: several tickets may share
         # one memo/cache vector, and a caller mutating its result must not
         # corrupt another caller's answer
         return (vec[vertex] if vertex is not None else vec.copy()), False
+
+    def _take_pending(self) -> List[Ticket]:
+        """Atomically detach the queue (so a raise can never strand it)."""
+        with self._lock:
+            pending, self._pending = self._pending, []
+        return pending
 
     def flush(self) -> List[Ticket]:
         """Serve every pending request against the active snapshot.
@@ -320,21 +441,27 @@ class WindowService:
         one (window, attr) group share a launch (they are channels of the
         same fused plan) and the [bucket, n] executable never retraces.
         """
-        pending, self._pending = self._pending, []
+        with self._flush_lock:
+            return self._serve(self._take_pending())
+
+    def _serve(self, pending: List[Ticket]) -> List[Ticket]:
         if not pending:
             return pending
         view = self._active
         groups = self.session.compiled.groups
         slots = self.session.compiled.spec_slots
         by_group: Dict[int, List[Ticket]] = {}
-        memo: Dict[int, Dict] = {}  # group vectors computed this flush
+        memo: Dict[int, object] = {}  # group vectors (or poison) this flush
         for t in pending:
             gi, ai = slots[t.spec_index]
             if t.values is None:
-                t.result, t.cache_hit = self._serve_snapshot(
-                    view, gi, groups[gi].aggs[ai], t.vertex, memo
-                )
-                t.version = view.version
+                try:
+                    t.result, t.cache_hit = self._serve_snapshot(
+                        view, gi, groups[gi].aggs[ai], t.vertex, memo
+                    )
+                    t.version = view.version
+                except BaseException as e:
+                    t.error = e
             else:
                 by_group.setdefault(gi, []).append(t)
         n = view.graph.n
@@ -355,7 +482,15 @@ class WindowService:
                 vb = np.zeros((rows_n, n), np.float32)  # fixed bucket
                 for row, t in enumerate(chunk):
                     vb[row] = t.values
-                out = view.run_group_many(gi, vb)
+                try:
+                    out = view.run_group_many(gi, vb)
+                except BaseException as e:
+                    # fail exactly this chunk's tickets; other chunks (and
+                    # other groups) still get served, and the queue was
+                    # detached up front so the next flush starts clean
+                    for t in chunk:
+                        t.error = e
+                    continue
                 self.batched_launches += 1
                 self.padded_rows += rows_n - len(chunk)
                 for row, t in enumerate(chunk):
@@ -365,10 +500,15 @@ class WindowService:
                                 else np.asarray(vec))
                     t.version = view.version
         now = time.perf_counter()
+        ok = 0
         for t in pending:
             t.latency_s = now - t.submitted_s
+            if t.error is None:
+                ok += 1
+            t._finish()
         self.flushes += 1
-        self.served += len(pending)
+        self.served += ok
+        self.failed += len(pending) - ok
         return pending
 
     # ------------------------------------------------------------------ #
@@ -399,6 +539,7 @@ class WindowService:
         point = self.point_hits + self.point_misses
         out = {
             "served": self.served,
+            "failed": self.failed,
             "flushes": self.flushes,
             "batched_launches": self.batched_launches,
             "padded_rows": self.padded_rows,
@@ -411,4 +552,281 @@ class WindowService:
         }
         if self.cache is not None:
             out["cache"] = self.cache.stats
+        return out
+
+
+# ---------------------------------------------------------------------- #
+#  AsyncWindowService — continuous batching + durability
+# ---------------------------------------------------------------------- #
+class AsyncWindowService(WindowService):
+    """Continuous-batching front end: deadline-driven background flusher,
+    staleness-aware admission control, and WAL durability.
+
+    * **Deadline-or-fill flushing** — a daemon flusher launches the
+      pending queue when it holds a full ``bucket`` (fill flush) or when
+      the earliest ticket's per-class deadline (``max_delay_ms``) expires
+      (deadline flush).  At low load this bounds p99 latency by the
+      deadline instead of by "whenever the bucket happens to fill".
+
+    * **Backpressure + load shedding** — when the queue reaches the
+      admission window, the lowest-priority *sheddable full-graph scan*
+      is evicted first (its submitter sees :class:`LoadShedError`); point
+      reads are never shed.  If the incoming request is itself the
+      lowest-priority sheddable scan, *it* is rejected.  A non-sheddable
+      request with nothing to evict waits (backpressure) for the flusher
+      to drain.  The admission window shrinks as the session's staleness
+      ratios approach the :class:`~repro.core.streaming.StalenessPolicy`
+      thresholds (:meth:`pressure`) — a stale index is about to pay a
+      reorganize, so the service trims its queue before that stall.
+
+    * **Write-ahead logging** — :meth:`update` appends the batch to the
+      WAL *before* applying it (append-before-apply): any state a reader
+      could ever have observed is reconstructible by
+      :meth:`Session.restore_from_wal`, and a follower tailing the log
+      is a read replica.
+
+    Use as a context manager (or :meth:`start`/:meth:`stop`).  Without
+    ``start()`` the service degrades to the synchronous base behavior
+    (submit + explicit :meth:`flush`), deadlines unenforced.
+    """
+
+    def __init__(self, session: Session, bucket: int = 8,
+                 auto_flip: bool = True, use_cache: bool = True,
+                 classes: Optional[Dict[str, RequestClass]] = None,
+                 default_class: str = "interactive",
+                 max_pending: int = 256,
+                 wal: Union[None, str, "object"] = None,
+                 policy=None):
+        super().__init__(session, bucket=bucket, auto_flip=auto_flip,
+                         use_cache=use_cache)
+        self.classes = dict(DEFAULT_REQUEST_CLASSES)
+        if classes:
+            self.classes.update(classes)
+        self.default_class = default_class
+        self.max_pending = int(max_pending)
+        assert self.max_pending >= self.bucket
+        if wal is not None and not hasattr(wal, "append"):
+            from repro.serve.wal import WriteAheadLog
+
+            wal = WriteAheadLog(wal)
+        self.wal = wal
+        if policy is None:
+            from repro.core.streaming import StalenessPolicy
+
+            policy = StalenessPolicy()
+        self.policy = policy
+        self._cv = threading.Condition(self._lock)
+        self._update_lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self._stopping = False
+        self._drain = True
+        # telemetry
+        self.shed = 0
+        self.deadline_flushes = 0
+        self.fill_flushes = 0
+        self.backpressure_waits = 0
+
+    # --------------------------- lifecycle ---------------------------- #
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def start(self) -> "AsyncWindowService":
+        if self.running:
+            return self
+        self._stopping = False
+        self._thread = threading.Thread(target=self._flusher_loop,
+                                        name="window-service-flusher",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the flusher; ``drain=True`` serves everything still
+        pending first (``False`` fails the leftovers with
+        :class:`LoadShedError`)."""
+        if self._thread is None:
+            return
+        with self._cv:
+            self._stopping = True
+            self._drain = drain
+            self._cv.notify_all()
+        self._thread.join(timeout=30)
+        self._thread = None
+        if drain:
+            self.flush()
+        else:
+            for t in self._take_pending():
+                t.error = LoadShedError("service stopped without drain")
+                t._finish()
+                self.failed += 1
+        if self.wal is not None:
+            self.wal.sync()
+
+    def __enter__(self) -> "AsyncWindowService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop(drain=True)
+
+    def close(self) -> None:
+        self.stop(drain=True)
+        if self.wal is not None:
+            self.wal.close()
+
+    # --------------------------- admission ---------------------------- #
+    def pressure(self) -> float:
+        """Staleness pressure in [0, 1]: 0 = freshly reorganized, 1 = at
+        the policy's reorganize thresholds.  The growth ratios start at
+        1.0 (a fresh index *is* its own baseline), so they are normalized
+        over the remaining headroom to the threshold."""
+        pol = self.policy
+        p = 0.0
+        for s in self.session.staleness.values():
+            p = max(
+                p,
+                (s["link_ratio"] - 1.0) / max(pol.max_link_ratio - 1.0, 1e-9),
+                (s["block_ratio"] - 1.0)
+                / max(pol.max_block_ratio - 1.0, 1e-9),
+                s["garbage_ratio"] / max(pol.max_garbage_ratio, 1e-9),
+            )
+        return float(min(max(p, 0.0), 1.0))
+
+    def effective_max_pending(self) -> int:
+        """Admission window: ``max_pending`` scaled down by staleness
+        pressure (down to one bucket at full pressure)."""
+        lo = self.bucket
+        span = self.max_pending - lo
+        return int(lo + span * (1.0 - self.pressure()))
+
+    def _pick_victim(self, incoming: Ticket) -> Optional[Ticket]:
+        """Lowest-priority sheddable full-graph scan among pending +
+        incoming (ties: newest first, preserving FIFO among equals).
+        Returns None when nothing is sheddable (point reads never are)."""
+        candidates = [
+            t for t in self._pending
+            if t.vertex is None and t.request_class is not None
+            and t.request_class.sheddable
+        ]
+        if (incoming.vertex is None and incoming.request_class is not None
+                and incoming.request_class.sheddable):
+            candidates.append(incoming)
+        if not candidates:
+            return None
+        return min(candidates, key=lambda t: (t.priority, -t.rid))
+
+    def submit(self, spec, vertex: Optional[int] = None, values=None,
+               request_class: Union[None, str, RequestClass] = None
+               ) -> Ticket:
+        """Enqueue with admission control; wakes the flusher.
+
+        Raises :class:`LoadShedError` if the request itself is shed at
+        admission.  An evicted *pending* ticket gets the error recorded
+        and its waiter released instead."""
+        if request_class is None:
+            request_class = ("point" if vertex is not None
+                             else self.default_class)
+        if isinstance(request_class, str):
+            request_class = self.classes[request_class]
+        t = self._make_ticket(spec, vertex, values, request_class)
+        with self._cv:
+            while len(self._pending) >= self.effective_max_pending():
+                victim = self._pick_victim(t)
+                if victim is t:
+                    self.shed += 1
+                    self.failed += 1
+                    t.error = LoadShedError(
+                        f"request shed at admission (queue "
+                        f"{len(self._pending)}, pressure {self.pressure():.2f})"
+                    )
+                    t._finish()
+                    raise t.error
+                if victim is not None:
+                    self._pending.remove(victim)
+                    victim.error = LoadShedError(
+                        "evicted by a higher-priority request under overload"
+                    )
+                    victim._finish()
+                    self.shed += 1
+                    self.failed += 1
+                    continue
+                # nothing sheddable (all point reads): backpressure —
+                # wait for the flusher to drain.  Without a running
+                # flusher nobody will drain for us: serve synchronously.
+                if not self.running:
+                    break
+                self.backpressure_waits += 1
+                self._cv.wait(timeout=0.01)
+            self._pending.append(t)
+            self._cv.notify_all()
+        if not self.running and len(self._pending) >= self.bucket:
+            self.flush()
+        return t
+
+    # --------------------------- flushing ----------------------------- #
+    def flush(self) -> List[Ticket]:
+        served = super().flush()
+        with self._cv:
+            self._cv.notify_all()  # release backpressure waiters
+        return served
+
+    def _flusher_loop(self) -> None:
+        while True:
+            reason = None
+            with self._cv:
+                while reason is None:
+                    if self._stopping:
+                        return  # stop() drains (or fails) the leftovers
+                    if not self._pending:
+                        self._cv.wait(timeout=0.05)
+                        continue
+                    if len(self._pending) >= self.bucket:
+                        reason = "fill"
+                        break
+                    now = time.perf_counter()
+                    dl = min(t.deadline_s or (now + 0.05)
+                             for t in self._pending)
+                    if now >= dl:
+                        reason = "deadline"
+                        break
+                    self._cv.wait(timeout=max(dl - now, 1e-4))
+            if reason == "fill":
+                self.fill_flushes += 1
+            else:
+                self.deadline_flushes += 1
+            try:
+                self.flush()
+            except Exception:
+                # _serve records per-ticket errors; anything escaping here
+                # is a bug in the scheduler itself — keep the loop alive,
+                # the queue was detached so no ticket is stranded
+                pass
+
+    # --------------------------- durability --------------------------- #
+    def update(self, batch) -> Dict:
+        """Append-before-apply: the batch is durable in the WAL before any
+        reader can observe its effects, so replaying the log into a fresh
+        session always reproduces (a prefix of) the served states."""
+        with self._update_lock:
+            if self.wal is not None:
+                self.wal.append(batch, version=self.session.version + 1)
+            return super().update(batch)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def stats(self) -> Dict:
+        out = super().stats
+        out.update(
+            shed=self.shed,
+            deadline_flushes=self.deadline_flushes,
+            fill_flushes=self.fill_flushes,
+            backpressure_waits=self.backpressure_waits,
+            pending=len(self._pending),
+            max_pending=self.max_pending,
+            effective_max_pending=self.effective_max_pending(),
+            pressure=self.pressure(),
+            running=self.running,
+        )
+        if self.wal is not None:
+            out["wal"] = self.wal.stats
         return out

@@ -145,3 +145,72 @@ def test_sharded_run_many_and_registry_route():
         print("SERVE_OK")
     """, devices=2)
     assert "SERVE_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-2000:]
+
+
+def test_wire_replication_follower_bit_identical():
+    """ISSUE 6: the changed-tile-group patch stream doubles as the
+    replication message.  A follower holding only the initial plan applies
+    every wire message (bytes-roundtripped through the pickle-free codec)
+    and answers bit-identically to the leader at each step — through both
+    incremental "patch" messages and a full "resync"."""
+    r = _run("""
+        import numpy as np, jax
+        from repro.graphs.generators import erdos_renyi, with_random_attrs
+        from repro.core.dbindex import build_dbindex
+        from repro.core.updates import UpdateBatch
+        from repro.core.windows import KHopWindow
+        from repro.core import engine_jax as ej
+        from repro.distributed import window_runtime as wr
+
+        mesh = jax.make_mesh((2,), ("data",))
+        g = with_random_attrs(erdos_renyi(400, 3.0, directed=False, seed=21),
+                              seed=22)
+        w = KHopWindow(1)
+        leader = wr.ShardedStreamState(g, w, mesh, tm=64, ts=64,
+                                       plan_headroom=1.0, capture_wire=True)
+
+        # follower: same base graph -> identical initial plan, then wire-fed
+        fidx = build_dbindex(g, w, method=leader.method)
+        fplan = wr.build_sharded_plan(
+            ej.plan_from_dbindex(fidx, 64, 64, headroom=1.0), mesh, "data",
+            headroom=1.0)
+
+        def mixed(g, rng, n_ins, n_del):
+            s = rng.integers(0, g.n, n_ins * 4).astype(np.int32)
+            d = rng.integers(0, g.n, n_ins * 4).astype(np.int32)
+            ok = (s != d) & ~g.contains_edges(s, d)
+            _, first = np.unique(g.edge_keys(s, d), return_index=True)
+            pick = np.intersect1d(np.flatnonzero(ok), first)[:n_ins]
+            ins = UpdateBatch.inserts(s[pick], d[pick])
+            ei = rng.choice(g.n_edges, min(n_del, g.n_edges), replace=False)
+            return UpdateBatch.concat(
+                [ins, UpdateBatch.deletes(g.src[ei], g.dst[ei])])
+
+        rng = np.random.default_rng(23)
+        kinds = []
+        consumed = 0
+        aggs = ("sum", "min")
+        from repro.core.updates import apply_batch
+        fgraph = g
+        for step in range(12):
+            b = mixed(leader.graph, rng, 4, 2)
+            leader.apply(b)
+            fgraph = apply_batch(fgraph, b)
+            if step == 7:
+                leader._build()  # force one resync message on the wire
+            for msg in leader.wire_log[consumed:]:
+                msg2 = wr.decode_wire_message(wr.encode_wire_message(msg))
+                kinds.append(msg2["kind"])
+                fplan = wr.apply_wire_message(fplan, msg2)
+            consumed = len(leader.wire_log)
+            vals = leader.graph.attrs["val"]
+            got = wr.query_sharded_multi(fplan, vals, aggs)
+            want = leader.query_multi(aggs)
+            for a, x, y in zip(aggs, got, want):
+                assert np.array_equal(np.asarray(x), np.asarray(y)), (
+                    step, a)
+        assert "patch" in kinds and "resync" in kinds, kinds
+        assert leader.plan.stats["version"] == fplan.stats["version"]
+        print("WIRE_OK", kinds.count("patch"), kinds.count("resync"))
+    """, devices=2)
+    assert "WIRE_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-2000:]

@@ -1,0 +1,378 @@
+"""WAL durability + crash recovery + read replicas (ISSUE 6).
+
+Contracts:
+
+* **codec** — ``UpdateBatch`` byte round-trips exactly (structural ops,
+  timestamps, multi-dtype attribute edits, empty batches);
+* **WAL** — append-before-apply records survive a crash: the valid prefix
+  replays exactly, a torn tail is ignored (and truncated on resume), and
+  version numbering resumes monotonically;
+* **crash recovery** — a session killed after K batches is reconstructed
+  bit-identically by replaying the WAL into a fresh ``Session`` — for
+  every engine path and every registered aggregate, against the
+  set-evaluation oracle, with zero recompiles across >= 20 streamed
+  batches (compile-counter-asserted);
+* **replica lag** — a follower tailing the log serves its pinned version
+  while behind, then catches up and flips to the leader's exact vectors.
+
+Attribute values are small integers: every f32 monoid reduce is exact, so
+"bit-identical" is asserted with ``array_equal``, not ``allclose``.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import api  # noqa: E402
+from repro.core.aggregates import AGGREGATES  # noqa: E402
+from repro.core.api import QuerySpec, Session  # noqa: E402
+from repro.core.query import brute_force  # noqa: E402
+from repro.core.updates import (  # noqa: E402
+    AttrEdit,
+    UpdateBatch,
+    decode_update_batch,
+    encode_update_batch,
+)
+from repro.core.windows import KHopWindow, TopologicalWindow  # noqa: E402
+from repro.graphs.generators import erdos_renyi, random_dag  # noqa: E402
+from repro.serve import (  # noqa: E402
+    AsyncWindowService,
+    ReadReplica,
+    WindowService,
+    WriteAheadLog,
+    read_wal_records,
+)
+
+from test_updates import mixed  # noqa: E402  (stream helpers)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
+
+
+def int_graph(n, deg, seed, directed=False, dag=False):
+    if dag:
+        g = random_dag(n, deg, seed=seed)
+    else:
+        g = erdos_renyi(n, deg, directed=directed, seed=seed)
+    vals = np.random.default_rng(seed + 1).integers(0, 50, g.n)
+    return g.with_attr("val", vals.astype(np.float64))
+
+
+# ---------------------------------------------------------------------- #
+#  UpdateBatch codec
+# ---------------------------------------------------------------------- #
+def _assert_batch_equal(a: UpdateBatch, b: UpdateBatch):
+    assert np.array_equal(a.src, b.src) and a.src.dtype == b.src.dtype
+    assert np.array_equal(a.dst, b.dst) and a.dst.dtype == b.dst.dtype
+    assert np.array_equal(a.op, b.op)
+    if a.ts is None:
+        assert b.ts is None
+    else:
+        assert np.array_equal(a.ts, b.ts)
+    assert len(a.attr_edits) == len(b.attr_edits)
+    for ea, eb in zip(a.attr_edits, b.attr_edits):
+        assert ea.name == eb.name
+        assert np.array_equal(ea.vertices, eb.vertices)
+        assert np.array_equal(ea.values, eb.values)
+        assert ea.values.dtype == eb.values.dtype
+
+
+def test_codec_roundtrip_structural_and_attrs():
+    b = UpdateBatch(
+        np.array([1, 2, 3], np.int32), np.array([4, 5, 6], np.int32),
+        np.array([1, -1, 1], np.int8), np.array([0.5, 1.5, 2.5]),
+        attr_edits=(
+            AttrEdit("val", [0, 7], np.array([9.0, 3.0])),
+            AttrEdit("flag", [2], np.array([1], np.int32)),
+        ),
+    )
+    _assert_batch_equal(b, decode_update_batch(encode_update_batch(b)))
+    _assert_batch_equal(b, UpdateBatch.from_bytes(b.to_bytes()))
+
+
+def test_codec_roundtrip_empty_and_no_ts():
+    empty = UpdateBatch.inserts([], [])
+    _assert_batch_equal(empty, UpdateBatch.from_bytes(empty.to_bytes()))
+    plain = UpdateBatch.deletes([3], [4])
+    assert plain.ts is None
+    _assert_batch_equal(plain, UpdateBatch.from_bytes(plain.to_bytes()))
+
+
+def test_codec_rejects_corruption():
+    data = UpdateBatch.inserts([1], [2]).to_bytes()
+    with pytest.raises(ValueError):
+        decode_update_batch(b"XXXX" + data[4:])
+    with pytest.raises(ValueError):
+        decode_update_batch(data[:-2])
+    with pytest.raises(ValueError):
+        decode_update_batch(data + b"\x00")
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(min_value=0, max_value=40),
+    with_ts=st.booleans(),
+    n_edits=st.integers(min_value=0, max_value=3),
+)
+def test_codec_roundtrip_random(m, with_ts, n_edits):
+    rng = np.random.default_rng(m * 7 + n_edits * 131 + int(with_ts))
+    edits = tuple(
+        AttrEdit(f"a{i}", rng.integers(0, 100, 5),
+                 rng.integers(-9, 9, 5).astype(
+                     [np.float64, np.int32, np.float32][i % 3]))
+        for i in range(n_edits)
+    )
+    b = UpdateBatch(
+        rng.integers(0, 100, m).astype(np.int32),
+        rng.integers(0, 100, m).astype(np.int32),
+        rng.choice([np.int8(1), np.int8(-1)], m),
+        rng.random(m) if with_ts else None,
+        edits,
+    )
+    _assert_batch_equal(b, UpdateBatch.from_bytes(b.to_bytes()))
+
+
+# ---------------------------------------------------------------------- #
+#  WAL file behavior
+# ---------------------------------------------------------------------- #
+def test_wal_append_replay_and_resume(tmp_path):
+    path = tmp_path / "w.wal"
+    batches = [UpdateBatch.inserts([i], [i + 1]) for i in range(5)]
+    with WriteAheadLog(path) as wal:
+        for b in batches:
+            wal.append(b)
+        assert wal.last_version == 5
+    records, end = read_wal_records(path)
+    assert [v for v, _ in records] == [1, 2, 3, 4, 5]
+    for (_, got), want in zip(records, batches):
+        _assert_batch_equal(got, want)
+    # resume continues version numbering
+    with WriteAheadLog(path) as wal:
+        assert wal.last_version == 5
+        assert wal.append(UpdateBatch.deletes([0], [1])) == 6
+    assert [v for v, _ in read_wal_records(path)[0]] == [1, 2, 3, 4, 5, 6]
+
+
+def test_wal_torn_tail_is_ignored_and_truncated(tmp_path):
+    path = tmp_path / "w.wal"
+    with WriteAheadLog(path) as wal:
+        wal.append(UpdateBatch.inserts([1], [2]))
+        wal.append(UpdateBatch.inserts([3], [4]))
+    size = os.path.getsize(path)
+    with open(path, "ab") as f:  # simulate a crash mid-append
+        f.write(b"WREC" + b"\x07" * 11)
+    records, end = read_wal_records(path)
+    assert len(records) == 2 and end == size
+    # resume truncates the torn tail and keeps appending cleanly
+    with WriteAheadLog(path) as wal:
+        assert os.path.getsize(path) == size
+        wal.append(UpdateBatch.inserts([5], [6]))
+    assert len(read_wal_records(path)[0]) == 3
+
+
+def test_wal_offset_tailing(tmp_path):
+    path = tmp_path / "w.wal"
+    wal = WriteAheadLog(path)
+    wal.append(UpdateBatch.inserts([1], [2]), sync=True)
+    first, off1 = read_wal_records(path)
+    assert len(first) == 1
+    wal.append(UpdateBatch.inserts([3], [4]), sync=True)
+    more, off2 = read_wal_records(path, off1)
+    assert len(more) == 1 and off2 > off1
+    assert more[0][0] == 2
+    # polling at the tail is empty, not an error
+    assert read_wal_records(path, off2)[0] == []
+    wal.close()
+
+
+# ---------------------------------------------------------------------- #
+#  Crash-recovery differential suite
+# ---------------------------------------------------------------------- #
+ENGINE_SESSIONS = [
+    pytest.param({"device": True, "use_pallas": False}, False,
+                 id="dbindex-device"),
+    pytest.param({"device": False}, False, id="dbindex-host"),
+    pytest.param({"device": True, "use_pallas": False}, True,
+                 id="iindex-topological"),
+]
+
+
+@pytest.mark.parametrize("session_kw,topo", ENGINE_SESSIONS)
+def test_crash_recovery_bit_identical_all_aggregates(tmp_path, session_kw,
+                                                     topo):
+    """Kill after K batches; WAL replay must reproduce the live session's
+    results bit-identically for every registered aggregate, and both must
+    match the set-evaluation oracle for the exact-monoid aggregates."""
+    g = int_graph(150, 3.0, seed=21, dag=topo)
+    window = TopologicalWindow() if topo else KHopWindow(2)
+    aggs = sorted(AGGREGATES)
+    specs = [QuerySpec(window, a) for a in aggs]
+    path = tmp_path / "svc.wal"
+    rng = np.random.default_rng(22)
+
+    live = Session(g, specs, **session_kw)
+    K = 8
+    with WriteAheadLog(path) as wal:
+        for _ in range(K):
+            b = mixed(live.graph, rng, 4, 2, dag=topo)
+            wal.append(b, version=live.version + 1)
+            live.update(b)
+    # "crash": the live session object is all we have to compare against;
+    # a fresh process would re-run exactly this constructor + replay
+    restored = Session.restore_from_wal(g, specs, path, **session_kw)
+    assert restored.version == live.version == K
+
+    vals = np.asarray(live.graph.attrs["val"], np.float64)
+    out_live = live.run()
+    out_rest = restored.run()
+    for i, spec in enumerate(specs):
+        a, b = np.asarray(out_live[i]), np.asarray(out_rest[i])
+        assert np.array_equal(a, b), f"restore mismatch for {spec.agg}"
+        if spec.agg in ("sum", "count", "min", "max"):
+            oracle = brute_force(live.graph, window, vals, spec.agg,
+                                 dtype=np.float32)
+            assert np.array_equal(a, oracle), f"oracle mismatch {spec.agg}"
+
+
+def test_recovery_zero_recompiles_across_20_batches(tmp_path):
+    """The recovered session replays >= 20 batches through the same
+    incremental patching as the live one: the fused executable cache must
+    not grow during replay (zero recompiles), and the recovered results
+    stay bit-identical to the uninterrupted session's."""
+    from repro.core import engine_jax as ej
+
+    g = int_graph(200, 2.0, seed=31)
+    specs = [QuerySpec(KHopWindow(2), "sum"), QuerySpec(KHopWindow(2), "min")]
+    path = tmp_path / "svc.wal"
+    rng = np.random.default_rng(32)
+
+    live = Session(g, specs, use_pallas=False, plan_headroom=1.0)
+    live.run()  # compile once
+    with WriteAheadLog(path) as wal:
+        for _ in range(22):
+            b = mixed(live.graph, rng, 3, 1)
+            wal.append(b)
+            live.update(b)
+    live_out = live.run()  # serve at head — compiles the head shape once
+
+    c0 = ej.query_dbindex_multi._cache_size()
+    restored = Session.restore_from_wal(
+        g, specs, path, use_pallas=False, plan_headroom=1.0)
+    out = restored.run()
+    assert ej.query_dbindex_multi._cache_size() == c0, \
+        "WAL replay recompiled the fused executable"
+    for i in range(len(specs)):
+        assert np.array_equal(np.asarray(out[i]), np.asarray(live_out[i]))
+
+
+def test_restore_upto_version_point_in_time(tmp_path):
+    g = int_graph(100, 2.5, seed=41)
+    specs = [QuerySpec(KHopWindow(1), "sum")]
+    path = tmp_path / "svc.wal"
+    rng = np.random.default_rng(42)
+
+    live = Session(g, specs, use_pallas=False)
+    snapshots = {}
+    with WriteAheadLog(path) as wal:
+        for i in range(6):
+            b = mixed(live.graph, rng, 3, 1)
+            wal.append(b)
+            live.update(b)
+            snapshots[live.version] = np.asarray(live.run()[0])
+    for v in (2, 4, 6):
+        at_v = Session.restore_from_wal(g, specs, path, upto_version=v,
+                                        use_pallas=False)
+        assert at_v.version == v
+        assert np.array_equal(np.asarray(at_v.run()[0]), snapshots[v])
+
+
+def test_async_service_wal_covers_everything_served(tmp_path):
+    """Append-before-apply through the service: after any number of
+    updates, a recovery from the WAL answers exactly like the live
+    service — nothing applied is ever missing from the log."""
+    g = int_graph(120, 2.5, seed=51)
+    specs = [QuerySpec(KHopWindow(2), "sum")]
+    path = tmp_path / "svc.wal"
+    rng = np.random.default_rng(52)
+
+    svc = AsyncWindowService(Session(g, specs, use_pallas=False), wal=path)
+    for _ in range(5):
+        svc.update(mixed(svc.session.graph, rng, 3, 1))
+    live_vec = svc.query(0)
+    svc.close()
+
+    restored = Session.restore_from_wal(g, specs, path, use_pallas=False)
+    assert restored.version == 5
+    assert np.array_equal(WindowService(restored).query(0), live_vec)
+
+
+# ---------------------------------------------------------------------- #
+#  Read replicas
+# ---------------------------------------------------------------------- #
+def test_replica_lag_pinned_then_catch_up(tmp_path):
+    """The pinned follower serves the old version bit-stably while the
+    leader streams ahead; catch_up applies the backlog and flip publishes
+    the leader's exact vectors."""
+    g = int_graph(120, 2.5, seed=61)
+    specs = [QuerySpec(KHopWindow(2), "sum"), QuerySpec(KHopWindow(2), "min")]
+    path = tmp_path / "svc.wal"
+    rng = np.random.default_rng(62)
+
+    leader = AsyncWindowService(Session(g, specs, use_pallas=False),
+                                wal=path)
+    replica = ReadReplica(g, specs, path, use_pallas=False)
+    v0_sum = replica.query(0)
+
+    for _ in range(4):
+        leader.update(mixed(leader.session.graph, rng, 3, 1))
+    leader.wal.sync()
+
+    # poll applies at the head; reads stay pinned at the published version
+    applied = replica.poll()
+    assert applied == 4
+    assert replica.version == 0 and replica.head_version == 4
+    assert replica.lag["unpublished_versions"] == 4
+    assert np.array_equal(replica.query(0), v0_sum), \
+        "pinned replica must keep serving its published version"
+
+    replica.flip()
+    assert replica.version == 4
+    for si in (0, 1):
+        assert np.array_equal(replica.query(si), leader.query(si)), \
+            "caught-up replica must match the leader bit-for-bit"
+
+    # incremental tail: more leader traffic, catch_up in one call
+    leader.update(mixed(leader.session.graph, rng, 2, 1))
+    leader.wal.sync()
+    assert replica.catch_up() == 1
+    assert np.array_equal(replica.query(0), leader.query(0))
+    assert replica.lag["behind_bytes"] == 0
+    leader.close()
+
+
+def test_replica_upto_version_holds_then_resumes(tmp_path):
+    g = int_graph(80, 2.0, seed=71)
+    specs = [QuerySpec(KHopWindow(1), "sum")]
+    path = tmp_path / "svc.wal"
+    rng = np.random.default_rng(72)
+
+    live = Session(g, specs, use_pallas=False)
+    with WriteAheadLog(path) as wal:
+        for _ in range(6):
+            b = mixed(live.graph, rng, 2, 1)
+            wal.append(b)
+            live.update(b)
+
+    replica = ReadReplica(g, specs, path, use_pallas=False)
+    assert replica.poll(upto_version=3) == 3
+    assert replica.head_version == 3
+    # the offset stopped at the record boundary: resuming applies the rest
+    assert replica.poll() == 3
+    assert replica.head_version == 6
+    replica.flip()
+    assert np.array_equal(replica.query(0), np.asarray(live.run()[0]))

@@ -321,13 +321,15 @@ def test_filter_predicate_edit_rebuilds_membership(dag_case):
     g = dag_case
     f = Filter(KHopWindow(1), "mask")
     sess = Session(g, [QuerySpec(f, "sum")], device=True, use_pallas=False)
-    # flip some predicate bits: window membership changes everywhere
+    # flip some predicate bits: membership changes for the flipped
+    # vertices, and maintenance either re-filters exactly the bounded
+    # owner set or (past n/2 owners) rebuilds outright — never a no-op
     flip = [0, 5, 9]
     newbits = 1 - np.asarray(g.attrs["mask"])[flip]
     rep = sess.update(UpdateBatch.attr_set("mask", flip, newbits))
     key = f"{f.name()}/dbindex"
-    assert rep[key]["reorganized"]
-    assert rep[key]["affected"] == g.n  # conservative: every owner
+    assert rep[key]["reorganized"] or rep[key]["refiltered"]
+    assert 0 < rep[key]["affected"] <= g.n
     got = sess.run()[0]
     ref = brute_force(sess.graph, f, sess.graph.attrs["val"], "sum",
                       dtype=np.float32)
