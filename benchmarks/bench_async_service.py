@@ -26,7 +26,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, emit_json, mixed_update_batch
+from benchmarks.common import emit, emit_json, mixed_update_batch, _obs_snapshot
 
 
 def _pcts(lat_s):
@@ -231,6 +231,8 @@ def run(n: int = 20_000, deg: float = 6.0, k: int = 1, clients: int = 64,
         "low_load": {"deadline_p50_us": dl_p50, "deadline_p99_us": dl_p99,
                      "fillonly_p50_us": fo_p50, "fillonly_p99_us": fo_p99,
                      "deadline_beats_fillonly": bool(dl_p99 < fo_p99)},
+        # empty when obs is disabled (the default for timed runs)
+        "obs_snapshot": _obs_snapshot(),
     }
     emit_json(json_path, payload)
     return payload

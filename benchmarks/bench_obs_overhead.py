@@ -1,0 +1,126 @@
+"""Observability overhead: instrumented vs NullRegistry serving QPS.
+
+Acceptance (ISSUE 7), asserted here and recorded in
+``BENCH_obs_overhead.json``: enabling the full obs stack (metrics
+registry + tracer + SLO accounting) costs **< 5% QPS** on the serving
+hot path.  Two identical `WindowService` stacks are built — one bound to
+the `NullRegistry`/`NullTracer` (obs disabled: every instrument call is
+a no-op on a shared singleton), one bound to live instruments — and the
+same request/update trace is replayed through both in **interleaved
+rounds**, scoring each side by its best round (noise only ever adds
+time, and interleaving exposes both sides to the same machine weather).
+
+The instrumented side's full metrics snapshot is attached to the JSON
+payload, so the bench doubles as a regression fixture for the metric-name
+schema.
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_obs_overhead [--smoke]``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, emit_json, mixed_update_batch
+
+MAX_OVERHEAD = 0.05
+
+
+def run(n: int = 8_000, deg: float = 5.0, rounds: int = 7, ticks: int = 4,
+        point_q: int = 64, bucket: int = 8, smoke: bool = False,
+        json_path: str = "BENCH_obs_overhead.json") -> dict:
+    from repro import obs
+    from repro.core.api import QuerySpec, Session
+    from repro.graphs.generators import erdos_renyi
+    from repro.serve import WindowService
+
+    if smoke:
+        n, rounds, ticks, point_q = 2_000, 3, 2, 24
+
+    rng = np.random.default_rng(0)
+    g = erdos_renyi(n, deg, directed=False, seed=0)
+    g = g.with_attr("val", rng.integers(0, 100, g.n).astype(np.float64))
+    specs = [QuerySpec(("khop", 1), "sum"), QuerySpec(("khop", 1), "min")]
+
+    # identical request/update trace for both sides
+    trace = []
+    for t in range(ticks):
+        trace.append([(int(rng.integers(len(specs))), int(rng.integers(n)))
+                      for _ in range(point_q)])
+    batch_seed = int(rng.integers(2**31))
+
+    def build(enabled):
+        if enabled:
+            obs.enable()
+        else:
+            obs.disable()
+        sess = Session(g, specs, device=True, use_pallas=False,
+                       plan_headroom=1.0)
+        return WindowService(sess, bucket=bucket)
+
+    def play(svc):
+        """One full round: ticks x (update + point storm + flush)."""
+        r = np.random.default_rng(batch_seed)
+        n_served = 0
+        for t in range(ticks):
+            svc.update(mixed_update_batch(svc.session.graph, r, 6, 3))
+            tickets = [svc.submit(si, vertex=v) for si, v in trace[t]]
+            svc.flush()
+            n_served += sum(tk.error is None for tk in tickets)
+        assert n_served == ticks * point_q
+        return n_served
+
+    # builds capture the global registry at construction: the Null side
+    # must be built while obs is disabled, the live side while enabled
+    svc_null = build(enabled=False)
+    svc_obs = build(enabled=True)
+    live_registry = obs.get_registry()
+    for svc in (svc_null, svc_obs):  # warm every executor shape
+        play(svc)
+
+    n_req = ticks * point_q
+    best = {"null": float("inf"), "obs": float("inf")}
+    for _ in range(rounds):  # interleaved A/B: same weather for both
+        for key, svc in (("null", svc_null), ("obs", svc_obs)):
+            t0 = time.perf_counter()
+            play(svc)
+            best[key] = min(best[key], time.perf_counter() - t0)
+
+    qps_null = n_req / best["null"]
+    qps_obs = n_req / best["obs"]
+    overhead = best["obs"] / best["null"] - 1.0
+    emit(f"obs/null_qps/n{n}", 1e6 / qps_null, f"{qps_null:.0f}qps")
+    emit(f"obs/instrumented_qps/n{n}", 1e6 / qps_obs, f"{qps_obs:.0f}qps")
+    emit(f"obs/overhead/n{n}", best["obs"] * 1e6 - best["null"] * 1e6,
+         f"{overhead * 100:.2f}pct")
+    assert overhead < MAX_OVERHEAD, (
+        f"obs overhead {overhead * 100:.2f}% exceeds "
+        f"{MAX_OVERHEAD * 100:.0f}% "
+        f"({qps_obs:.0f} vs {qps_null:.0f} qps)")
+
+    snapshot = live_registry.snapshot()
+    obs.disable()
+    payload = {
+        "config": {"n": n, "avg_degree": deg, "rounds": rounds,
+                   "ticks_per_round": ticks, "point_queries_per_tick": point_q,
+                   "bucket": bucket, "estimator": "best-of-rounds, interleaved"},
+        "null_qps": qps_null,
+        "instrumented_qps": qps_obs,
+        "overhead_fraction": overhead,
+        "max_overhead_fraction": MAX_OVERHEAD,
+        "obs_snapshot": snapshot,
+    }
+    emit_json(json_path, payload)
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep for CI (n=2k, 3 rounds)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -22,7 +22,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, emit_json, mixed_update_batch
+from benchmarks.common import emit, emit_json, mixed_update_batch, _obs_snapshot
 
 
 def _percentiles_us(lat_s):
@@ -173,6 +173,8 @@ def run(n: int = 20_000, deg: float = 6.0, k: int = 1, ticks: int = 20,
         "bit_identical": True,
         "oracle": {"checks": oracle_checks,
                    "ticks_checked": list(oracle_ticks)},
+        # empty when obs is disabled (the default for timed runs)
+        "obs_snapshot": _obs_snapshot(),
     }
     emit_json(json_path, payload)
     return payload

@@ -66,6 +66,14 @@ def mixed_update_batch(g, rng, n_ins: int, n_del: int):
     return UpdateBatch.concat([ins, UpdateBatch.deletes(g.src[ei], g.dst[ei])])
 
 
+def _obs_snapshot() -> Dict:
+    """The global obs registry snapshot for bench payloads — {} when obs
+    is disabled, so timed runs stay uninstrumented by default."""
+    from repro import obs
+
+    return obs.get_registry().snapshot()
+
+
 def best_of(fn: Callable, repeats: int = 10, warmup: int = 2) -> float:
     """Min wall time in microseconds — the robust estimator on shared boxes
     (noise only ever adds time; the min is the closest sample to the true

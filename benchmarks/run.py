@@ -25,6 +25,7 @@ def main(argv=None) -> None:
         bench_mc_emc,
         bench_multiquery,
         bench_nonindex_gap,
+        bench_obs_overhead,
         bench_scalability,
         bench_service,
         bench_updates,
@@ -48,6 +49,7 @@ def main(argv=None) -> None:
         "async_service": lambda: bench_async_service.run(smoke=args.fast),
         "window_algebra": lambda: bench_window_algebra.run(
             n=4_000 if args.fast else 20_000),
+        "obs_overhead": lambda: bench_obs_overhead.run(smoke=args.fast),
     }
     # bench_sharded_stream is deliberately NOT in this table: it must force
     # the host-platform device count before jax initializes, so it runs

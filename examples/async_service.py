@@ -65,10 +65,12 @@ with AsyncWindowService(sess, bucket=64, wal=wal_path) as svc:
         svc.update(UpdateBatch.inserts(s[ok], d[ok]))  # WAL'd, then applied
     head = svc.submit(0).get(timeout=5.0)  # full-scan at the head version
     stats = svc.stats
-    print(f"5 updates applied; wal = {stats['wal']['appends']} records, "
-          f"{stats['wal']['bytes_written']} bytes; flushes: "
-          f"{stats['deadline_flushes']} deadline / {stats['fill_flushes']} "
-          f"fill")
+    w = stats["wal"]
+    print(f"5 updates applied; wal = {w['records']} records, "
+          f"{w['bytes']} bytes, {w['torn_truncations']} torn-tail "
+          f"truncations, last fsync {w['last_fsync_s'] * 1e3:.2f} ms; "
+          f"flushes: {stats['deadline_flushes']} deadline / "
+          f"{stats['fill_flushes']} fill")
 
     # ---- load shedding under overload ---------------------------------- #
     # priorities: point(100, never shed) > interactive(10) > batch(0)
@@ -95,5 +97,8 @@ replica = ReadReplica(g, specs, wal_path, use_pallas=False)
 print(f"replica starts at v{replica.version}, "
       f"{replica.lag['behind_bytes']} bytes behind")
 replica.catch_up()
+lag = replica.lag  # also publishes repro_replica_lag_{bytes,versions} gauges
 same = np.array_equal(np.asarray(replica.query(0)), head)
-print(f"replica caught up to v{replica.version}; bit-identical: {same}")
+print(f"replica caught up to v{replica.version}; lag = "
+      f"{lag['behind_bytes']} bytes / {lag['unpublished_versions']} "
+      f"unpublished versions; bit-identical: {same}")

@@ -50,10 +50,12 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import sys
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs as _obs
 from repro.core.aggregates import (
     AGGREGATES,
     ALL_REGISTERED,
@@ -289,6 +291,36 @@ def run_many_cache_size() -> int:
     """Jit cache entries of the batched fused executors — the recompile
     counter behind the serving scheduler's fixed-bucket contract."""
     return sum(f._cache_size() for f in _VMANY.values())
+
+
+def recompile_count() -> int:
+    """Total jit cache entries across every fused executor in the process —
+    the ONE recompile number the zero-retrace contract is asserted on.
+
+    Sums the batched serving executors (:func:`run_many_cache_size`), the
+    unbatched fused query wrappers (``query_dbindex_multi`` /
+    ``query_iindex_multi``) and the sharded runtime's executor cache.
+    Modules not imported yet contribute 0 (and are not imported here —
+    probing must never pay a jax init)."""
+    total = run_many_cache_size()
+    ej = sys.modules.get("repro.core.engine_jax")
+    if ej is not None:
+        total += ej.query_dbindex_multi._cache_size()
+        total += ej.query_iindex_multi._cache_size()
+    wr = sys.modules.get("repro.distributed.window_runtime")
+    if wr is not None:
+        total += wr.query_cache_size()
+    return total
+
+
+def record_recompiles(obs=None) -> int:
+    """Publish :func:`recompile_count` as the ``repro_recompiles`` gauge
+    (in ``obs`` or the process default registry); returns the count."""
+    reg = obs if obs is not None else _obs.get_registry()
+    n = recompile_count()
+    reg.gauge("repro_recompiles",
+              "jit cache entries across all fused executors").set(n)
+    return n
 
 
 def _run_nonindex(g, window, values, aggs, index=None, plan=None, **opts):
@@ -645,8 +677,16 @@ class Session:
         mesh=None,
         axis="data",
         use_device_bfs: Optional[bool] = None,
+        obs=None,
+        tracer=None,
     ):
         self.registry = registry or DEFAULT_REGISTRY
+        self.obs = obs if obs is not None else _obs.get_registry()
+        self.tracer = tracer if tracer is not None else _obs.get_tracer()
+        self._m_updates = self.obs.counter(
+            "repro_session_updates_total", "UpdateBatches applied")
+        self._m_snapshots = self.obs.counter(
+            "repro_snapshots_total", "SessionView captures")
         self.compiled = compile_queries(specs, registry=self.registry,
                                         device=device, sharded=self._sharded)
         self.graph = g
@@ -720,6 +760,7 @@ class Session:
             plan_headroom=cfg["plan_headroom"],
             compact_garbage=0.5 if cg is None else cg,
             use_device_bfs=cfg["use_device_bfs"],
+            obs=self.obs, tracer=self.tracer,
         )
 
     # ------------------------------------------------------------------ #
@@ -764,10 +805,12 @@ class Session:
     # ------------------------------------------------------------------ #
     def _exec_term(self, grp: PlanGroup, window, index, plan, values, g,
                    aggs):
-        return self.registry.run(
-            grp.engine, g, window, values, aggs,
-            index=index, plan=plan, **self._opts,
-        )
+        with self.tracer.span("query.term", cat="query",
+                              engine=grp.engine, window=window.name()):
+            return self.registry.run(
+                grp.engine, g, window, values, aggs,
+                index=index, plan=plan, **self._opts,
+            )
 
     def _exec_term_many(self, grp: PlanGroup, window, index, plan, vb, g,
                         aggs):
@@ -777,27 +820,29 @@ class Session:
         batching a Pallas kernel is not supported on every backend, and the
         fused XLA path vmaps cleanly); host engines loop the batch.
         """
-        if plan is not None and grp.engine in _VMANY_ENGINES:
-            import jax.numpy as jnp
+        with self.tracer.span("query.term", cat="query", engine=grp.engine,
+                              window=window.name(), rows=len(vb)):
+            if plan is not None and grp.engine in _VMANY_ENGINES:
+                import jax.numpy as jnp
 
-            from repro.core.aggregates import pack_channels
+                from repro.core.aggregates import pack_channels
 
-            aggs = tuple(aggs)
-            chans = _get_vmany(grp.engine)(
-                plan, jnp.asarray(vb, jnp.float32), aggs,
-                self._opts["interpret"],
-            )
-            pack = pack_channels(aggs)
-            return {
-                a: np.asarray(pack.finalize(i, chans, xp=jnp))
-                for i, a in enumerate(aggs)
-            }
-        rows = [
-            self.registry.run(grp.engine, g, window, v, aggs,
-                              index=index, plan=plan, **self._opts)
-            for v in vb
-        ]
-        return {a: np.stack([r[a] for r in rows]) for a in aggs}
+                aggs = tuple(aggs)
+                chans = _get_vmany(grp.engine)(
+                    plan, jnp.asarray(vb, jnp.float32), aggs,
+                    self._opts["interpret"],
+                )
+                pack = pack_channels(aggs)
+                return {
+                    a: np.asarray(pack.finalize(i, chans, xp=jnp))
+                    for i, a in enumerate(aggs)
+                }
+            rows = [
+                self.registry.run(grp.engine, g, window, v, aggs,
+                                  index=index, plan=plan, **self._opts)
+                for v in vb
+            ]
+            return {a: np.stack([r[a] for r in rows]) for a in aggs}
 
     def _exec_group(self, gi: int, arts, values, graph=None):
         grp = self.compiled.groups[gi]
@@ -841,6 +886,7 @@ class Session:
         the view keeps answering at v, and no reader ever sees a
         half-patched plan.
         """
+        self._m_snapshots.inc()
         return SessionView(
             session=self,
             graph=self.graph,
@@ -920,47 +966,59 @@ class Session:
         streaming engines detect it) and invalidate wholesale."""
         from repro.core.updates import apply_batch, containing_owners
 
+        with self.tracer.span("session.update", cat="update",
+                              size=batch.size, version=self.version + 1):
+            return self._update_inner(batch)
+
+    def _update_inner(self, batch) -> Dict:
+        from repro.core.updates import apply_batch, containing_owners
+
         g2 = apply_batch(self.graph, batch)
         reports = {}
         for (window, kind), eng in self._states.items():
-            reports[f"{window.name()}/{kind}"] = eng.apply(batch, graph=g2)
+            key = f"{window.name()}/{kind}"
+            with self.tracer.span("maintain", cat="update", state=key):
+                reports[key] = eng.apply(batch, graph=g2)
         self.graph = g2
         self._eagr_dirty = (
             bool(self._eagr) and batch.size > 0) or self._eagr_dirty
         self.updates_applied += 1
         self.version += 1
+        self._m_updates.inc()
         for rep in reports.values():
             rep["version"] = self.version
         if self._result_cache is not None:
-            edited: Dict[str, list] = {}
-            for e in batch.attr_edits:
-                edited.setdefault(e.name, []).append(e.vertices)
-            owner_map = {}
-            for gi, grp in enumerate(self.compiled.groups):
-                keys = self.group_state_keys(gi)
-                group_attr_touched = grp.attr in edited
-                if not keys:
-                    # no incremental state to bound the blast radius: drop
-                    # on any change that could affect the group, keep on a
-                    # provably-unrelated attr-only batch
-                    unrelated = (batch.size == 0 and not group_attr_touched
-                                 and not (set(edited)
-                                          & set(filter_attrs(grp.window))))
-                    owner_map[gi] = (
-                        np.empty(0, np.int32) if unrelated else None)
-                    continue
-                parts = [reports[k]["affected_owners"] for k in keys]
-                if group_attr_touched:
-                    verts = np.unique(np.concatenate(edited[grp.attr]))
-                    kind = _kind_of(grp.engine)
-                    for term in self._group_terms(gi):
-                        state = self._states.get((term, kind))
-                        if state is not None:
-                            parts.append(containing_owners(
-                                state.index, g2, term, verts))
-                owner_map[gi] = np.unique(np.concatenate(parts)).astype(
-                    np.int32) if parts else np.empty(0, np.int32)
-            self._result_cache.on_update(self.version, owner_map)
+            with self.tracer.span("cache.invalidate", cat="update"):
+                edited: Dict[str, list] = {}
+                for e in batch.attr_edits:
+                    edited.setdefault(e.name, []).append(e.vertices)
+                owner_map = {}
+                for gi, grp in enumerate(self.compiled.groups):
+                    keys = self.group_state_keys(gi)
+                    group_attr_touched = grp.attr in edited
+                    if not keys:
+                        # no incremental state to bound the blast radius:
+                        # drop on any change that could affect the group,
+                        # keep on a provably-unrelated attr-only batch
+                        unrelated = (
+                            batch.size == 0 and not group_attr_touched
+                            and not (set(edited)
+                                     & set(filter_attrs(grp.window))))
+                        owner_map[gi] = (
+                            np.empty(0, np.int32) if unrelated else None)
+                        continue
+                    parts = [reports[k]["affected_owners"] for k in keys]
+                    if group_attr_touched:
+                        verts = np.unique(np.concatenate(edited[grp.attr]))
+                        kind = _kind_of(grp.engine)
+                        for term in self._group_terms(gi):
+                            state = self._states.get((term, kind))
+                            if state is not None:
+                                parts.append(containing_owners(
+                                    state.index, g2, term, verts))
+                    owner_map[gi] = np.unique(np.concatenate(parts)).astype(
+                        np.int32) if parts else np.empty(0, np.int32)
+                self._result_cache.on_update(self.version, owner_map)
         return reports
 
     # ------------------------------------------------------------------ #
@@ -1061,8 +1119,10 @@ class SessionView:
             hit = cache.get_group(gi, self.version)
             if hit is not None:
                 return hit
-        out = self.session._exec_group(gi, self.artifacts[gi], values,
-                                       graph=self.graph)
+        with self.session.tracer.span("query.group", cat="query", group=gi,
+                                      version=self.version):
+            out = self.session._exec_group(gi, self.artifacts[gi], values,
+                                           graph=self.graph)
         if values is None and cache is not None:
             cache.put_group(gi, self.version, out)
         return out
@@ -1071,8 +1131,11 @@ class SessionView:
         """[B, n] batch through plan group ``gi`` — one vmapped launch per
         materialized term on device engines (the scheduler's coalesced
         flush path)."""
-        return self.session._exec_group_many(gi, self.artifacts[gi],
-                                             values_batch, graph=self.graph)
+        with self.session.tracer.span("query.group", cat="query", group=gi,
+                                      version=self.version, batched=True):
+            return self.session._exec_group_many(gi, self.artifacts[gi],
+                                                 values_batch,
+                                                 graph=self.graph)
 
     # ------------------------------------------------------------------ #
     def run(self, values=None) -> List[np.ndarray]:

@@ -27,6 +27,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro import obs as _obs
 from repro.core.dbindex import DBIndex, build_dbindex
 from repro.core.graph import Graph
 from repro.core.iindex import IIndex, build_iindex
@@ -194,6 +195,11 @@ def _attr_only_report(engine, batch, g2: Graph, t0: float) -> Optional[Dict]:
     plan_version = getattr(engine, "plan_version", None)
     if plan_version is None:
         plan_version = int(engine.plan.stats.get("version", 0))
+    m = getattr(engine, "_m_maint", None)
+    if m is not None:  # duck-typed engines without obs instruments skip
+        action = ("reorganize" if reorganized
+                  else "refilter" if refiltered else "attr_only")
+        m.labels(engine.index_kind, action).inc()
     return {
         "batch_size": batch.size,
         "attr_edits": int(batch.attr_size),
@@ -231,8 +237,22 @@ class StreamingEngine:
         plan_headroom: float = 0.0,
         compact_garbage: float = 0.5,
         use_device_bfs: Optional[bool] = None,
+        obs=None,
+        tracer=None,
     ):
         assert index_kind in ("dbindex", "iindex")
+        self.obs = obs if obs is not None else _obs.get_registry()
+        self.tracer = tracer if tracer is not None else _obs.get_tracer()
+        self._m_maint = self.obs.counter(
+            "repro_maintenance_total",
+            "maintenance outcomes per applied batch",
+            labels=("kind", "action"))
+        self._m_t_index = self.obs.histogram(
+            "repro_index_update_seconds", "batched index maintenance time",
+            labels=("kind",))
+        self._m_t_plan = self.obs.histogram(
+            "repro_plan_patch_seconds", "device plan patch/rebuild time",
+            labels=("kind",))
         if index_kind == "iindex":
             assert isinstance(window, TopologicalWindow), "I-Index is topological-only"
         if isinstance(window, TopologicalWindow) and method == "emc":
@@ -329,14 +349,17 @@ class StreamingEngine:
         fast = _attr_only_report(self, batch, g2, t0)
         if fast is not None:
             return fast
-        if self.index_kind == "dbindex":
-            idx2, changed = update_dbindex_batch(
-                self.index, g2, self.window, batch,
-                use_device=self.use_device_bfs)
-        else:
-            idx2, changed = update_iindex_batch(self.index, g2, batch)
+        with self.tracer.span("index.update", cat="update",
+                              kind=self.index_kind, size=batch.size):
+            if self.index_kind == "dbindex":
+                idx2, changed = update_dbindex_batch(
+                    self.index, g2, self.window, batch,
+                    use_device=self.use_device_bfs)
+            else:
+                idx2, changed = update_iindex_batch(self.index, g2, batch)
         self.graph, self.index = g2, idx2
         t_index = time.perf_counter() - t0
+        self._m_t_index.labels(self.index_kind).observe(t_index)
         self.batches_applied += 1
         self.batches_since_reorg += 1
         self.edits_applied += batch.size
@@ -352,23 +375,30 @@ class StreamingEngine:
         if self.index_kind == "dbindex" and self.policy.should_reorganize(
             idx2, self._base_links, self._base_blocks, self.batches_since_reorg
         ):
-            self._build()
+            with self.tracer.span("plan.patch", cat="update",
+                                  kind=self.index_kind, action="reorganize"):
+                self._build()
             reorganized = True
         elif self.device:
             from repro.core import engine_jax as ej
 
-            if self.index_kind == "dbindex":
-                self.plan = ej.patch_plan_dbindex(
-                    self.plan, idx2, changed,
-                    compact_garbage=self.compact_garbage,
-                    headroom=self.plan_headroom,
-                )
-            else:
-                self.plan = ej.patch_plan_iindex(self.plan, idx2, changed)
+            with self.tracer.span("plan.patch", cat="update",
+                                  kind=self.index_kind, action="patch"):
+                if self.index_kind == "dbindex":
+                    self.plan = ej.patch_plan_dbindex(
+                        self.plan, idx2, changed,
+                        compact_garbage=self.compact_garbage,
+                        headroom=self.plan_headroom,
+                    )
+                else:
+                    self.plan = ej.patch_plan_iindex(self.plan, idx2, changed)
             self.plan_version += 1
         else:
             self.plan_version += 1  # host "plan" is the index itself
         t_plan = time.perf_counter() - t1
+        self._m_t_plan.labels(self.index_kind).observe(t_plan)
+        self._m_maint.labels(
+            self.index_kind, "reorganize" if reorganized else "patch").inc()
         return {
             "batch_size": batch.size,
             "affected": int(np.asarray(changed).size),

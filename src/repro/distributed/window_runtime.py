@@ -45,6 +45,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs as _obs
 from repro.core.dbindex import DBIndex, build_dbindex
 from repro.core.graph import Graph
 from repro.core.streaming import StalenessPolicy
@@ -429,6 +430,9 @@ def query_sharded_multi(splan: ShardedDBPlan, values, aggs: Sequence[str]):
 
     values = jnp.asarray(values, jnp.float32)
     sharded, cfg = _splan_call_args(splan)
+    _obs.get_registry().counter(
+        "repro_shard_launches_total",
+        "per-device launches of the sharded fused query").inc(splan.ndev)
     chans = _get_sharded_query()(
         sharded, (splan.block_sizes,), values,
         mesh=splan.mesh, axes=splan.axes, aggs=tuple(aggs), cfg=cfg,
@@ -452,6 +456,9 @@ def query_sharded_many(splan: ShardedDBPlan, values_batch,
     vb = jnp.asarray(values_batch, jnp.float32)
     assert vb.ndim == 2, "values_batch must be [B, n]"
     sharded, cfg = _splan_call_args(splan)
+    _obs.get_registry().counter(
+        "repro_shard_launches_total",
+        "per-device launches of the sharded fused query").inc(splan.ndev)
     chans = _get_sharded_query()(
         sharded, (splan.block_sizes,), vb.T,
         mesh=splan.mesh, axes=splan.axes, aggs=tuple(aggs), cfg=cfg,
@@ -527,6 +534,9 @@ def patch_sharded_plan(
         base = plan_from_dbindex(index, splan.tm, ts, block_capacity=cap,
                                  headroom=splan.headroom)
         stats["rebuilds"] = stats.get("rebuilds", 0) + 1
+        _obs.get_registry().counter(
+            "repro_plan_rebuilds_total",
+            "sharded plan full rebuilds (recompile-sized events)").inc()
         stats["last_patch_groups"] = -1
         stats["last_compaction"] = False
         out = build_sharded_plan(base, splan.mesh, splan.axes,
@@ -684,6 +694,9 @@ def patch_sharded_plan(
         })
 
     patch_bytes = int(per_shard.sum())
+    _obs.get_registry().counter(
+        "repro_patch_bytes_total",
+        "bytes of tile-group patches shipped to plan shards").inc(patch_bytes)
     stats.update(
         last_patch_bytes=patch_bytes,
         last_patch_groups=groups_patched,
@@ -876,6 +889,8 @@ class ShardedStreamState:
         compact_garbage: float = 0.25,
         use_device_bfs: Optional[bool] = None,
         capture_wire: bool = False,
+        obs=None,
+        tracer=None,
     ):
         from repro.core.windows import TopologicalWindow
 
@@ -897,6 +912,19 @@ class ShardedStreamState:
         self.batches_applied = 0
         self.reorg_count = 0
         self.batches_since_reorg = 0
+        self.obs = obs if obs is not None else _obs.get_registry()
+        self.tracer = tracer if tracer is not None else _obs.get_tracer()
+        # same families as StreamingEngine so single-host and sharded
+        # maintenance land in one place, split by the kind/action labels
+        self._m_maint = self.obs.counter(
+            "repro_maintenance_total", "index maintenance operations",
+            labels=("kind", "action"))
+        self._m_t_index = self.obs.histogram(
+            "repro_index_update_seconds", "incremental index update latency",
+            labels=("kind",))
+        self._m_t_plan = self.obs.histogram(
+            "repro_plan_patch_seconds", "device plan patch latency",
+            labels=("kind",))
         self._build(initial=True)
 
     def _build(self, initial: bool = False) -> None:
@@ -976,14 +1004,18 @@ class ShardedStreamState:
                 plan_rebuilt=fast["reorganized"],
             )
             return fast
-        owners, per_shard_owners = sharded_affected_owners(
-            g2, self.window, batch, self.plan.ndev,
-            use_device=self.use_device_bfs,
-        )
-        idx2, changed = update_dbindex_batch(self.index, g2, self.window,
-                                             batch, owners=owners)
+        with self.tracer.span("index.update", cat="update",
+                              kind=self.index_kind, size=batch.size,
+                              sharded=True):
+            owners, per_shard_owners = sharded_affected_owners(
+                g2, self.window, batch, self.plan.ndev,
+                use_device=self.use_device_bfs,
+            )
+            idx2, changed = update_dbindex_batch(self.index, g2, self.window,
+                                                 batch, owners=owners)
         self.graph, self.index = g2, idx2
         t_index = time.perf_counter() - t0
+        self._m_t_index.labels(self.index_kind).observe(t_index)
         self.batches_applied += 1
         self.batches_since_reorg += 1
 
@@ -996,13 +1028,21 @@ class ShardedStreamState:
         if self.policy.should_reorganize(
             idx2, self._base_links, self._base_blocks, self.batches_since_reorg
         ):
-            self._build()
+            with self.tracer.span("plan.patch", cat="update",
+                                  kind=self.index_kind, action="reorganize"):
+                self._build()
             reorganized = True
         else:
-            self.plan = patch_sharded_plan(self.plan, idx2, changed,
-                                           compact_garbage=self.compact_garbage,
-                                           wire=self.wire_log)
+            with self.tracer.span("plan.patch", cat="update",
+                                  kind=self.index_kind, action="patch"):
+                self.plan = patch_sharded_plan(
+                    self.plan, idx2, changed,
+                    compact_garbage=self.compact_garbage,
+                    wire=self.wire_log)
         t_plan = time.perf_counter() - t1
+        self._m_t_plan.labels(self.index_kind).observe(t_plan)
+        self._m_maint.labels(
+            self.index_kind, "reorganize" if reorganized else "patch").inc()
         # the patcher itself may have rebuilt (updater full rebuild, capacity
         # or ELL-width overflow) — that is a full-plan re-upload too, and
         # consumers asserting patch < full must see it flagged
@@ -1086,6 +1126,7 @@ class ShardedSession(Session):
             plan_headroom=cfg["plan_headroom"],
             compact_garbage=0.25 if cg is None else cg,
             use_device_bfs=cfg["use_device_bfs"],
+            obs=self.obs, tracer=self.tracer,
         )
 
     def _group_artifacts(self, gi):

@@ -31,6 +31,7 @@ from __future__ import annotations
 import os
 from typing import Dict, Optional
 
+from repro import obs as _obs
 from repro.core.api import Session
 from repro.serve.wal import read_wal_records
 from repro.serve.window_service import WindowService
@@ -48,16 +49,27 @@ class ReadReplica:
     """
 
     def __init__(self, graph, specs, wal_path, *, bucket: int = 8,
-                 use_cache: bool = True, **session_kw):
+                 use_cache: bool = True, obs=None, **session_kw):
         self.path = os.fspath(wal_path)
+        self.obs = obs if obs is not None else _obs.get_registry()
         self.session = Session(graph, specs, **session_kw)
         #: serving front end pinned behind the apply head (auto_flip off:
         #: publishing is the replica's explicit flip decision)
         self.service = WindowService(self.session, bucket=bucket,
-                                     auto_flip=False, use_cache=use_cache)
+                                     auto_flip=False, use_cache=use_cache,
+                                     obs=self.obs)
         self._offset = 0  # byte offset of the next unread WAL record
         self.records_applied = 0
         self.polls = 0
+        self._m_polls = self.obs.counter(
+            "repro_replica_polls_total", "WAL tail polls")
+        self._m_records = self.obs.counter(
+            "repro_replica_records_total", "WAL records applied")
+        self._g_lag_bytes = self.obs.gauge(
+            "repro_replica_lag_bytes", "unapplied WAL bytes at last check")
+        self._g_lag_versions = self.obs.gauge(
+            "repro_replica_lag_versions",
+            "applied-but-unpublished versions at last check")
 
     # ------------------------------------------------------------------ #
     def poll(self, upto_version: Optional[int] = None) -> int:
@@ -71,6 +83,7 @@ class ReadReplica:
         """
         records, end = read_wal_records(self.path, self._offset)
         self.polls += 1
+        self._m_polls.inc()
         if not records:
             self._offset = max(self._offset, end)
             return 0
@@ -90,6 +103,7 @@ class ReadReplica:
             # the first unapplied record
             self._offset = _offset_after(self.path, self._offset, stop_at)
         self.records_applied += applied
+        self._m_records.inc(applied)
         return applied
 
     def flip(self) -> int:
@@ -122,10 +136,13 @@ class ReadReplica:
             size = os.path.getsize(self.path)
         except OSError:
             size = 0
+        behind = max(size - self._offset, 0)
+        unpublished = self.session.version - self.service.version
+        self._g_lag_bytes.set(behind)
+        self._g_lag_versions.set(unpublished)
         return {
-            "behind_bytes": max(size - self._offset, 0),
-            "unpublished_versions": self.session.version
-            - self.service.version,
+            "behind_bytes": behind,
+            "unpublished_versions": unpublished,
             "published_version": self.service.version,
             "head_version": self.session.version,
         }

@@ -37,6 +37,7 @@ import time
 import zlib
 from typing import Dict, Iterator, List, Optional, Tuple
 
+from repro import obs as _obs
 from repro.core.updates import (
     UpdateBatch,
     decode_update_batch,
@@ -57,20 +58,38 @@ class WriteAheadLog:
     """
 
     def __init__(self, path, fsync_every: int = 8,
-                 fsync_interval_s: float = 0.05):
+                 fsync_interval_s: float = 0.05, obs=None):
         self.path = os.fspath(path)
         assert fsync_every >= 1
         self.fsync_every = int(fsync_every)
         self.fsync_interval_s = float(fsync_interval_s)
+        obs = obs if obs is not None else _obs.get_registry()
+        self._m_appends = obs.counter(
+            "repro_wal_appends_total", "records appended")
+        self._m_bytes = obs.counter(
+            "repro_wal_bytes_total", "record bytes written")
+        self._m_fsync = obs.histogram(
+            "repro_wal_fsync_seconds", "fsync latency (group commit)")
+        self._m_commit = obs.histogram(
+            "repro_wal_commit_records", "appends per group commit",
+            buckets=_obs.DEFAULT_SIZE_BUCKETS)
+        self._m_torn = obs.counter(
+            "repro_wal_torn_truncations_total",
+            "torn tails truncated at resume")
         existing = os.path.exists(self.path) and os.path.getsize(self.path) > 0
         self.last_version: Optional[int] = None
+        self.resumed_records = 0
+        self.torn_truncations = 0
         if existing:  # resume: scan the valid prefix, truncate a torn tail
             records, end = read_wal_records(self.path)
             if records:
                 self.last_version = records[-1][0]
+            self.resumed_records = len(records)
             if end < os.path.getsize(self.path):
                 with open(self.path, "r+b") as f:
                     f.truncate(end)
+                self.torn_truncations = 1
+                self._m_torn.inc()
         self._f = open(self.path, "ab")
         if not existing:
             self._f.write(_FILE_MAGIC)
@@ -82,6 +101,7 @@ class WriteAheadLog:
         self.appends = 0
         self.fsyncs = 0
         self.bytes_written = 0
+        self.last_fsync_s = 0.0  # duration of the most recent fsync
 
     # ------------------------------------------------------------------ #
     def append(self, batch: UpdateBatch, version: Optional[int] = None,
@@ -101,6 +121,8 @@ class WriteAheadLog:
         self._f.flush()  # through to the OS: ordered before the apply
         self.appends += 1
         self.bytes_written += len(rec)
+        self._m_appends.inc()
+        self._m_bytes.inc(len(rec))
         self._unsynced += 1
         self.last_version = int(version)
         now = time.perf_counter()
@@ -113,7 +135,11 @@ class WriteAheadLog:
     def sync(self) -> None:
         """Force the batched fsync (group commit boundary)."""
         if self._unsynced:
+            t0 = time.perf_counter()
             os.fsync(self._f.fileno())
+            self.last_fsync_s = time.perf_counter() - t0
+            self._m_fsync.observe(self.last_fsync_s)
+            self._m_commit.observe(self._unsynced)
             self.fsyncs += 1
             self._unsynced = 0
         self._last_sync = time.perf_counter()
@@ -144,6 +170,11 @@ class WriteAheadLog:
             "bytes_written": self.bytes_written,
             "last_version": self.last_version,
             "unsynced": self._unsynced,
+            "records": self.appends,
+            "bytes": self.bytes_written,
+            "resumed_records": self.resumed_records,
+            "torn_truncations": self.torn_truncations,
+            "last_fsync_s": self.last_fsync_s,
         }
 
 

@@ -56,7 +56,9 @@ from typing import Dict, List, Optional, Union
 
 import numpy as np
 
-from repro.core.api import QuerySpec, Session
+from repro import obs as _obs
+from repro.core.api import QuerySpec, Session, record_recompiles
+from repro.obs.slo import SLOTracker
 
 
 class LoadShedError(RuntimeError):
@@ -121,6 +123,12 @@ class Ticket:
     deadline_s: Optional[float] = None
     _event: threading.Event = dataclasses.field(
         default_factory=threading.Event, repr=False, compare=False)
+    _span: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def class_name(self) -> str:
+        return self.request_class.name if self.request_class else "default"
 
     @property
     def done(self) -> bool:
@@ -168,13 +176,18 @@ class AffectedOwnerCache:
     write head (``auto_flip=False``) without ever serving stale hits.
     """
 
-    def __init__(self):
+    def __init__(self, obs=None):
         self.version = 0
         self._entries: Dict[int, Dict] = {}
         self.hits = 0
         self.misses = 0
         self.invalidated = 0  # per-vertex invalidations applied
         self.full_drops = 0  # whole entries dropped (stateless groups)
+        obs = obs if obs is not None else _obs.get_registry()
+        self._m_events = obs.counter(
+            "repro_cache_events_total",
+            "AffectedOwnerCache group-read/invalidation events",
+            labels=("event",))
 
     def bind(self, session) -> None:
         """Called by :meth:`Session.attach_cache`."""
@@ -186,8 +199,10 @@ class AffectedOwnerCache:
         e = self._entries.get(gi)
         if version != self.version or e is None or not e["valid_all"]:
             self.misses += 1
+            self._m_events.labels("miss").inc()
             return None
         self.hits += 1
+        self._m_events.labels("hit").inc()
         return {a: v.copy() for a, v in e["vectors"].items()}
 
     def get_point(self, gi: int, agg: str, vertex: int, version: int):
@@ -236,11 +251,13 @@ class AffectedOwnerCache:
             if owners is None:
                 del self._entries[gi]
                 self.full_drops += 1
+                self._m_events.labels("drop").inc()
                 continue
             owners = np.asarray(owners, np.int64)
             e["valid"][owners] = False
             e["valid_all"] = bool(e["valid"].all())
             self.invalidated += int(owners.size)
+            self._m_events.labels("invalidate").inc(int(owners.size))
 
     # ------------------------------------------------------------------ #
     def valid_fraction(self, gi: int) -> float:
@@ -288,12 +305,16 @@ class WindowService:
     """
 
     def __init__(self, session: Session, bucket: int = 8,
-                 auto_flip: bool = True, use_cache: bool = True):
+                 auto_flip: bool = True, use_cache: bool = True,
+                 obs=None, tracer=None, now_fn=None):
         self.session = session
         self.bucket = int(bucket)
         assert self.bucket >= 1
         self.auto_flip = auto_flip
-        self.cache = AffectedOwnerCache() if use_cache else None
+        self.obs = obs if obs is not None else _obs.get_registry()
+        self.tracer = tracer if tracer is not None else _obs.get_tracer()
+        self.now = now_fn if now_fn is not None else time.perf_counter
+        self.cache = AffectedOwnerCache(obs=self.obs) if use_cache else None
         if self.cache is not None:
             session.attach_cache(self.cache)
         self._active = session.snapshot()
@@ -302,7 +323,7 @@ class WindowService:
         self._flush_lock = threading.Lock()  # serializes _serve bodies
         self._rid = 0
         self._spec_index = {s: i for i, s in enumerate(session.compiled.specs)}
-        # telemetry
+        # telemetry (attribute counters stay; obs mirrors them with labels)
         self.flushes = 0
         self.batched_launches = 0
         self.padded_rows = 0
@@ -310,6 +331,25 @@ class WindowService:
         self.failed = 0
         self.point_hits = 0
         self.point_misses = 0
+        self.slo = SLOTracker(self.obs)
+        self._m_flushes = self.obs.counter(
+            "repro_flushes_total", "queue flushes by trigger",
+            labels=("reason",))
+        self._m_launches = self.obs.counter(
+            "repro_batched_launches_total",
+            "padded run_many device launches")
+        self._m_padded = self.obs.counter(
+            "repro_padded_rows_total", "pad rows in batched launches")
+        self._m_point = self.obs.counter(
+            "repro_point_reads_total", "point reads through the result cache",
+            labels=("event",))
+        self._m_flush_size = self.obs.histogram(
+            "repro_flush_size_records", "tickets served per flush",
+            buckets=_obs.DEFAULT_SIZE_BUCKETS)
+        self._m_updates = self.obs.counter(
+            "repro_service_updates_total", "update batches streamed in")
+        self._m_flips = self.obs.counter(
+            "repro_flips_total", "snapshot publishes to readers")
 
     # ------------------------------------------------------------------ #
     @property
@@ -363,17 +403,23 @@ class WindowService:
                     f"per-request values must have shape ({n},), "
                     f"got {values.shape}"
                 )
-        now = time.perf_counter()
+        now = self.now()
         deadline = (now + request_class.max_delay_ms / 1e3
                     if request_class is not None else None)
         with self._lock:
             rid = self._rid
             self._rid += 1
-        return Ticket(
+        t = Ticket(
             rid=rid, spec_index=si, vertex=vertex, values=values,
             submitted_s=now, request_class=request_class,
             deadline_s=deadline,
         )
+        # detached span: the ticket lifecycle crosses threads (submitted
+        # here, finished by whichever flush serves it)
+        t._span = self.tracer.start_span(
+            "request", cat="ticket", rid=rid,
+            cls=t.class_name, point=vertex is not None)
+        return t
 
     def submit(self, spec, vertex: Optional[int] = None,
                values=None) -> Ticket:
@@ -406,8 +452,10 @@ class WindowService:
             hit = self.cache.get_point(gi, agg, vertex, view.version)
             if hit is not None:
                 self.point_hits += 1
+                self._m_point.labels("hit").inc()
                 return hit, True
             self.point_misses += 1
+            self._m_point.labels("miss").inc()
         # miss (or full read): one fused launch refreshes the whole group
         # vector — in the cache (cache-aware run_group) and the flush memo
         out = memo.get(gi)
@@ -431,7 +479,7 @@ class WindowService:
             pending, self._pending = self._pending, []
         return pending
 
-    def flush(self) -> List[Ticket]:
+    def flush(self, reason: str = "manual") -> List[Ticket]:
         """Serve every pending request against the active snapshot.
 
         Current-state requests (``values=None``) ride the affected-owner
@@ -440,13 +488,23 @@ class WindowService:
         ``run_many`` launches, so requests for *different* aggregates of
         one (window, attr) group share a launch (they are channels of the
         same fused plan) and the [bucket, n] executable never retraces.
+
+        ``reason`` labels the flush trigger in the metrics: "manual" here,
+        "fill"/"deadline" when the continuous-batching front end decides.
         """
         with self._flush_lock:
-            return self._serve(self._take_pending())
+            return self._serve(self._take_pending(), reason)
 
-    def _serve(self, pending: List[Ticket]) -> List[Ticket]:
+    def _serve(self, pending: List[Ticket],
+               reason: str = "manual") -> List[Ticket]:
         if not pending:
             return pending
+        with self.tracer.span("flush", cat="serve", reason=reason,
+                              pending=len(pending)):
+            return self._serve_inner(pending, reason)
+
+    def _serve_inner(self, pending: List[Ticket],
+                     reason: str) -> List[Ticket]:
         view = self._active
         groups = self.session.compiled.groups
         slots = self.session.compiled.spec_slots
@@ -483,7 +541,9 @@ class WindowService:
                 for row, t in enumerate(chunk):
                     vb[row] = t.values
                 try:
-                    out = view.run_group_many(gi, vb)
+                    with self.tracer.span("launch", cat="serve", group=gi,
+                                          rows=rows_n, filled=len(chunk)):
+                        out = view.run_group_many(gi, vb)
                 except BaseException as e:
                     # fail exactly this chunk's tickets; other chunks (and
                     # other groups) still get served, and the queue was
@@ -493,22 +553,34 @@ class WindowService:
                     continue
                 self.batched_launches += 1
                 self.padded_rows += rows_n - len(chunk)
+                self._m_launches.inc()
+                self._m_padded.inc(rows_n - len(chunk))
                 for row, t in enumerate(chunk):
                     _, ai = slots[t.spec_index]
                     vec = out[grp.aggs[ai]][row]
                     t.result = (vec[t.vertex] if t.vertex is not None
                                 else np.asarray(vec))
                     t.version = view.version
-        now = time.perf_counter()
+        now = self.now()
         ok = 0
         for t in pending:
             t.latency_s = now - t.submitted_s
             if t.error is None:
                 ok += 1
+            target = (t.request_class.max_delay_ms / 1e3
+                      if t.request_class is not None else None)
+            self.slo.observe(
+                t.class_name, t.latency_s, target,
+                "ok" if t.error is None else "error")
+            if t._span is not None:
+                t._span.set(version=t.version, cache_hit=t.cache_hit,
+                            ok=t.error is None).finish()
             t._finish()
         self.flushes += 1
         self.served += ok
         self.failed += len(pending) - ok
+        self._m_flushes.labels(reason).inc()
+        self._m_flush_size.observe(len(pending))
         return pending
 
     # ------------------------------------------------------------------ #
@@ -521,9 +593,11 @@ class WindowService:
         a reader still pinned behind the head simply bypasses the cache
         rather than ever seeing version-v+1 data at version v.
         """
-        reports = self.session.update(batch)
-        if self.auto_flip:
-            self.flip()
+        with self.tracer.span("service.update", cat="update"):
+            reports = self.session.update(batch)
+            if self.auto_flip:
+                self.flip()
+        self._m_updates.inc()
         return reports
 
     def flip(self) -> int:
@@ -531,6 +605,7 @@ class WindowService:
         swap of an immutable snapshot (no reader ever holds a half-patched
         plan — it holds either the old view or the new one)."""
         self._active = self.session.snapshot()
+        self._m_flips.inc()
         return self._active.version
 
     # ------------------------------------------------------------------ #
@@ -552,6 +627,9 @@ class WindowService:
         }
         if self.cache is not None:
             out["cache"] = self.cache.stats
+        out["recompiles"] = record_recompiles(self.obs)
+        if self.obs.enabled:
+            out["slo"] = self.slo.report()
         return out
 
 
@@ -596,9 +674,10 @@ class AsyncWindowService(WindowService):
                  default_class: str = "interactive",
                  max_pending: int = 256,
                  wal: Union[None, str, "object"] = None,
-                 policy=None):
+                 policy=None, obs=None, tracer=None, now_fn=None):
         super().__init__(session, bucket=bucket, auto_flip=auto_flip,
-                         use_cache=use_cache)
+                         use_cache=use_cache, obs=obs, tracer=tracer,
+                         now_fn=now_fn)
         self.classes = dict(DEFAULT_REQUEST_CLASSES)
         if classes:
             self.classes.update(classes)
@@ -608,7 +687,7 @@ class AsyncWindowService(WindowService):
         if wal is not None and not hasattr(wal, "append"):
             from repro.serve.wal import WriteAheadLog
 
-            wal = WriteAheadLog(wal)
+            wal = WriteAheadLog(wal, obs=self.obs)
         self.wal = wal
         if policy is None:
             from repro.core.streaming import StalenessPolicy
@@ -625,6 +704,15 @@ class AsyncWindowService(WindowService):
         self.deadline_flushes = 0
         self.fill_flushes = 0
         self.backpressure_waits = 0
+        self._m_shed = self.obs.counter(
+            "repro_shed_total", "tickets rejected/evicted by admission")
+        self._m_backpressure = self.obs.counter(
+            "repro_backpressure_waits_total",
+            "submit waits for the flusher to drain")
+        self._g_pressure = self.obs.gauge(
+            "repro_service_pressure", "staleness pressure in [0, 1]")
+        self._g_pending = self.obs.gauge(
+            "repro_pending_requests", "queue depth after last submit/flush")
 
     # --------------------------- lifecycle ---------------------------- #
     @property
@@ -658,7 +746,7 @@ class AsyncWindowService(WindowService):
         else:
             for t in self._take_pending():
                 t.error = LoadShedError("service stopped without drain")
-                t._finish()
+                self._drop_ticket(t)
                 self.failed += 1
         if self.wal is not None:
             self.wal.sync()
@@ -690,7 +778,9 @@ class AsyncWindowService(WindowService):
                 / max(pol.max_block_ratio - 1.0, 1e-9),
                 s["garbage_ratio"] / max(pol.max_garbage_ratio, 1e-9),
             )
-        return float(min(max(p, 0.0), 1.0))
+        p = float(min(max(p, 0.0), 1.0))
+        self._g_pressure.set(p)
+        return p
 
     def effective_max_pending(self) -> int:
         """Admission window: ``max_pending`` scaled down by staleness
@@ -714,6 +804,19 @@ class AsyncWindowService(WindowService):
         if not candidates:
             return None
         return min(candidates, key=lambda t: (t.priority, -t.rid))
+
+    def _drop_ticket(self, t: Ticket) -> None:
+        """Account one admission-control casualty (``t.error`` already
+        holds the :class:`LoadShedError`) and release its waiter."""
+        self._m_shed.inc()
+        self.slo.observe(
+            t.class_name, self.now() - t.submitted_s,
+            (t.request_class.max_delay_ms / 1e3
+             if t.request_class is not None else None),
+            "shed")
+        if t._span is not None:
+            t._span.set(ok=False, shed=True).finish()
+        t._finish()
 
     def submit(self, spec, vertex: Optional[int] = None, values=None,
                request_class: Union[None, str, RequestClass] = None
@@ -739,14 +842,14 @@ class AsyncWindowService(WindowService):
                         f"request shed at admission (queue "
                         f"{len(self._pending)}, pressure {self.pressure():.2f})"
                     )
-                    t._finish()
+                    self._drop_ticket(t)
                     raise t.error
                 if victim is not None:
                     self._pending.remove(victim)
                     victim.error = LoadShedError(
                         "evicted by a higher-priority request under overload"
                     )
-                    victim._finish()
+                    self._drop_ticket(victim)
                     self.shed += 1
                     self.failed += 1
                     continue
@@ -756,19 +859,62 @@ class AsyncWindowService(WindowService):
                 if not self.running:
                     break
                 self.backpressure_waits += 1
+                self._m_backpressure.inc()
                 self._cv.wait(timeout=0.01)
             self._pending.append(t)
+            self._g_pending.set(len(self._pending))
             self._cv.notify_all()
-        if not self.running and len(self._pending) >= self.bucket:
-            self.flush()
+        if not self.running:
+            # no flusher thread: enforce fill/deadline synchronously so
+            # the scheduling contract (and its counters) hold either way
+            self.flush_if_due()
         return t
 
     # --------------------------- flushing ----------------------------- #
-    def flush(self) -> List[Ticket]:
-        served = super().flush()
+    def flush(self, reason: str = "manual") -> List[Ticket]:
+        served = super().flush(reason)
         with self._cv:
+            self._g_pending.set(len(self._pending))
             self._cv.notify_all()  # release backpressure waiters
         return served
+
+    def _due_reason(self):
+        """Why the queue should launch NOW — ``("fill" | "deadline", dl)``
+        — or ``(None, dl)`` with the earliest deadline to sleep toward
+        (``dl`` None when the queue is empty).  Caller holds the lock.
+
+        This is the single scheduling decision, shared by the background
+        flusher and the synchronous :meth:`flush_if_due` path, and it runs
+        on the injected clock — tests drive it deterministically with a
+        fake ``now_fn``.
+        """
+        if not self._pending:
+            return None, None
+        if len(self._pending) >= self.bucket:
+            return "fill", None
+        now = self.now()
+        dl = min(t.deadline_s if t.deadline_s is not None else now + 0.05
+                 for t in self._pending)
+        if now >= dl:
+            return "deadline", dl
+        return None, dl
+
+    def flush_if_due(self) -> List[Ticket]:
+        """Synchronously flush iff the scheduling contract says so
+        (bucket full, or the earliest deadline has passed on the injected
+        clock).  Returns the served tickets ([] when not due)."""
+        with self._cv:
+            reason, _ = self._due_reason()
+        if reason is None:
+            return []
+        return self._flush_reason(reason)
+
+    def _flush_reason(self, reason: str) -> List[Ticket]:
+        if reason == "fill":
+            self.fill_flushes += 1
+        else:
+            self.deadline_flushes += 1
+        return self.flush(reason)
 
     def _flusher_loop(self) -> None:
         while True:
@@ -777,25 +923,15 @@ class AsyncWindowService(WindowService):
                 while reason is None:
                     if self._stopping:
                         return  # stop() drains (or fails) the leftovers
-                    if not self._pending:
+                    reason, dl = self._due_reason()
+                    if reason is not None:
+                        break
+                    if dl is None:
                         self._cv.wait(timeout=0.05)
                         continue
-                    if len(self._pending) >= self.bucket:
-                        reason = "fill"
-                        break
-                    now = time.perf_counter()
-                    dl = min(t.deadline_s or (now + 0.05)
-                             for t in self._pending)
-                    if now >= dl:
-                        reason = "deadline"
-                        break
-                    self._cv.wait(timeout=max(dl - now, 1e-4))
-            if reason == "fill":
-                self.fill_flushes += 1
-            else:
-                self.deadline_flushes += 1
+                    self._cv.wait(timeout=max(dl - self.now(), 1e-4))
             try:
-                self.flush()
+                self._flush_reason(reason)
             except Exception:
                 # _serve records per-ticket errors; anything escaping here
                 # is a bug in the scheduler itself — keep the loop alive,
@@ -809,7 +945,9 @@ class AsyncWindowService(WindowService):
         session always reproduces (a prefix of) the served states."""
         with self._update_lock:
             if self.wal is not None:
-                self.wal.append(batch, version=self.session.version + 1)
+                with self.tracer.span("wal.append", cat="update",
+                                      version=self.session.version + 1):
+                    self.wal.append(batch, version=self.session.version + 1)
             return super().update(batch)
 
     # ------------------------------------------------------------------ #

@@ -348,6 +348,85 @@ def test_unstarted_service_degrades_to_synchronous():
     assert t0.get(timeout=0) == oracle[0] and t1.get(timeout=0) == oracle[1]
 
 
+# ---------------------------------------------------------------------- #
+#  Deterministic deadline scheduling (ISSUE 7: injected clock)
+# ---------------------------------------------------------------------- #
+class FakeClock:
+    """A manually advanced monotonic clock injected via ``now_fn`` — the
+    scheduling decision (:meth:`AsyncWindowService._due_reason`) runs on
+    it, so deadline behavior is asserted exactly, no sleeps or jitter."""
+
+    def __init__(self, t=100.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def test_deadline_fires_exactly_on_fake_clock():
+    """Sub-bucket queue: not due one tick before the class deadline, due
+    exactly at it — and the trigger is recorded as a deadline flush."""
+    g, specs, sess = make_session(seed=39)
+    clk = FakeClock()
+    svc = AsyncWindowService(sess, bucket=64, now_fn=clk)
+    # unstarted service: submit runs flush_if_due synchronously, which on
+    # the frozen clock is "not due" — the ticket must still be pending
+    t = svc.submit(0, vertex=3)  # point class: 2 ms deadline
+    assert not t.done and len(svc._pending) == 1
+    reason, dl = svc._due_reason()
+    assert reason is None and dl == pytest.approx(clk.t + 0.002)
+
+    clk.advance(0.002 - 1e-6)
+    assert svc.flush_if_due() == [] and not t.done
+    assert svc.deadline_flushes == 0
+
+    clk.advance(1e-6)  # exactly at the deadline: now >= dl
+    served = svc.flush_if_due()
+    assert [s.rid for s in served] == [t.rid]
+    assert t.done and t.error is None
+    assert svc.deadline_flushes == 1 and svc.fill_flushes == 0
+    # latency is measured on the same injected clock
+    assert t.latency_s == pytest.approx(0.002)
+
+
+def test_earliest_deadline_wins_across_classes():
+    g, specs, sess = make_session(seed=43)
+    clk = FakeClock()
+    svc = AsyncWindowService(sess, bucket=64, classes={"never": NEVER},
+                             now_fn=clk)
+    svc.submit(0, request_class="never")     # +600 s deadline
+    reason, dl = svc._due_reason()
+    assert reason is None and dl == pytest.approx(clk.t + 600.0)
+    svc.submit(0, vertex=1)                  # point: +2 ms — new earliest
+    reason, dl = svc._due_reason()
+    assert reason is None and dl == pytest.approx(clk.t + 0.002)
+    clk.advance(0.002)
+    served = svc.flush_if_due()
+    # a deadline flush serves the WHOLE queue, not just the due ticket
+    assert len(served) == 2 and svc.deadline_flushes == 1
+
+
+def test_fill_beats_deadline_on_fake_clock():
+    """At the fill edge the trigger is 'fill' even when deadlines have
+    also expired — fill is checked first (it never needs the clock)."""
+    g, specs, sess = make_session(seed=45)
+    clk = FakeClock()
+    svc = AsyncWindowService(sess, bucket=2, now_fn=clk)
+    svc._pending.append(svc._make_ticket(0, None, None,
+                                         svc.classes["interactive"]))
+    clk.advance(60.0)  # way past every deadline
+    svc._pending.append(svc._make_ticket(0, None, None,
+                                         svc.classes["interactive"]))
+    reason, _ = svc._due_reason()
+    assert reason == "fill"
+    assert len(svc.flush_if_due()) == 2
+    assert svc.fill_flushes == 1 and svc.deadline_flushes == 0
+    assert svc._due_reason() == (None, None)  # empty queue: nothing due
+
+
 def test_flusher_survives_flush_exception(monkeypatch):
     """An injected failure inside a background flush must not kill the
     flusher thread — the next request is still served."""

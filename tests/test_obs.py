@@ -1,0 +1,264 @@
+"""Observability subsystem (ISSUE 7): metrics registry thread safety,
+histogram bucket semantics, Null compile-out guarantees, span nesting and
+Chrome-trace export, and the differential guarantee that enabling obs
+never changes served results.
+"""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import (
+    DEFAULT_LATENCY_BUCKETS_S,
+    Histogram,
+    MetricsRegistry,
+    NullRegistry,
+    NullTracer,
+    Tracer,
+)
+from repro.obs.slo import SLOTracker
+
+
+@pytest.fixture(autouse=True)
+def _obs_off():
+    """Every test starts and ends with the global obs layer disabled."""
+    obs.disable()
+    yield
+    obs.disable()
+
+
+# ---------------------------------------------------------------------- #
+#  Registry + instruments
+# ---------------------------------------------------------------------- #
+def test_counter_concurrent_writers_lose_nothing():
+    """Per-thread shard cells: N writers x M incs must merge to exactly
+    N*M — no lost updates, no locks on the write path."""
+    reg = MetricsRegistry()
+    c = reg.counter("repro_test_total", "t")
+    h = reg.histogram("repro_test_seconds", "t", buckets=(0.1, 1.0))
+    lab = reg.counter("repro_test_labeled_total", "t", labels=("who",))
+    n_threads, n_incs = 8, 10_000
+    start = threading.Barrier(n_threads)
+
+    def work(i):
+        mine = lab.labels(f"w{i % 2}")
+        start.wait()
+        for _ in range(n_incs):
+            c.inc()
+            h.observe(0.05)
+            mine.inc(2)
+
+    threads = [threading.Thread(target=work, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == n_threads * n_incs
+    assert h.count == n_threads * n_incs
+    per_label = n_threads // 2 * n_incs * 2
+    assert lab.labels("w0").value == per_label
+    assert lab.labels("w1").value == per_label
+
+
+def test_registry_declarations_idempotent_and_clash_checked():
+    reg = MetricsRegistry()
+    a = reg.counter("repro_x_total", "first")
+    b = reg.counter("repro_x_total", "redeclared")
+    assert a is b  # same family object: instruments are process-wide names
+    with pytest.raises(ValueError):
+        reg.gauge("repro_x_total")  # kind clash
+    with pytest.raises(ValueError):
+        reg.counter("repro_x_total", labels=("cls",))  # labelnames clash
+
+
+def test_gauge_set_inc_dec():
+    reg = MetricsRegistry()
+    g = reg.gauge("repro_depth")
+    g.set(5)
+    g.inc(2)
+    g.dec()
+    assert g.value == 6
+
+
+def test_histogram_bucket_edges_and_quantiles():
+    """Bucket bounds are inclusive upper edges; quantiles interpolate
+    linearly inside the landing bucket and clamp at overflow."""
+    h = Histogram(buckets=(1.0, 2.0, 4.0))
+    # bisect_left on inclusive upper bounds: 1.0 lands IN the first bucket
+    for x in (0.5, 1.0):
+        h.observe(x)
+    h.observe(3.0)   # third bucket (2, 4]
+    h.observe(100.0)  # overflow
+    counts, total, n = h.merged()
+    assert counts == [2, 0, 1, 1]
+    assert n == 4 and total == pytest.approx(104.5)
+    # overflow clamps to the last finite bound
+    assert h.quantile(1.0) == 4.0
+    # q=0.5 -> target 2.0 falls exactly at the end of bucket 0: edge-exact
+    assert h.quantile(0.5) == pytest.approx(1.0)
+    empty = Histogram(buckets=(1.0,))
+    assert empty.quantile(0.99) == 0.0
+    with pytest.raises(AssertionError):
+        Histogram(buckets=(2.0, 1.0))  # must be strictly increasing
+
+
+def test_snapshot_and_prometheus_shapes():
+    reg = MetricsRegistry()
+    reg.counter("repro_reqs_total", "requests", labels=("cls",)
+                ).labels("fast").inc(3)
+    reg.gauge("repro_lag").set(7)
+    reg.histogram("repro_lat_seconds", "latency",
+                  buckets=(0.1, 1.0)).observe(0.05)
+    snap = reg.snapshot()
+    assert snap["repro_reqs_total"]["values"][0] == {
+        "labels": {"cls": "fast"}, "value": 3.0}
+    assert snap["repro_lag"]["values"][0]["value"] == 7.0
+    hist = snap["repro_lat_seconds"]["values"][0]
+    assert hist["count"] == 1 and "p99" in hist
+    text = reg.prometheus()
+    assert '# TYPE repro_reqs_total counter' in text
+    assert 'repro_reqs_total{cls="fast"} 3' in text
+    # prometheus histograms are cumulative with a +Inf bucket
+    assert 'repro_lat_seconds_bucket{le="+Inf"} 1' in text
+    assert 'repro_lat_seconds_count 1' in text
+
+
+def test_null_registry_is_inert():
+    reg = NullRegistry()
+    assert not reg.enabled
+    c = reg.counter("repro_anything_total", labels=("a", "b"))
+    # every operation is a no-op returning the singleton
+    c.inc()
+    c.labels("x", "y").inc(5)
+    assert c.labels("x", "y") is c.labels("p", "q")
+    assert c.value == 0.0
+    h = reg.histogram("repro_h_seconds")
+    h.observe(1.0)
+    assert h.count == 0 and h.quantile(0.99) == 0.0
+    g = reg.gauge("repro_g")
+    g.set(9)
+    g.dec()
+    assert g.value == 0.0
+    assert reg.snapshot() == {}
+    assert reg.prometheus() == ""
+
+
+def test_global_enable_disable_swaps_registries():
+    assert isinstance(obs.get_registry(), NullRegistry)
+    reg, tr = obs.enable()
+    assert obs.get_registry() is reg and obs.get_tracer() is tr
+    assert reg.enabled and tr.enabled
+    reg.counter("repro_t_total").inc()
+    obs.disable()
+    assert isinstance(obs.get_registry(), NullRegistry)
+    assert isinstance(obs.get_tracer(), NullTracer)
+    # a fresh enable starts clean
+    reg2, _ = obs.enable()
+    assert reg2.snapshot() == {}
+
+
+# ---------------------------------------------------------------------- #
+#  Tracing
+# ---------------------------------------------------------------------- #
+def test_span_nesting_parents_and_export_round_trip(tmp_path):
+    tr = Tracer()
+    with tr.span("outer", cat="t", a=1) as outer:
+        with tr.span("mid", cat="t"):
+            with tr.span("inner", cat="t") as inner:
+                inner.set(rows=4)
+    detached = tr.start_span("ticket", cat="t", parent=outer.id)
+    detached.finish()
+    evs = {e["name"]: e for e in tr.events()}
+    assert evs["mid"]["args"]["parent_id"] == evs["outer"]["args"]["span_id"]
+    assert evs["inner"]["args"]["parent_id"] == evs["mid"]["args"]["span_id"]
+    assert evs["ticket"]["args"]["parent_id"] == evs["outer"]["args"]["span_id"]
+    assert evs["inner"]["args"]["rows"] == 4
+    assert tr.max_depth() == 3
+    for e in evs.values():
+        assert e["dur"] >= 0
+
+    path = tmp_path / "trace.json"
+    tr.dump(path)
+    doc = json.loads(path.read_text())
+    names = {e.get("name") for e in doc["traceEvents"]}
+    assert {"outer", "mid", "inner", "ticket"} <= names
+    xs = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    assert all({"ts", "dur", "pid", "tid"} <= set(e) for e in xs)
+
+
+def test_span_exit_records_error_and_ring_buffer_caps():
+    tr = Tracer(capacity=8)
+    with pytest.raises(RuntimeError):
+        with tr.span("boom"):
+            raise RuntimeError("x")
+    assert tr.events()[-1]["args"]["error"] == "RuntimeError"
+    for i in range(20):
+        with tr.span(f"s{i}"):
+            pass
+    assert len(tr) == 8  # oldest spans fell off the ring
+    null = NullTracer()
+    with null.span("n") as sp:
+        sp.set(a=1)
+    assert null.events() == [] and null.max_depth() == 0
+
+
+# ---------------------------------------------------------------------- #
+#  SLO accounting
+# ---------------------------------------------------------------------- #
+def test_slo_tracker_attainment_and_outcomes():
+    reg = MetricsRegistry()
+    slo = SLOTracker(reg)
+    for lat in (0.001, 0.002, 0.050):
+        slo.observe("interactive", lat, target_s=0.005)
+    slo.observe("interactive", 0.1, target_s=0.005, outcome="error")
+    slo.observe("interactive", 0.0, target_s=0.005, outcome="shed")
+    rep = slo.report()["interactive"]
+    assert rep["target_ms"] == pytest.approx(5.0)
+    assert rep["ok"] == 3 and rep["error"] == 1 and rep["shed"] == 1
+    assert rep["attainment"] == pytest.approx(2 / 3)
+    assert rep["p50_ms"] > 0
+    slo.observe("batch", 1.0)  # no target: attainment undefined
+    assert slo.report()["batch"]["attainment"] is None
+
+
+# ---------------------------------------------------------------------- #
+#  Differential: obs on/off must not change results
+# ---------------------------------------------------------------------- #
+def test_enabling_obs_does_not_change_results_bitwise():
+    jax = pytest.importorskip("jax")  # noqa: F841
+    from repro.core.api import QuerySpec, Session
+    from repro.graphs.generators import erdos_renyi
+    from repro.serve import WindowService
+    from test_updates import mixed
+
+    def run(enabled):
+        if enabled:
+            obs.enable()
+        else:
+            obs.disable()
+        g = erdos_renyi(120, 3.0, directed=False, seed=41)
+        vals = np.random.default_rng(42).integers(0, 50, g.n)
+        g = g.with_attr("val", vals.astype(np.float64))
+        sess = Session(g, [QuerySpec(("khop", 2), "sum"),
+                           QuerySpec(("khop", 1), "min")],
+                       use_pallas=False)
+        svc = WindowService(sess, bucket=4)
+        rng = np.random.default_rng(43)
+        outs = []
+        for _ in range(3):
+            svc.update(mixed(svc.session.graph, rng, 5, 2))
+            tickets = [svc.submit(0), svc.submit(1), svc.submit(0, vertex=7)]
+            svc.flush()
+            outs.append([np.asarray(t.get(timeout=0)) for t in tickets])
+        return outs
+
+    base, instrumented = run(False), run(True)
+    snap = obs.get_registry().snapshot()
+    assert snap["repro_flushes_total"]["values"], "obs really was on"
+    for a, b in zip(base, instrumented):
+        for x, y in zip(a, b):
+            assert np.array_equal(x, y)
