@@ -1,0 +1,249 @@
+"""Bench regression gate: diff fresh BENCH_*.json against committed baselines.
+
+Seven benchmark result files are committed at the repo root; CI re-runs
+five of them (smoke mode) and overwrites the workspace copies.  This gate
+then checks, per file:
+
+* **absolute invariants** — properties that must hold in ANY run at ANY
+  scale and are noise-free by construction: ``bit_identical`` flags,
+  ``recompiles == 0``, overhead under its own embedded budget, shed rate
+  in range, incremental-vs-rebuild speedups >= 1.  A violated invariant
+  is a real regression, never noise — these always fail hard.
+* **noise-aware ratio checks** — only when the fresh run's ``config``
+  block matches the baseline's (same scale ⇒ comparable numbers): each
+  tracked ratio must stay above ``rel_frac × baseline`` (default 0.4×;
+  ``--smoke`` loosens to 0.25× for shared-CI-runner noise).  A config
+  mismatch (CI smoke vs committed full run) skips these rather than
+  comparing apples to oranges.
+
+Baselines come from ``git show HEAD:<file>`` so the gate works *after*
+the bench steps overwrote the workspace copies; outside a git checkout it
+falls back to the on-disk file (invariants still checked).
+
+Usage::
+
+    python -m benchmarks.regress            # strict ratios (0.4x)
+    python -m benchmarks.regress --smoke    # CI: lenient ratios (0.25x)
+    python -m benchmarks.regress --check-only  # baselines only, no ratios
+
+Exit status 0 = all checks passed, 1 = any failure (CI gates on this).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, List, Optional, Tuple
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: every committed baseline this gate knows about
+BASELINES = (
+    "BENCH_updates.json",
+    "BENCH_multiquery.json",
+    "BENCH_service.json",
+    "BENCH_async_service.json",
+    "BENCH_window_algebra.json",
+    "BENCH_obs_overhead.json",
+    "BENCH_sharded.json",
+)
+
+
+def _get(d: Dict, path: str):
+    """Dotted-path lookup; returns None when any hop is missing."""
+    cur = d
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+# ---------------------------------------------------------------------- #
+#  Check table
+# ---------------------------------------------------------------------- #
+# (file, path, kind, arg):
+#   kind "true"    — value must be truthy                (invariant)
+#   kind "eq0"     — value must equal 0                  (invariant)
+#   kind "floor"   — value must be >= arg                (invariant)
+#   kind "ceil"    — value must be <= arg                (invariant)
+#   kind "budget"  — value must be < the file's own value at path `arg`
+#   kind "ratio"   — fresh >= rel_frac * baseline        (noise-aware)
+INVARIANTS: Tuple = (
+    ("BENCH_updates.json", "dbindex.speedup_batched_vs_rebuild", "floor", 1.0),
+    ("BENCH_updates.json", "iindex.speedup_batched_vs_rebuild", "floor", 1.0),
+    ("BENCH_multiquery.json", "fused.bit_identical", "true", None),
+    ("BENCH_multiquery.json", "session_stream.fused_plan_recompiles",
+     "eq0", None),
+    ("BENCH_multiquery.json", "fused.speedup_fused_vs_sequential",
+     "floor", 1.0),
+    ("BENCH_service.json", "bit_identical", "true", None),
+    ("BENCH_service.json", "service.recompiles", "eq0", None),
+    ("BENCH_service.json", "speedup_qps", "floor", 1.0),
+    ("BENCH_async_service.json", "recovery.bit_identical", "true", None),
+    ("BENCH_async_service.json", "low_load.deadline_beats_fillonly",
+     "true", None),
+    ("BENCH_async_service.json", "shedding.rate", "floor", 0.0),
+    ("BENCH_async_service.json", "shedding.rate", "ceil", 1.0),
+    ("BENCH_window_algebra.json", "idempotent_union.bit_identical",
+     "true", None),
+    ("BENCH_window_algebra.json", "inclusion_exclusion.bit_identical",
+     "true", None),
+    ("BENCH_window_algebra.json", "idempotent_union.speedup", "floor", 1.0),
+    ("BENCH_window_algebra.json", "derived_aggregates.fusion_speedup",
+     "floor", 1.0),
+    ("BENCH_obs_overhead.json", "overhead_fraction", "budget",
+     "max_overhead_fraction"),
+    ("BENCH_sharded.json", "query.bit_identical", "true", None),
+    ("BENCH_sharded.json", "stream.recompiles", "eq0", None),
+    ("BENCH_sharded.json", "stream.patch_to_full_ratio", "ceil", 1.0),
+)
+
+#: ratios worth tracking across runs of the SAME config (higher = better)
+RATIOS: Tuple = (
+    ("BENCH_updates.json", "dbindex.speedup_batched_vs_rebuild"),
+    ("BENCH_updates.json", "iindex.speedup_batched_vs_rebuild"),
+    ("BENCH_multiquery.json", "fused.speedup_fused_vs_sequential"),
+    ("BENCH_service.json", "speedup_qps"),
+    ("BENCH_async_service.json", "concurrent.qps"),
+    ("BENCH_window_algebra.json", "idempotent_union.speedup"),
+    ("BENCH_window_algebra.json", "derived_aggregates.fusion_speedup"),
+)
+
+
+# ---------------------------------------------------------------------- #
+def load_baseline(name: str, root: str = ROOT) -> Optional[Dict]:
+    """The committed version of ``name`` (``git show HEAD:<name>``), or
+    the on-disk file outside a git checkout, or None if neither exists."""
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"HEAD:{name}"], cwd=root,
+            capture_output=True, timeout=30,
+        )
+        if blob.returncode == 0:
+            return json.loads(blob.stdout.decode())
+    except (OSError, subprocess.TimeoutExpired, json.JSONDecodeError):
+        pass
+    return load_fresh(name, root)
+
+
+def load_fresh(name: str, root: str = ROOT) -> Optional[Dict]:
+    path = os.path.join(root, name)
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def check_invariants(name: str, data: Dict) -> List[Tuple[str, bool, str]]:
+    """[(label, ok, detail)] for every invariant registered on ``name``."""
+    rows = []
+    for fname, path, kind, arg in INVARIANTS:
+        if fname != name:
+            continue
+        v = _get(data, path)
+        label = f"{name}:{path}"
+        if v is None:
+            rows.append((label, False, "key missing"))
+            continue
+        if kind == "true":
+            rows.append((label, bool(v), f"= {v}"))
+        elif kind == "eq0":
+            rows.append((label, v == 0, f"= {v} (must be 0)"))
+        elif kind == "floor":
+            rows.append((label, v >= arg, f"= {v:.4g} (floor {arg})"))
+        elif kind == "ceil":
+            rows.append((label, v <= arg, f"= {v:.4g} (ceil {arg})"))
+        elif kind == "budget":
+            budget = _get(data, arg)
+            ok = budget is not None and v < budget
+            rows.append((label, ok, f"= {v:.4g} (budget {budget})"))
+    return rows
+
+
+def check_ratios(name: str, fresh: Dict, base: Dict,
+                 rel_frac: float) -> List[Tuple[str, bool, str]]:
+    """Noise-aware ratio checks; skipped (empty) unless configs match."""
+    if fresh.get("config") != base.get("config"):
+        return [(f"{name}:ratios", True,
+                 "config differs from baseline — ratio checks skipped")]
+    rows = []
+    for fname, path in RATIOS:
+        if fname != name:
+            continue
+        fv, bv = _get(fresh, path), _get(base, path)
+        label = f"{name}:{path}"
+        if fv is None or bv is None:
+            rows.append((label, False, "key missing"))
+            continue
+        floor = rel_frac * bv
+        rows.append((label, fv >= floor,
+                     f"= {fv:.4g} vs baseline {bv:.4g} "
+                     f"(floor {rel_frac:.2f}x = {floor:.4g})"))
+    return rows
+
+
+def run_gate(root: str = ROOT, rel_frac: float = 0.4,
+             check_only: bool = False,
+             require_all: bool = False) -> Tuple[List, List]:
+    """Run every check.  Returns (rows, failures); each row is
+    ``(label, ok, detail)``.  Files absent on disk are skipped unless
+    ``require_all`` (CI has all seven: five fresh + two committed)."""
+    rows: List[Tuple[str, bool, str]] = []
+    for name in BASELINES:
+        fresh = load_fresh(name, root)
+        base = load_baseline(name, root)
+        if base is None and fresh is None:
+            rows.append((f"{name}", not require_all, "missing"))
+            continue
+        if fresh is None:
+            # not re-run this round: the committed baseline self-checks
+            rows.extend(check_invariants(name, base))
+            continue
+        rows.extend(check_invariants(name, fresh))
+        if not check_only and base is not None and base is not fresh:
+            rows.extend(check_ratios(name, fresh, base, rel_frac))
+    failures = [r for r in rows if not r[1]]
+    return rows, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="lenient ratio floor (0.25x) for shared CI runners")
+    ap.add_argument("--check-only", action="store_true",
+                    help="validate invariants only; skip baseline ratios")
+    ap.add_argument("--rel-frac", type=float, default=None,
+                    help="override the ratio floor fraction")
+    ap.add_argument("--root", default=ROOT,
+                    help="directory holding the BENCH_*.json files")
+    ap.add_argument("--require-all", action="store_true",
+                    help="fail if any of the seven files is missing")
+    args = ap.parse_args(argv)
+    rel_frac = (args.rel_frac if args.rel_frac is not None
+                else (0.25 if args.smoke else 0.4))
+    rows, failures = run_gate(root=args.root, rel_frac=rel_frac,
+                              check_only=args.check_only,
+                              require_all=args.require_all)
+    width = max((len(r[0]) for r in rows), default=20)
+    for label, ok, detail in rows:
+        print(f"{'PASS' if ok else 'FAIL'}  {label:<{width}}  {detail}")
+    print(f"\n{len(rows) - len(failures)}/{len(rows)} checks passed"
+          f" (ratio floor {rel_frac:.2f}x)")
+    if failures:
+        print("REGRESSION GATE FAILED:")
+        for label, _, detail in failures:
+            print(f"  {label}: {detail}")
+        return 1
+    print("regression gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

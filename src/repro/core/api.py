@@ -947,6 +947,31 @@ class Session:
         return self.snapshot().run_many(values_batch)
 
     # ------------------------------------------------------------------ #
+    #  EXPLAIN / ANALYZE (repro.obs.explain / repro.obs.profile)
+    # ------------------------------------------------------------------ #
+    def explain(self, spec=None):
+        """EXPLAIN: the compiled plan as a structured
+        :class:`~repro.obs.explain.PlanReport` — engine resolution with
+        rejected candidates, per-(expr, monoid set) lowering choice, plan
+        anatomy and exact per-array device footprint — without executing
+        anything.  ``spec`` optionally narrows to one group (an index, a
+        :class:`QuerySpec`, or a window spec)."""
+        from repro.obs.explain import explain_session
+
+        return explain_session(self, spec)
+
+    def analyze(self, spec=None, values=None):
+        """ANALYZE: execute the selected groups once under a
+        phase-profiled scope and return an
+        :class:`~repro.obs.profile.AnalyzeReport` attributing wall time
+        to named phases (gather, pass-1/pass-2 reduce, inherit, finalize,
+        host combine).  Runs eagerly outside the tracked jitted
+        executors, so it never perturbs the zero-recompile counters."""
+        from repro.obs.profile import analyze_session
+
+        return analyze_session(self, spec, values=values)
+
+    # ------------------------------------------------------------------ #
     def update(self, batch) -> Dict:
         """Stream one UpdateBatch through every stateful index + plan.
 

@@ -89,6 +89,26 @@ class DBIndexPlan:
         nb, p1, p2, bs, lc, e1, e2 = children
         return cls(aux[0], nb, aux[1], p1, p2, bs, lc, e1, e2)
 
+    def array_nbytes(self) -> dict:
+        """Exact per-array device bytes, keyed ``pass1.<name>`` /
+        ``pass2.<name>`` / top-level array name.  The EXPLAIN footprint
+        accounting (and ROADMAP direction 2's spill planning) reads this."""
+        out = {}
+        for prefix, tp in (("pass1", self.pass1), ("pass2", self.pass2)):
+            for k, v in tp.array_nbytes().items():
+                out[f"{prefix}.{k}"] = v
+        out["block_sizes"] = int(self.block_sizes.nbytes)
+        out["link_counts"] = int(self.link_counts.nbytes)
+        if self.p1_ell is not None:
+            out["p1_ell"] = int(self.p1_ell.nbytes)
+        if self.p2_ell is not None:
+            out["p2_ell"] = int(self.p2_ell.nbytes)
+        return out
+
+    def plan_nbytes(self) -> int:
+        """Total device bytes held by this plan (sum of per-array sizes)."""
+        return sum(self.array_nbytes().values())
+
 
 jax.tree_util.register_pytree_node(
     DBIndexPlan, DBIndexPlan.tree_flatten, DBIndexPlan.tree_unflatten
@@ -514,6 +534,17 @@ class IIndexPlan:
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(aux[0], aux[1], *children)
+
+    def array_nbytes(self) -> dict:
+        """Exact per-array device bytes (see :meth:`DBIndexPlan.array_nbytes`)."""
+        out = {f"wd_plan.{k}": v for k, v in self.wd_plan.array_nbytes().items()}
+        out["pid"] = int(self.pid.nbytes)
+        out["level"] = int(self.level.nbytes)
+        return out
+
+    def plan_nbytes(self) -> int:
+        """Total device bytes held by this plan."""
+        return sum(self.array_nbytes().values())
 
 
 jax.tree_util.register_pytree_node(

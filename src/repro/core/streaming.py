@@ -409,6 +409,12 @@ class StreamingEngine:
             "t_index_s": t_index,
             "t_plan_s": t_plan,
             "reorganized": reorganized,
+            # device footprint after this batch: constant between reorgs
+            # (headroom absorbs appends shape-stably) — EXPLAIN's stability
+            # tests and the out-of-core accounting both key off this
+            "plan_bytes": (int(self.plan.plan_nbytes())
+                           if self.plan is not None
+                           and hasattr(self.plan, "plan_nbytes") else 0),
         }
 
     # ------------------------------------------------------------------ #

@@ -161,14 +161,53 @@ class ShardedDBPlan:
     def has_ell(self) -> bool:
         return self.e1 is not None
 
-    def size_bytes(self) -> int:
-        total = (self.p1_gather.nbytes + self.p1_seg.nbytes
-                 + self.p2_gather.nbytes + self.p2_seg.nbytes
-                 + self.block_sizes.nbytes)
+    def array_nbytes(self) -> Dict:
+        """Exact per-array device bytes — the same accounting surface as
+        ``DBIndexPlan.array_nbytes`` / ``IIndexPlan.array_nbytes``, so
+        EXPLAIN reports one schema across host/device/sharded plans."""
+        out = {
+            "p1_gather": int(self.p1_gather.nbytes),
+            "p1_seg": int(self.p1_seg.nbytes),
+            "p2_gather": int(self.p2_gather.nbytes),
+            "p2_seg": int(self.p2_seg.nbytes),
+            "block_sizes": int(self.block_sizes.nbytes),
+        }
         if self.has_ell:
-            total += (self.e1.nbytes + self.e1_ids.nbytes
-                      + self.e2.nbytes + self.e2_ids.nbytes)
-        return int(total)
+            out["e1"] = int(self.e1.nbytes)
+            out["e1_ids"] = int(self.e1_ids.nbytes)
+            out["e2"] = int(self.e2.nbytes)
+            out["e2_ids"] = int(self.e2_ids.nbytes)
+        return out
+
+    def plan_nbytes(self) -> int:
+        """Total device bytes held by this plan."""
+        return sum(self.array_nbytes().values())
+
+    def size_bytes(self) -> int:
+        # kept for pre-existing callers (wire ledger, benches)
+        return self.plan_nbytes()
+
+    def shard_row_loads(self) -> Dict:
+        """Per-shard real (unpadded) row loads for both passes, from the
+        patch-routing metadata — EXPLAIN's shard-balance view.  Empty dict
+        when routing metadata was dropped (plans restored without it)."""
+        out: Dict = {}
+        for name, shard_of, tiles, rows_cap in (
+            ("pass1", self.group_shard1, self.group_tiles1, self.rows1),
+            ("pass2", self.group_shard2, self.group_tiles2, self.rows2),
+        ):
+            if shard_of is None or tiles is None:
+                continue
+            loads = np.zeros(self.ndev, np.int64)
+            np.add.at(loads, np.asarray(shard_of, np.int64),
+                      np.asarray(tiles, np.int64) * self.tm)
+            out[name] = {
+                "rows_per_shard": [int(x) for x in loads],
+                "rows_capacity": int(rows_cap),
+                "balance": (float(loads.min() / loads.max())
+                            if loads.max() else 1.0),
+            }
+        return out
 
 
 def _shard_put(mesh, axes, arr, sharded: bool):

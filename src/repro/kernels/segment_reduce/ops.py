@@ -53,6 +53,18 @@ class TilePlan:
     def tree_unflatten(cls, aux, children):
         return cls(*children, *aux)
 
+    def array_nbytes(self) -> "dict":
+        """Per-array device bytes held by this plan (exact ``.nbytes``)."""
+        return {
+            "gather_padded": int(self.gather_padded.nbytes),
+            "seg_tiles": int(self.seg_tiles.nbytes),
+            "m2out": int(self.m2out.nbytes),
+            "first_visit": int(self.first_visit.nbytes),
+        }
+
+    def plan_nbytes(self) -> int:
+        return sum(self.array_nbytes().values())
+
 
 jax.tree_util.register_pytree_node(
     TilePlan, TilePlan.tree_flatten, TilePlan.tree_unflatten

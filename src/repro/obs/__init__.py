@@ -53,7 +53,20 @@ __all__ = [
     "Tracer", "NullTracer", "Span", "SLOTracker",
     "DEFAULT_LATENCY_BUCKETS_S", "DEFAULT_SIZE_BUCKETS",
     "get_registry", "get_tracer", "enable", "disable",
+    "explain_session", "analyze_session", "PlanReport", "AnalyzeReport",
 ]
+
+
+def __getattr__(name):
+    # lazy: explain/profile pull in jax via the plan classes they inspect;
+    # keep plain `import repro.obs` cheap and dependency-free
+    if name in ("explain_session", "PlanReport"):
+        from . import explain as _explain
+        return getattr(_explain, name)
+    if name in ("analyze_session", "AnalyzeReport"):
+        from . import profile as _profile
+        return getattr(_profile, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 _NULL_REGISTRY = NullRegistry()
 _NULL_TRACER = NullTracer()
@@ -82,7 +95,42 @@ def enable(registry: Optional[MetricsRegistry] = None,
     global _registry, _tracer
     _registry = registry if registry is not None else MetricsRegistry()
     _tracer = tracer if tracer is not None else Tracer()
+    _install_collectors(_registry, _tracer)
     return _registry, _tracer
+
+
+def _install_collectors(reg, tracer) -> None:
+    """Collect-on-scrape gauges: values that live outside the registry are
+    pulled fresh at every ``snapshot()``/``prometheus()`` instead of
+    relying on the last manual fold."""
+    if not getattr(reg, "enabled", False):
+        return
+
+    def _collect_recompiles(r):
+        # lazy import: core.api imports repro.obs at module top, so a
+        # top-level import here would be circular.  recompile_count() is
+        # itself lazy (sys.modules probe) and never initialises jax.
+        from repro.core import api as _api
+        r.gauge(
+            "repro_recompiles",
+            help="total jit cache entries across tracked executors",
+        ).set(_api.recompile_count())
+
+    def _collect_trace_drops(r):
+        r.counter(
+            "repro_trace_spans_dropped_total",
+            help="trace events evicted from the ring buffer on overflow",
+        )
+        # counters are monotonic: fold in only the delta since last scrape
+        seen = _collect_trace_drops._seen
+        now = int(getattr(tracer, "dropped_hint", 0))
+        if now > seen:
+            r.counter("repro_trace_spans_dropped_total").inc(now - seen)
+            _collect_trace_drops._seen = now
+
+    _collect_trace_drops._seen = 0
+    reg.collect(_collect_recompiles, name="recompiles")
+    reg.collect(_collect_trace_drops, name="trace_drops")
 
 
 def disable() -> None:

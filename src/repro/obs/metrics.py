@@ -314,6 +314,33 @@ class MetricsRegistry:
     def __init__(self):
         self._families: Dict[str, _Family] = {}
         self._lock = threading.Lock()
+        self._collectors: Dict[str, object] = {}
+
+    # ----------------------------- collect ---------------------------- #
+    def collect(self, fn, name: str = "") -> None:
+        """Register ``fn(registry)`` to run at the top of every
+        :meth:`snapshot` / :meth:`prometheus` call.
+
+        This is the collect-on-scrape hook for values that live outside
+        the registry (jit-cache recompile counts, tracer drop counters):
+        instead of relying on call sites remembering to fold the latest
+        value in, the export path pulls a fresh reading.  ``name`` dedupes
+        — re-registering the same name replaces the previous collector, so
+        repeated ``enable()`` round-trips don't stack duplicates.
+        """
+        key = name or f"anon-{id(fn)}"
+        with self._lock:
+            self._collectors[key] = fn
+
+    def _run_collectors(self) -> None:
+        with self._lock:
+            collectors = list(self._collectors.values())
+        for fn in collectors:
+            try:
+                fn(self)
+            except Exception:
+                # a broken collector must not take down the scrape path
+                pass
 
     # ----------------------------- declare ---------------------------- #
     def _get(self, name: str, kind: str, help: str, labels: Sequence[str],
@@ -351,6 +378,7 @@ class MetricsRegistry:
         ...}]}}``.  Histogram entries carry count/sum/buckets plus p50/p95/
         p99 estimates so the snapshot is self-contained in bench artifacts.
         """
+        self._run_collectors()
         out: Dict = {}
         with self._lock:
             families = list(self._families.values())
@@ -380,6 +408,7 @@ class MetricsRegistry:
 
     def prometheus(self) -> str:
         """Prometheus text exposition format (one scrape body)."""
+        self._run_collectors()
         lines: List[str] = []
         with self._lock:
             families = list(self._families.values())
@@ -470,6 +499,9 @@ class NullRegistry:
                   buckets=None) -> _NullMetric:
         return _NULL_METRIC
 
+    def collect(self, fn, name: str = "") -> None:
+        pass
+
     def snapshot(self) -> Dict:
         return {}
 
@@ -483,11 +515,34 @@ def _fmt_num(v) -> str:
     return repr(int(f)) if f == int(f) and abs(f) < 1e15 else repr(f)
 
 
+def _escape_label_value(v) -> str:
+    """Escape one label value per the Prometheus text exposition format:
+    backslash first (so the other escapes aren't double-escaped), then
+    double-quote, then newline — a raw newline inside a label value would
+    otherwise split the sample line and corrupt the whole scrape body."""
+    return (str(v).replace("\\", r"\\").replace('"', r"\"")
+            .replace("\n", r"\n"))
+
+
+def _unescape_label_value(v: str) -> str:
+    """Inverse of :func:`_escape_label_value` (round-trip tests / parsers)."""
+    out, i = [], 0
+    while i < len(v):
+        c = v[i]
+        if c == "\\" and i + 1 < len(v):
+            nxt = v[i + 1]
+            out.append({"\\": "\\", '"': '"', "n": "\n"}.get(nxt, c + nxt))
+            i += 2
+        else:
+            out.append(c)
+            i += 1
+    return "".join(out)
+
+
 def _fmt_labels(pairs) -> str:
     if not pairs:
         return ""
     body = ",".join(
-        '{}="{}"'.format(k, str(v).replace("\\", r"\\").replace('"', r"\""))
-        for k, v in pairs
+        '{}="{}"'.format(k, _escape_label_value(v)) for k, v in pairs
     )
     return "{" + body + "}"

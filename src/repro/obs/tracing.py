@@ -127,6 +127,8 @@ class Tracer:
 
     def instant(self, name: str, cat: str = "repro", **args) -> None:
         """A zero-duration marker event."""
+        if len(self._events) == self._events.maxlen:
+            self.dropped_hint += 1
         self._events.append({
             "name": name, "cat": cat, "ph": "i", "s": "t",
             "ts": self._now() * 1e6, "pid": os.getpid(),

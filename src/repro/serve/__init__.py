@@ -13,9 +13,13 @@
   :meth:`repro.core.api.Session.restore_from_wal` replays it.
 * :class:`~repro.serve.replica.ReadReplica` — follower session tailing
   the WAL by byte offset (pinned reads, explicit catch-up + flip).
+* :class:`~repro.serve.flight.FlightRecorder` — bounded ring of
+  structured serving events (admit/shed/flush/WAL-commit/patch/flip),
+  dumped automatically when a ticket fails.
 """
 
 from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.flight import FlightRecorder  # noqa: F401
 from repro.serve.replica import ReadReplica  # noqa: F401
 from repro.serve.wal import (  # noqa: F401
     WriteAheadLog,

@@ -59,6 +59,7 @@ import numpy as np
 from repro import obs as _obs
 from repro.core.api import QuerySpec, Session, record_recompiles
 from repro.obs.slo import SLOTracker
+from repro.serve.flight import FlightRecorder
 
 
 class LoadShedError(RuntimeError):
@@ -306,7 +307,8 @@ class WindowService:
 
     def __init__(self, session: Session, bucket: int = 8,
                  auto_flip: bool = True, use_cache: bool = True,
-                 obs=None, tracer=None, now_fn=None):
+                 obs=None, tracer=None, now_fn=None,
+                 flight_capacity: int = 256):
         self.session = session
         self.bucket = int(bucket)
         assert self.bucket >= 1
@@ -332,6 +334,13 @@ class WindowService:
         self.point_hits = 0
         self.point_misses = 0
         self.slo = SLOTracker(self.obs)
+        # flight recorder: always on (a crash artifact must exist for
+        # crashes that never scheduled an instrumented run); one dict +
+        # deque append per event keeps it inside the <5% obs budget
+        self.flight = FlightRecorder(capacity=flight_capacity)
+        #: events captured at the moment a ticket last failed (the
+        #: automatic dump; None until a failure happens)
+        self.last_flight_record: Optional[List[Dict]] = None
         self._m_flushes = self.obs.counter(
             "repro_flushes_total", "queue flushes by trigger",
             labels=("reason",))
@@ -419,6 +428,9 @@ class WindowService:
         t._span = self.tracer.start_span(
             "request", cat="ticket", rid=rid,
             cls=t.class_name, point=vertex is not None)
+        self.flight.record("admit", rid=rid, cls=t.class_name,
+                           point=vertex is not None,
+                           version=self._active.version)
         return t
 
     def submit(self, spec, vertex: Optional[int] = None,
@@ -581,7 +593,51 @@ class WindowService:
         self.failed += len(pending) - ok
         self._m_flushes.labels(reason).inc()
         self._m_flush_size.observe(len(pending))
+        self.flight.record("flush", reason=reason, tickets=len(pending),
+                           served=ok, failed=len(pending) - ok,
+                           version=view.version)
+        if ok < len(pending):
+            self._on_ticket_failure([t for t in pending
+                                     if t.error is not None])
         return pending
+
+    # ------------------------------------------------------------------ #
+    def _on_ticket_failure(self, failed: List[Ticket]) -> None:
+        """A ticket finished with an error: stamp failure events and dump
+        the flight record automatically — the recent admit/shed/flush/
+        patch/flip history IS the crash context."""
+        for t in failed:
+            self.flight.record(
+                "failure", rid=t.rid, cls=t.class_name,
+                error=type(t.error).__name__, detail=str(t.error)[:200])
+        self.last_flight_record = self.flight.dump()
+
+    def debug_report(self) -> Dict:
+        """One structured dump of everything the service knows about
+        itself: counters, serving-bucket padding waste, cache/SLO stats,
+        staleness ratios, device-plan footprint, and the flight-recorder
+        ring — the ANALYZE companion for the serving tier."""
+        launched_rows = self.batched_launches * self.bucket
+        report = {
+            "stats": self.stats,
+            "padding": {
+                "bucket": self.bucket,
+                "batched_launches": self.batched_launches,
+                "padded_rows": self.padded_rows,
+                "waste_fraction": (self.padded_rows / launched_rows
+                                   if launched_rows else 0.0),
+            },
+            "staleness": self.session.staleness,
+            "plan_footprint_bytes": int(
+                self.session.explain().total_plan_nbytes),
+            "flight": {
+                "capacity": self.flight.capacity,
+                "dropped": self.flight.dropped,
+                "events": self.flight.dump(),
+            },
+            "last_flight_record": self.last_flight_record,
+        }
+        return report
 
     # ------------------------------------------------------------------ #
     def update(self, batch) -> Dict:
@@ -595,6 +651,13 @@ class WindowService:
         """
         with self.tracer.span("service.update", cat="update"):
             reports = self.session.update(batch)
+            for key, rep in reports.items():
+                self.flight.record(
+                    "patch", key=key,
+                    version=rep.get("version"),
+                    plan_version=rep.get("plan_version"),
+                    affected=int(np.size(rep.get("affected_owners", ()))),
+                    reorganized=bool(rep.get("reorganized", False)))
             if self.auto_flip:
                 self.flip()
         self._m_updates.inc()
@@ -606,6 +669,7 @@ class WindowService:
         plan — it holds either the old view or the new one)."""
         self._active = self.session.snapshot()
         self._m_flips.inc()
+        self.flight.record("flip", version=self._active.version)
         return self._active.version
 
     # ------------------------------------------------------------------ #
@@ -809,6 +873,9 @@ class AsyncWindowService(WindowService):
         """Account one admission-control casualty (``t.error`` already
         holds the :class:`LoadShedError`) and release its waiter."""
         self._m_shed.inc()
+        self.flight.record("shed", rid=t.rid, cls=t.class_name,
+                           reason=str(t.error)[:200],
+                           version=self._active.version)
         self.slo.observe(
             t.class_name, self.now() - t.submitted_s,
             (t.request_class.max_delay_ms / 1e3
@@ -948,6 +1015,9 @@ class AsyncWindowService(WindowService):
                 with self.tracer.span("wal.append", cat="update",
                                       version=self.session.version + 1):
                     self.wal.append(batch, version=self.session.version + 1)
+                self.flight.record("wal_commit",
+                                   version=self.session.version + 1,
+                                   records=int(getattr(batch, "size", 0)))
             return super().update(batch)
 
     # ------------------------------------------------------------------ #

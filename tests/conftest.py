@@ -31,3 +31,55 @@ def paper_social_graph():
     g = Graph(n=6, src=src, dst=dst, directed=False)
     posts = np.array([12, 15, 28, 23, 26, 14], dtype=np.float64)
     return g.with_attr("val", posts)
+
+
+# ---------------------------------------------------------------------- #
+#  Failure artifacts (ISSUE 8): when a test fails, dump the observability
+#  state — metrics snapshot, Chrome trace, serving flight records — so CI
+#  can upload them (actions/upload-artifact with if: failure()).
+# ---------------------------------------------------------------------- #
+def _artifact_dir():
+    import os
+
+    d = os.environ.get("REPRO_FAILURE_ARTIFACTS", "test-failure-artifacts")
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+def _dump_failure_artifacts(test_name: str) -> None:
+    import json
+    import os
+    import re
+
+    slug = re.sub(r"[^A-Za-z0-9_.-]+", "_", test_name)[:80]
+    d = _artifact_dir()
+    try:  # live metrics registry (present when obs is enabled)
+        from repro import obs
+
+        reg = obs.get_registry()
+        if getattr(reg, "enabled", False):
+            with open(os.path.join(d, f"{slug}.metrics.prom"), "w") as f:
+                f.write(reg.prometheus())
+            with open(os.path.join(d, f"{slug}.metrics.json"), "w") as f:
+                json.dump(reg.snapshot(), f, indent=2, default=str)
+        tracer = obs.get_tracer()
+        if getattr(tracer, "enabled", False) and len(tracer.events()):
+            tracer.dump(os.path.join(d, f"{slug}.trace.json"))
+    except Exception:
+        pass
+    try:  # every live flight recorder, even from services the test built
+        from repro.serve.flight import all_recorders
+
+        for i, fr in enumerate(all_recorders()):
+            if len(fr):
+                fr.dump_json(os.path.join(d, f"{slug}.flight{i}.json"))
+    except Exception:
+        pass
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_makereport(item, call):
+    outcome = yield
+    rep = outcome.get_result()
+    if rep.when == "call" and rep.failed:
+        _dump_failure_artifacts(item.name)

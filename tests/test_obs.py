@@ -156,9 +156,13 @@ def test_global_enable_disable_swaps_registries():
     obs.disable()
     assert isinstance(obs.get_registry(), NullRegistry)
     assert isinstance(obs.get_tracer(), NullTracer)
-    # a fresh enable starts clean
+    # a fresh enable starts clean: no user metrics carry over — only the
+    # built-in collect-on-scrape families are pre-declared
     reg2, _ = obs.enable()
-    assert reg2.snapshot() == {}
+    snap = reg2.snapshot()
+    assert "repro_t_total" not in snap
+    assert set(snap) <= {"repro_recompiles",
+                         "repro_trace_spans_dropped_total"}
 
 
 # ---------------------------------------------------------------------- #
@@ -262,3 +266,88 @@ def test_enabling_obs_does_not_change_results_bitwise():
     for a, b in zip(base, instrumented):
         for x, y in zip(a, b):
             assert np.array_equal(x, y)
+
+
+# ---------------------------------------------------------------------- #
+#  Label escaping, collect-on-scrape, trace-drop exposure (ISSUE 8)
+# ---------------------------------------------------------------------- #
+def test_prometheus_hostile_label_value_round_trips():
+    """A label value carrying backslashes, quotes, and newlines must stay
+    on one exposition line and invert exactly through the escaper."""
+    import re
+
+    from repro.obs.metrics import _escape_label_value, _unescape_label_value
+
+    hostile = 'a\\b"c\nd{},= \\" \n\\ e'
+    reg = MetricsRegistry()
+    reg.counter("repro_hostile_total", "t", labels=("who",)
+                ).labels(hostile).inc(3)
+    text = reg.prometheus()
+    lines = [ln for ln in text.splitlines()
+             if ln.startswith("repro_hostile_total{")]
+    assert len(lines) == 1, "newline in the value must not split the line"
+    line = lines[0]
+    m = re.search(r'who="((?:[^"\\]|\\.)*)"', line)
+    assert m, line
+    assert _unescape_label_value(m.group(1)) == hostile
+    assert line.endswith(" 3")
+    # escape/unescape is a bijection on every metacharacter alone too
+    for v in ("\\", '"', "\n", "", "plain", '\\n'):
+        assert _unescape_label_value(_escape_label_value(v)) == v
+
+
+def test_collectors_run_on_scrape_and_dedupe_by_name():
+    reg = MetricsRegistry()
+    calls = []
+
+    def fill(r):
+        calls.append(1)
+        r.gauge("repro_scraped").set(len(calls))
+
+    reg.collect(fill, name="fill")
+    reg.collect(fill, name="fill")  # same name: replaces, no double-run
+    snap = reg.snapshot()
+    assert len(calls) == 1
+    assert snap["repro_scraped"]["values"][0]["value"] == 1.0
+    reg.prometheus()
+    assert len(calls) == 2  # fresh on every scrape
+
+    def broken(r):
+        raise RuntimeError("collector bug")
+
+    reg.collect(broken, name="broken")
+    reg.snapshot()  # a broken collector must not poison the scrape
+
+
+def test_recompile_gauge_is_collected_fresh():
+    reg, _ = obs.enable()
+    from repro.core.api import recompile_count
+
+    snap = reg.snapshot()
+    assert snap["repro_recompiles"]["values"][0]["value"] == float(
+        recompile_count())
+    assert "repro_recompiles" in reg.prometheus()
+
+
+def test_trace_drop_counter_exposed_and_monotonic():
+    tr = Tracer(capacity=4)
+    reg, _ = obs.enable(tracer=tr)
+    for i in range(10):
+        with tr.span(f"s{i}"):
+            pass
+    snap = reg.snapshot()
+    fam = snap["repro_trace_spans_dropped_total"]
+    dropped = fam["values"][0]["value"]
+    assert dropped == float(tr.dropped_hint) and dropped > 0
+    # monotonic across scrapes: delta-folded, not re-added
+    snap2 = reg.snapshot()
+    assert snap2["repro_trace_spans_dropped_total"]["values"][0][
+        "value"] == dropped
+    tr.instant("one-more")  # ring is full: this drops another event
+    for _ in range(3):
+        with tr.span("x"):
+            pass
+    snap3 = reg.snapshot()
+    assert snap3["repro_trace_spans_dropped_total"]["values"][0][
+        "value"] == float(tr.dropped_hint) > dropped
+    assert "repro_trace_spans_dropped_total" in reg.prometheus()
