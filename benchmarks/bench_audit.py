@@ -1,0 +1,243 @@
+"""Online-auditing overhead + detection latency (ISSUE 9).
+
+Acceptance, asserted here and recorded in ``BENCH_audit.json``:
+
+* **overhead** — attaching a :class:`~repro.obs.audit.ShadowAuditor` at 1%
+  sampling costs **< 5% QPS** on the serving hot path and triggers **zero
+  recompiles** (the oracle is pure NumPy).  Two identical `WindowService`
+  stacks replay the same request/update trace in interleaved rounds, each
+  side scored by its best round (same estimator as
+  ``bench_obs_overhead``); zero mismatches on the clean stream is the
+  **zero-false-positive** record.
+* **detection** — one byte flipped in a sealed WAL record and one element
+  poisoned in a served result vector are both detected, with the finding
+  attributing the exact version / WAL byte offset / vertex, and the
+  wall-clock corruption-to-finding latency recorded.
+* **replication** — a 20-batch leader stream with per-version digest
+  stamping replays into a follower whose locally recomputed digest matches
+  the leader's for **every** version (digest_checks == versions,
+  divergence None).
+
+Run: ``PYTHONPATH=src python -m benchmarks.bench_audit [--smoke]``.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, emit_json, mixed_update_batch
+
+MAX_OVERHEAD = 0.05
+SAMPLE_RATE = 0.01
+
+
+def run(n: int = 8_000, deg: float = 5.0, rounds: int = 7, ticks: int = 4,
+        point_q: int = 64, bucket: int = 8, stream_batches: int = 20,
+        smoke: bool = False, json_path: str = "BENCH_audit.json") -> dict:
+    from repro.core import api
+    from repro.core.api import QuerySpec, Session
+    from repro.graphs.generators import erdos_renyi
+    from repro.obs.audit import ShadowAuditor, WalScrubber
+    from repro.serve import AsyncWindowService, ReadReplica, WindowService
+    from repro.serve.wal import _REC_HDR, scan_wal_entries
+
+    if smoke:
+        n, rounds, ticks, point_q = 2_000, 3, 2, 24
+
+    rng = np.random.default_rng(0)
+    g = erdos_renyi(n, deg, directed=False, seed=0)
+    g = g.with_attr("val", rng.integers(0, 100, g.n).astype(np.float64))
+    specs = [QuerySpec(("khop", 1), "sum"), QuerySpec(("khop", 1), "min")]
+
+    # ------------------------------------------------------------------ #
+    #  1% sampling overhead: identical trace, interleaved best-of-rounds
+    # ------------------------------------------------------------------ #
+    trace = [[(int(rng.integers(len(specs))), int(rng.integers(n)))
+              for _ in range(point_q)] for _ in range(ticks)]
+    batch_seed = int(rng.integers(2**31))
+
+    def build():
+        sess = Session(g, specs, device=True, use_pallas=False,
+                       plan_headroom=1.0)
+        return WindowService(sess, bucket=bucket)
+
+    def play(svc):
+        r = np.random.default_rng(batch_seed)
+        n_served = 0
+        for t in range(ticks):
+            svc.update(mixed_update_batch(svc.session.graph, r, 6, 3))
+            tickets = [svc.submit(si, vertex=v) for si, v in trace[t]]
+            svc.flush()
+            n_served += sum(tk.error is None for tk in tickets)
+        assert n_served == ticks * point_q
+        return n_served
+
+    svc_base = build()
+    svc_audited = build()
+    auditor = ShadowAuditor(sample_rate=SAMPLE_RATE)
+    svc_audited.attach_auditor(auditor)
+    auditor.start()
+    for svc in (svc_base, svc_audited):  # warm every executor shape
+        play(svc)
+    recompiles_before = api.recompile_count()
+
+    n_req = ticks * point_q
+    best = {"base": float("inf"), "audited": float("inf")}
+    for _ in range(rounds):  # interleaved A/B: same weather for both
+        for key, svc in (("base", svc_base), ("audited", svc_audited)):
+            t0 = time.perf_counter()
+            play(svc)
+            best[key] = min(best[key], time.perf_counter() - t0)
+
+    auditor.drain(timeout=60)
+    auditor.stop()
+    recompiles = api.recompile_count() - recompiles_before
+    qps_base = n_req / best["base"]
+    qps_audited = n_req / best["audited"]
+    overhead = best["audited"] / best["base"] - 1.0
+    emit(f"audit/base_qps/n{n}", 1e6 / qps_base, f"{qps_base:.0f}qps")
+    emit(f"audit/audited_qps/n{n}", 1e6 / qps_audited,
+         f"{qps_audited:.0f}qps")
+    emit(f"audit/overhead/n{n}",
+         best["audited"] * 1e6 - best["base"] * 1e6,
+         f"{overhead * 100:.2f}pct")
+    assert overhead < MAX_OVERHEAD, (
+        f"audit overhead {overhead * 100:.2f}% exceeds "
+        f"{MAX_OVERHEAD * 100:.0f}% "
+        f"({qps_audited:.0f} vs {qps_base:.0f} qps)")
+    assert recompiles == 0, f"auditing recompiled {recompiles}x"
+    assert auditor.mismatches == 0, (
+        f"false positives on a clean stream: {auditor.stats['findings']}")
+
+    # ------------------------------------------------------------------ #
+    #  detection: sealed-WAL byte flip + poisoned served vector
+    # ------------------------------------------------------------------ #
+    with tempfile.TemporaryDirectory() as tmp:
+        wal_path = os.path.join(tmp, "leader.wal")
+        svc = AsyncWindowService(
+            Session(g, specs, device=True, use_pallas=False,
+                    plan_headroom=1.0),
+            bucket=bucket, wal=wal_path).start()
+        r = np.random.default_rng(1)
+        for _ in range(stream_batches):
+            svc.update(mixed_update_batch(svc.session.graph, r, 6, 3))
+        svc.stop()
+        svc.wal.sync()
+
+        target = [e for e in scan_wal_entries(wal_path)[0]
+                  if e["kind"] == "batch"][stream_batches // 2]
+        t_corrupt = time.perf_counter()
+        with open(wal_path, "r+b") as f:
+            f.seek(target["offset"] + _REC_HDR.size + 3)
+            b = f.read(1)
+            f.seek(-1, 1)
+            f.write(bytes([b[0] ^ 0xFF]))
+        scrub = WalScrubber(wal_path)
+        found = scrub.scrub_once()
+        scrub_latency = time.perf_counter() - t_corrupt
+        assert len(found) == 1 and found[0].version == target["version"] \
+            and found[0].wal_offset == target["offset"]
+        emit("audit/scrub_detect", scrub_latency * 1e6,
+             f"v{found[0].version}@{found[0].wal_offset}")
+
+        # poisoned served vector: cache hit serves the bad byte, the
+        # shadow oracle catches it
+        det = ShadowAuditor(sample_rate=1.0).start()
+        svc2 = WindowService(
+            Session(g, specs, device=True, use_pallas=False,
+                    plan_headroom=1.0), bucket=bucket)
+        svc2.attach_auditor(det)
+        svc2.query(0)  # warm the full vector the cache will serve from
+        t_corrupt = time.perf_counter()
+        svc2.cache._entries[0]["vectors"]["sum"][7] += 1.0
+        svc2.query(0, vertex=7)
+        det.drain(timeout=60)
+        oracle_latency = time.perf_counter() - t_corrupt
+        det.stop()
+        assert det.mismatches == 1 and det.findings[0].vertex == 7
+        emit("audit/oracle_detect", oracle_latency * 1e6,
+             f"vertex{det.findings[0].vertex}")
+
+        detection = {
+            "wal_scrub": {
+                "detected": True,
+                "version": int(found[0].version),
+                "wal_offset": int(found[0].wal_offset),
+                "latency_s": scrub_latency,
+            },
+            "oracle": {
+                "detected": True,
+                "vertex": int(det.findings[0].vertex),
+                "version": int(det.findings[0].version),
+                "latency_s": oracle_latency,
+            },
+        }
+
+        # -------------------------------------------------------------- #
+        #  replication: every version's digest matches bitwise
+        # -------------------------------------------------------------- #
+        rep_path = os.path.join(tmp, "digested.wal")
+        leader = AsyncWindowService(
+            Session(g, specs, device=True, use_pallas=False,
+                    plan_headroom=1.0),
+            bucket=bucket, wal=rep_path).start()
+        r = np.random.default_rng(2)
+        for _ in range(stream_batches):
+            leader.update(mixed_update_batch(leader.session.graph, r, 6, 3))
+        leader.stop()
+        leader.wal.sync()
+        follower = ReadReplica(g, specs, rep_path, device=True,
+                               use_pallas=False, plan_headroom=1.0)
+        t0 = time.perf_counter()
+        applied = follower.catch_up()
+        catchup_s = time.perf_counter() - t0
+        assert applied == stream_batches
+        assert follower.digest_checks == stream_batches, (
+            f"only {follower.digest_checks}/{stream_batches} digests checked")
+        assert follower.divergence is None, follower.divergence
+        emit(f"audit/replication_catchup/b{stream_batches}", catchup_s * 1e6,
+             f"{follower.digest_checks}digests")
+
+    payload = {
+        "config": {"n": n, "avg_degree": deg, "rounds": rounds,
+                   "ticks_per_round": ticks,
+                   "point_queries_per_tick": point_q, "bucket": bucket,
+                   "stream_batches": stream_batches,
+                   "estimator": "best-of-rounds, interleaved"},
+        "audit": {
+            "sample_rate": SAMPLE_RATE,
+            "qps_base": qps_base,
+            "qps_audited": qps_audited,
+            "overhead_fraction": overhead,
+            "max_overhead_fraction": MAX_OVERHEAD,
+            "samples": auditor.sampled,
+            "audited": auditor.audited,
+            "dropped_samples": auditor.dropped_samples,
+            "false_positives": auditor.mismatches,
+            "recompiles": recompiles,
+        },
+        "detection": detection,
+        "replication": {
+            "versions": stream_batches,
+            "digest_checks": follower.digest_checks,
+            "digests_matched": follower.divergence is None,
+            "divergences": 0 if follower.divergence is None else 1,
+            "catchup_s": catchup_s,
+        },
+    }
+    emit_json(json_path, payload)
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep for CI (n=2k, 3 rounds)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

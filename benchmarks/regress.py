@@ -1,7 +1,7 @@
 """Bench regression gate: diff fresh BENCH_*.json against committed baselines.
 
-Seven benchmark result files are committed at the repo root; CI re-runs
-five of them (smoke mode) and overwrites the workspace copies.  This gate
+Eight benchmark result files are committed at the repo root; CI re-runs
+six of them (smoke mode) and overwrites the workspace copies.  This gate
 then checks, per file:
 
 * **absolute invariants** — properties that must hold in ANY run at ANY
@@ -49,6 +49,7 @@ BASELINES = (
     "BENCH_window_algebra.json",
     "BENCH_obs_overhead.json",
     "BENCH_sharded.json",
+    "BENCH_audit.json",
 )
 
 
@@ -100,6 +101,13 @@ INVARIANTS: Tuple = (
     ("BENCH_sharded.json", "query.bit_identical", "true", None),
     ("BENCH_sharded.json", "stream.recompiles", "eq0", None),
     ("BENCH_sharded.json", "stream.patch_to_full_ratio", "ceil", 1.0),
+    ("BENCH_audit.json", "audit.overhead_fraction", "budget",
+     "audit.max_overhead_fraction"),
+    ("BENCH_audit.json", "audit.recompiles", "eq0", None),
+    ("BENCH_audit.json", "audit.false_positives", "eq0", None),
+    ("BENCH_audit.json", "detection.wal_scrub.detected", "true", None),
+    ("BENCH_audit.json", "detection.oracle.detected", "true", None),
+    ("BENCH_audit.json", "replication.digests_matched", "true", None),
 )
 
 #: ratios worth tracking across runs of the SAME config (higher = better)
@@ -111,6 +119,7 @@ RATIOS: Tuple = (
     ("BENCH_async_service.json", "concurrent.qps"),
     ("BENCH_window_algebra.json", "idempotent_union.speedup"),
     ("BENCH_window_algebra.json", "derived_aggregates.fusion_speedup"),
+    ("BENCH_audit.json", "audit.qps_audited"),
 )
 
 
@@ -194,7 +203,7 @@ def run_gate(root: str = ROOT, rel_frac: float = 0.4,
              require_all: bool = False) -> Tuple[List, List]:
     """Run every check.  Returns (rows, failures); each row is
     ``(label, ok, detail)``.  Files absent on disk are skipped unless
-    ``require_all`` (CI has all seven: five fresh + two committed)."""
+    ``require_all`` (CI has all eight: six fresh + two committed)."""
     rows: List[Tuple[str, bool, str]] = []
     for name in BASELINES:
         fresh = load_fresh(name, root)
@@ -224,7 +233,7 @@ def main(argv=None) -> int:
     ap.add_argument("--root", default=ROOT,
                     help="directory holding the BENCH_*.json files")
     ap.add_argument("--require-all", action="store_true",
-                    help="fail if any of the seven files is missing")
+                    help="fail if any of the eight files is missing")
     args = ap.parse_args(argv)
     rel_frac = (args.rel_frac if args.rel_frac is not None
                 else (0.25 if args.smoke else 0.4))

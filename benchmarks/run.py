@@ -19,6 +19,7 @@ def main(argv=None) -> None:
 
     from benchmarks import (
         bench_async_service,
+        bench_audit,
         bench_dbindex_eagr,
         bench_iindex,
         bench_kernels,
@@ -50,6 +51,7 @@ def main(argv=None) -> None:
         "window_algebra": lambda: bench_window_algebra.run(
             n=4_000 if args.fast else 20_000),
         "obs_overhead": lambda: bench_obs_overhead.run(smoke=args.fast),
+        "audit": lambda: bench_audit.run(smoke=args.fast),
     }
     # bench_sharded_stream is deliberately NOT in this table: it must force
     # the host-platform device count before jax initializes, so it runs

@@ -971,6 +971,14 @@ class Session:
 
         return analyze_session(self, spec, values=values)
 
+    def digest(self, include_results: bool = False) -> Dict:
+        """Per-version content digest (crc32 over graph + plan arrays,
+        optionally the result vectors) — the leader/follower self-check
+        channel; see :func:`repro.obs.audit.session_digest`."""
+        from repro.obs.audit import session_digest
+
+        return session_digest(self, include_results=include_results)
+
     # ------------------------------------------------------------------ #
     def update(self, batch) -> Dict:
         """Stream one UpdateBatch through every stateful index + plan.

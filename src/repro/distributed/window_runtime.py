@@ -582,7 +582,12 @@ def patch_sharded_plan(
                                  headroom=splan.headroom, stats=stats)
         out.stats["last_patch_bytes"] = out.size_bytes()
         if wire is not None:
-            wire.append({"kind": "resync", "index": index})
+            from repro.obs.audit import plan_crc
+
+            # stamp the post-apply content digest: a follower replaying
+            # this message self-checks against it (apply_wire_message)
+            wire.append({"kind": "resync", "index": index,
+                         "plan_crc": plan_crc(out)})
         return out
 
     if (index.stats.get("last_full_rebuild")
@@ -742,7 +747,7 @@ def patch_sharded_plan(
         last_patch_per_shard=per_shard.tolist(),
         patched_bytes_total=stats.get("patched_bytes_total", 0) + patch_bytes,
     )
-    return dataclasses.replace(
+    out = dataclasses.replace(
         splan,
         num_blocks=index.num_blocks,
         p1_seg=p1_seg, p1_gather=p1_gather,
@@ -751,19 +756,38 @@ def patch_sharded_plan(
         e1=e1, e1_ids=e1_ids, e2=e2, e2_ids=e2_ids,
         stats=stats,
     )
+    if wire is not None:
+        from repro.obs.audit import plan_crc
+
+        # post-apply content digest of the plan this message produces —
+        # a follower replaying it self-checks (apply_wire_message)
+        wire[-1]["plan_crc"] = plan_crc(out)
+    return out
 
 
 # ---------------------------------------------------------------------- #
 #  Replication messages (the patch stream on the wire)
 # ---------------------------------------------------------------------- #
-def apply_wire_message(splan: ShardedDBPlan, msg: Dict) -> ShardedDBPlan:
+class WireDivergenceError(RuntimeError):
+    """A replayed wire message produced a plan whose content digest does
+    not match the leader's ``plan_crc`` stamp (the follower held different
+    pre-patch state, or the message was corrupted in transit)."""
+
+
+def apply_wire_message(splan: ShardedDBPlan, msg: Dict,
+                       verify: bool = True) -> ShardedDBPlan:
     """Replay one :func:`patch_sharded_plan` wire message on a follower's
     plan.  The follower must hold the same plan state the leader held
     before the message was produced (apply the stream in order, no gaps);
     positions and row ids in a ``"patch"`` message are absolute, so the
     replay is exactly the leader's device scatters.  A ``"resync"``
     message (leader rebuilt) carries the full index and rebuilds the
-    follower the same deterministic way."""
+    follower the same deterministic way.
+
+    When the message carries the leader's post-apply ``plan_crc`` stamp
+    and ``verify`` is on, the follower recomputes its own plan digest and
+    raises :class:`WireDivergenceError` on mismatch — silent follower
+    drift is converted into an immediate, attributed failure."""
     import jax.numpy as jnp
 
     if msg["kind"] == "resync":
@@ -779,8 +803,9 @@ def apply_wire_message(splan: ShardedDBPlan, msg: Dict) -> ShardedDBPlan:
         stats = dict(splan.stats)
         stats["version"] = stats.get("version", 0) + 1
         stats["rebuilds"] = stats.get("rebuilds", 0) + 1
-        return build_sharded_plan(base, splan.mesh, splan.axes,
-                                  headroom=splan.headroom, stats=stats)
+        out = build_sharded_plan(base, splan.mesh, splan.axes,
+                                 headroom=splan.headroom, stats=stats)
+        return _verify_wire_crc(out, msg, verify)
 
     assert msg["kind"] == "patch", msg["kind"]
     p1_seg, p1_gather = splan.p1_seg, splan.p1_gather
@@ -808,7 +833,7 @@ def apply_wire_message(splan: ShardedDBPlan, msg: Dict) -> ShardedDBPlan:
             jnp.asarray(msg["e2_rows"]))
     stats = dict(splan.stats)
     stats["version"] = stats.get("version", 0) + 1
-    return dataclasses.replace(
+    out = dataclasses.replace(
         splan,
         num_blocks=int(msg["num_blocks"]),
         p1_seg=p1_seg, p1_gather=p1_gather,
@@ -817,6 +842,24 @@ def apply_wire_message(splan: ShardedDBPlan, msg: Dict) -> ShardedDBPlan:
         e1=e1, e2=e2,
         stats=stats,
     )
+    return _verify_wire_crc(out, msg, verify)
+
+
+def _verify_wire_crc(out: ShardedDBPlan, msg: Dict,
+                     verify: bool) -> ShardedDBPlan:
+    expect = msg.get("plan_crc")
+    if verify and expect is not None:
+        from repro.obs.audit import plan_crc
+
+        got = plan_crc(out)
+        if got != int(expect):
+            _obs.get_registry().counter(
+                "repro_wire_divergence_total",
+                "wire-replayed plans failing the leader's plan_crc").inc()
+            raise WireDivergenceError(
+                f"{msg['kind']} replay digest mismatch: "
+                f"leader={int(expect):#010x} follower={got:#010x}")
+    return out
 
 
 def encode_wire_message(msg: Dict) -> bytes:
@@ -827,6 +870,8 @@ def encode_wire_message(msg: Dict) -> bytes:
 
     arrays: Dict[str, np.ndarray] = {}
     meta: Dict = {"kind": msg["kind"]}
+    if msg.get("plan_crc") is not None:
+        meta["plan_crc"] = int(msg["plan_crc"])
     if msg["kind"] == "resync":
         idx = msg["index"]
         meta["n"] = int(idx.n)
@@ -877,7 +922,10 @@ def decode_wire_message(data: bytes) -> Dict:
             link_owner_offsets=arrays["link_owner_offsets"],
             stats=dict(meta["stats"]),
         )
-        return {"kind": "resync", "index": index}
+        out = {"kind": "resync", "index": index}
+        if "plan_crc" in meta:
+            out["plan_crc"] = int(meta["plan_crc"])
+        return out
     msg: Dict = {
         "kind": "patch",
         "num_blocks": int(meta["num_blocks"]),
@@ -892,6 +940,8 @@ def decode_wire_message(data: bytes) -> Dict:
     for key in ("e1", "e2"):
         msg[f"{key}_ids"] = arrays[f"{key}_ids"]
         msg[f"{key}_rows"] = arrays[f"{key}_rows"] if meta[f"has_{key}"] else None
+    if "plan_crc" in meta:
+        msg["plan_crc"] = int(meta["plan_crc"])
     return msg
 
 

@@ -116,19 +116,26 @@ def _install_collectors(reg, tracer) -> None:
             help="total jit cache entries across tracked executors",
         ).set(_api.recompile_count())
 
+    # the drop-delta high-water marks live on the *registry*, keyed per
+    # tracer: re-running enable() with the same registry + tracer must not
+    # reset the seen-state (a fresh closure restarting at 0 would fold the
+    # whole historical drop count in again — double counting).  collect()
+    # itself replaces by name, so the collector never stacks either.
+    seen_map = reg.__dict__.setdefault("_trace_drop_seen", {})
+    seen_map.setdefault(id(tracer), 0)
+
     def _collect_trace_drops(r):
         r.counter(
             "repro_trace_spans_dropped_total",
             help="trace events evicted from the ring buffer on overflow",
         )
         # counters are monotonic: fold in only the delta since last scrape
-        seen = _collect_trace_drops._seen
         now = int(getattr(tracer, "dropped_hint", 0))
-        if now > seen:
-            r.counter("repro_trace_spans_dropped_total").inc(now - seen)
-            _collect_trace_drops._seen = now
+        if now > seen_map[id(tracer)]:
+            r.counter("repro_trace_spans_dropped_total").inc(
+                now - seen_map[id(tracer)])
+            seen_map[id(tracer)] = now
 
-    _collect_trace_drops._seen = 0
     reg.collect(_collect_recompiles, name="recompiles")
     reg.collect(_collect_trace_drops, name="trace_drops")
 

@@ -96,6 +96,10 @@ class Tracer:
         self._tls = threading.local()
         self._epoch = time.perf_counter()
         self.dropped_hint = 0  # events appended beyond capacity (approx.)
+        # recorded thread names, by ident: threads register themselves via
+        # name_thread() so the export stays legible even after they exit
+        # (threading.enumerate() only sees live threads)
+        self._thread_names: Dict[int, str] = {}
 
     # ------------------------------------------------------------------ #
     def _now(self) -> float:
@@ -124,6 +128,19 @@ class Tracer:
         ``parent`` links it explicitly; it never joins the thread stack."""
         return Span(self, next(self._ids), parent, name, cat, args,
                     on_stack=False)
+
+    def name_thread(self, name: Optional[str] = None,
+                    tid: Optional[int] = None) -> None:
+        """Register a thread's display name for the Chrome export (a
+        ``"ph": "M"`` metadata row in Perfetto).  Call with no arguments
+        from a worker's run loop to self-register under its
+        ``threading.Thread`` name — flusher, replica-tail, scrubber and
+        auditor threads all do."""
+        if tid is None:
+            tid = threading.get_ident()
+        if name is None:
+            name = threading.current_thread().name
+        self._thread_names[int(tid)] = str(name)
 
     def instant(self, name: str, cat: str = "repro", **args) -> None:
         """A zero-duration marker event."""
@@ -183,14 +200,21 @@ class Tracer:
     def chrome_trace(self) -> Dict:
         """The Chrome/Perfetto ``trace_event`` JSON object."""
         evs = self.events()
-        # thread-name metadata rows make the viewer legible
+        # thread-name metadata rows make the viewer legible: live threads
+        # from the runtime, overlaid by name_thread() registrations (the
+        # recorded name survives the thread — and wins, since a worker
+        # knows its role better than a default "Thread-7")
         names = {}
         for th in threading.enumerate():
             names[th.ident] = th.name
-        meta = [
+        names.update(self._thread_names)
+        meta = [{"name": "process_name", "ph": "M", "pid": os.getpid(),
+                 "tid": 0, "args": {"name": "repro-serving"}}]
+        meta += [
             {"name": "thread_name", "ph": "M", "pid": os.getpid(),
              "tid": tid, "args": {"name": names.get(tid, f"thread-{tid}")}}
-            for tid in sorted({e["tid"] for e in evs})
+            for tid in sorted({e["tid"] for e in evs}
+                              | set(self._thread_names))
         ]
         return {"traceEvents": meta + evs, "displayTimeUnit": "ms"}
 
@@ -241,6 +265,9 @@ class NullTracer:
         return _NULL_SPAN
 
     def instant(self, name: str, cat: str = "repro", **args) -> None:
+        pass
+
+    def name_thread(self, name=None, tid=None) -> None:
         pass
 
     def events(self) -> List:

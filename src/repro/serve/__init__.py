@@ -14,17 +14,28 @@
 * :class:`~repro.serve.replica.ReadReplica` — follower session tailing
   the WAL by byte offset (pinned reads, explicit catch-up + flip).
 * :class:`~repro.serve.flight.FlightRecorder` — bounded ring of
-  structured serving events (admit/shed/flush/WAL-commit/patch/flip),
-  dumped automatically when a ticket fails.
+  structured serving events (admit/shed/flush/WAL-commit/patch/flip,
+  plus audit/scrub/divergence findings), dumped automatically when a
+  ticket fails.
+* :class:`~repro.serve.health.HealthMonitor` /
+  :class:`~repro.serve.health.HealthServer` — liveness/readiness state
+  machine over pressure, lag, SLO, audit and scrub signals, served over
+  stdlib HTTP (``/metrics`` ``/healthz`` ``/readyz`` ``/debug``).
 """
 
 from repro.serve.engine import ServeEngine  # noqa: F401
 from repro.serve.flight import FlightRecorder  # noqa: F401
+from repro.serve.health import (  # noqa: F401
+    HealthMonitor,
+    HealthServer,
+    all_monitors,
+)
 from repro.serve.replica import ReadReplica  # noqa: F401
 from repro.serve.wal import (  # noqa: F401
     WriteAheadLog,
     read_wal_records,
     replay_wal,
+    scan_wal_entries,
 )
 from repro.serve.window_service import (  # noqa: F401
     AffectedOwnerCache,

@@ -44,8 +44,14 @@ __all__ = ["FlightRecorder", "EVENT_TYPES", "all_recorders"]
 #:              affected, reorganized)
 #: flip       — the serving head moved to a new MVCC version (version)
 #: failure    — a ticket finished with an error (cls, error)
+#: audit      — shadow-oracle mismatch on a served sample (spec, vertex,
+#:              version, expected, got — hex bytes)
+#: scrub      — at-rest CRC failure in a sealed WAL record (version,
+#:              offset, detail)
+#: divergence — follower digest disagreed with the leader's (version,
+#:              wal_offset, detail)
 EVENT_TYPES = ("admit", "shed", "flush", "wal_commit", "patch", "flip",
-               "failure")
+               "failure", "audit", "scrub", "divergence")
 
 # every live recorder, for the CI failure-artifact hook: a test that never
 # touched the service it built can still dump whatever flew this process
@@ -66,6 +72,10 @@ class FlightRecorder:
         self._seq = 0
         self._clock = clock
         self._epoch = clock()
+        #: wall-clock time of the epoch: ``anchor_unix_s + t_s`` converts
+        #: an event's relative stamp to Unix time, correlating flight
+        #: records with trace and metric timestamps
+        self.anchor_unix_s = time.time()
         self.dropped = 0
         _RECORDERS.add(self)
 
@@ -95,9 +105,12 @@ class FlightRecorder:
         return list(self._events)
 
     def dump_json(self, path) -> str:
-        """Write ``{"dropped": N, "events": [...]}`` to ``path``."""
+        """Write ``{"dropped": N, "anchor_unix_s": T, "events": [...]}``
+        to ``path`` (``anchor_unix_s + event["t_s"]`` is Unix time)."""
         with open(path, "w") as f:
-            json.dump({"dropped": self.dropped, "events": self.dump()},
+            json.dump({"dropped": self.dropped,
+                       "anchor_unix_s": self.anchor_unix_s,
+                       "events": self.dump()},
                       f, indent=2, default=str)
         return str(path)
 

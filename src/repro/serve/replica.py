@@ -17,23 +17,38 @@ a consistent old version (never a half-applied one), and
 bit-identical to what the leader served at that version: both sides ran
 the same batches through the same deterministic maintenance.
 
+Self-checking: the leader stamps a per-version content digest into the
+WAL (:meth:`repro.serve.wal.WriteAheadLog.append_digest`); when
+``verify_digests`` is on (the default) the replica recomputes its own
+digest whenever a poll lands on the leader's digest for its current head
+version and compares (:func:`repro.obs.audit.digests_match`).  The first
+disagreement is quarantined as an :class:`~repro.obs.audit.AuditFinding`
+on :attr:`ReadReplica.divergence`, attributed to the first bad version
+*and* the digest record's WAL byte offset — the health monitor treats it
+as a hard failure.  ``check_plan_digest=False`` skips the plan component
+for replicas deliberately running a different engine configuration (graph
+and result digests must still agree: the bit-identity invariant).
+
 For sharded runtimes the update stream can also be propagated *below* the
 session, as the changed-tile-group patch messages of
 :func:`repro.distributed.window_runtime.patch_sharded_plan` (its ``wire``
 output) applied with :func:`repro.distributed.window_runtime.
 apply_wire_message` — shipping only the dirty tiles instead of re-deriving
-them.  The WAL path above remains the source of truth; the wire path is
-the transport optimization for followers that already hold a plan shard.
+them (wire messages carry their own ``plan_crc`` stamp).  The WAL path
+above remains the source of truth; the wire path is the transport
+optimization for followers that already hold a plan shard.
 """
 
 from __future__ import annotations
 
+import json
 import os
+import threading
 from typing import Dict, Optional
 
 from repro import obs as _obs
 from repro.core.api import Session
-from repro.serve.wal import read_wal_records
+from repro.serve.wal import scan_wal_entries
 from repro.serve.window_service import WindowService
 
 
@@ -49,7 +64,10 @@ class ReadReplica:
     """
 
     def __init__(self, graph, specs, wal_path, *, bucket: int = 8,
-                 use_cache: bool = True, obs=None, **session_kw):
+                 use_cache: bool = True, obs=None,
+                 verify_digests: bool = True,
+                 verify_results: bool = False,
+                 check_plan_digest: bool = True, **session_kw):
         self.path = os.fspath(wal_path)
         self.obs = obs if obs is not None else _obs.get_registry()
         self.session = Session(graph, specs, **session_kw)
@@ -61,10 +79,29 @@ class ReadReplica:
         self._offset = 0  # byte offset of the next unread WAL record
         self.records_applied = 0
         self.polls = 0
+        #: compare leader digest records against a locally recomputed one
+        self.verify_digests = bool(verify_digests)
+        #: fold served result vectors into the local digest (end-to-end
+        #: served-bytes check; costs one fused launch per group per digest)
+        self.verify_results = bool(verify_results)
+        #: compare the plan component too — disable when this replica runs
+        #: a different engine configuration than the leader
+        self.check_plan_digest = bool(check_plan_digest)
+        #: first divergence finding (None while leader and follower agree)
+        self.divergence = None
+        self.digest_checks = 0
+        self._tail_thread: Optional[threading.Thread] = None
+        self._tail_stop = threading.Event()
         self._m_polls = self.obs.counter(
             "repro_replica_polls_total", "WAL tail polls")
         self._m_records = self.obs.counter(
             "repro_replica_records_total", "WAL records applied")
+        self._m_digest_checks = self.obs.counter(
+            "repro_replica_digest_checks_total",
+            "leader digests verified against local recomputation")
+        self._m_divergence = self.obs.counter(
+            "repro_replica_divergence_total",
+            "leader/follower digest disagreements (quarantined)")
         self._g_lag_bytes = self.obs.gauge(
             "repro_replica_lag_bytes", "unapplied WAL bytes at last check")
         self._g_lag_versions = self.obs.gauge(
@@ -80,31 +117,56 @@ class ReadReplica:
         a point-in-time version.  Unconsumed records stay unconsumed (the
         offset only advances past applied records), so a later poll
         resumes exactly there.
+
+        Digest records encountered along the way are verified against a
+        locally recomputed digest when they land on the current head
+        version (see ``verify_digests``); the first disagreement is
+        quarantined on :attr:`divergence`.
         """
-        records, end = read_wal_records(self.path, self._offset)
+        entries, end = scan_wal_entries(self.path, self._offset)
         self.polls += 1
         self._m_polls.inc()
-        if not records:
-            self._offset = max(self._offset, end)
-            return 0
         applied = 0
-        stop_at = None
-        for i, (version, batch) in enumerate(records):
-            if upto_version is not None and version > upto_version:
-                stop_at = i
+        offset = end if entries else max(self._offset, end)
+        for e in entries:
+            if upto_version is not None and e["version"] > upto_version:
+                # partial consumption: resume exactly at this record
+                offset = e["offset"]
                 break
-            self.session.update(batch)
-            applied += 1
-        if stop_at is None:
-            self._offset = end
-        else:
-            # partial consumption: read_wal_records reports only the final
-            # offset, so rescan the applied prefix for the byte boundary of
-            # the first unapplied record
-            self._offset = _offset_after(self.path, self._offset, stop_at)
+            if e["kind"] == "batch":
+                self.session.update(e["batch"])
+                applied += 1
+            elif self.verify_digests \
+                    and e["version"] == self.session.version:
+                self._check_digest(e)
+        self._offset = max(self._offset, offset)
         self.records_applied += applied
         self._m_records.inc(applied)
         return applied
+
+    def _check_digest(self, entry: Dict) -> None:
+        """Compare the leader's digest record against a fresh local one."""
+        from repro.obs.audit import AuditFinding, digests_match
+
+        leader = entry["digest"]
+        local = self.session.digest(
+            include_results=self.verify_results
+            and "result_crc" in leader)
+        self.digest_checks += 1
+        self._m_digest_checks.inc()
+        ok, detail = digests_match(leader, local,
+                                   check_plans=self.check_plan_digest)
+        if ok or self.divergence is not None:
+            return
+        self.divergence = AuditFinding(
+            source="digest", version=int(entry["version"]),
+            expected=json.dumps(leader, sort_keys=True).encode(),
+            got=json.dumps(local, sort_keys=True).encode(),
+            wal_offset=int(entry["offset"]), detail=detail)
+        self._m_divergence.inc()
+        self.service.flight.record(
+            "divergence", version=int(entry["version"]),
+            wal_offset=int(entry["offset"]), detail=detail)
 
     def flip(self) -> int:
         """Publish the apply head to readers (one snapshot swap)."""
@@ -116,6 +178,37 @@ class ReadReplica:
         n = self.poll()
         self.flip()
         return n
+
+    # --------------------------- background tail ----------------------- #
+    @property
+    def tailing(self) -> bool:
+        return self._tail_thread is not None and self._tail_thread.is_alive()
+
+    def start_tailing(self, interval_s: float = 0.05) -> "ReadReplica":
+        """Catch up continuously on a background thread (``replica-tail``)
+        until :meth:`stop_tailing`."""
+        if not self.tailing:
+            self._tail_stop.clear()
+            self._tail_thread = threading.Thread(
+                target=self._tail_loop, args=(float(interval_s),),
+                name="replica-tail", daemon=True)
+            self._tail_thread.start()
+        return self
+
+    def stop_tailing(self, timeout: float = 10.0) -> None:
+        self._tail_stop.set()
+        if self._tail_thread is not None:
+            self._tail_thread.join(timeout=timeout)
+            self._tail_thread = None
+
+    def _tail_loop(self, interval_s: float) -> None:
+        self.service.tracer.name_thread()
+        while not self._tail_stop.is_set():
+            try:
+                self.catch_up()
+            except Exception:
+                pass  # a tail hiccup must not kill the thread; retry
+            self._tail_stop.wait(interval_s)
 
     # ------------------------------------------------------------------ #
     @property
@@ -156,29 +249,9 @@ class ReadReplica:
     def stats(self) -> Dict:
         out = dict(self.service.stats)
         out.update(records_applied=self.records_applied, polls=self.polls,
-                   lag=self.lag)
+                   digest_checks=self.digest_checks,
+                   diverged=self.divergence is not None,
+                   tailing=self.tailing, lag=self.lag)
+        if self.divergence is not None:
+            out["divergence"] = self.divergence.to_dict()
         return out
-
-
-def _offset_after(path, offset: int, n_records: int) -> int:
-    """Byte offset after the first ``n_records`` complete records past
-    ``offset`` (0 = whole-file scan from the header)."""
-    import zlib
-
-    from repro.serve.wal import _FILE_MAGIC, _REC_HDR, _REC_MAGIC
-
-    with open(path, "rb") as f:
-        data = f.read()
-    off = int(offset)
-    if off == 0:
-        off = len(_FILE_MAGIC)
-    for _ in range(n_records):
-        magic, _version, length, crc = _REC_HDR.unpack_from(data, off)
-        if magic != _REC_MAGIC:
-            break
-        end = off + _REC_HDR.size + length
-        if end > len(data) or zlib.crc32(data[off + _REC_HDR.size: end]
-                                         ) & 0xFFFFFFFF != crc:
-            break
-        off = end
-    return off

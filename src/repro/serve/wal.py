@@ -13,14 +13,31 @@ File format (all little-endian)::
     header  := b"GWAL1\\n\\x00\\x00"                      (8 bytes, once)
     record  := b"WREC" | version u64 | payload_len u64 | crc32 u32
                | payload
+    digest  := b"WDIG" | version u64 | payload_len u64 | crc32 u32
+               | payload
     payload := the UpdateBatch codec bytes
                (:func:`repro.core.updates.encode_update_batch`)
+               for records; sorted-key JSON (the
+               :func:`repro.obs.audit.session_digest` dict) for digests
 
 ``version`` is the session version the batch *produces* (monotonically
 increasing).  The crc32 covers the payload only; readers stop cleanly at
 the first truncated or checksum-failing record — a torn tail from a crash
 mid-append loses at most the records not yet fsynced, never corrupts the
 prefix.
+
+Digest records (:meth:`WriteAheadLog.append_digest`) are the leader's
+per-version content attestation: a follower recomputes its own digest
+after applying record ``v`` and compares (:meth:`repro.serve.replica.
+ReadReplica.poll`), attributing any divergence to the first bad version
+and the digest record's byte offset.  :func:`read_wal_records` *skips*
+digest records, so every pre-digest reader (replay, recovery, replicas
+polling by offset) keeps working on logs with or without them;
+:func:`scan_wal_entries` surfaces both record kinds with their byte
+offsets.  :attr:`WriteAheadLog.synced_size` is the durable high-water
+mark — everything below it is *sealed*, which is the region the
+background scrubber (:class:`repro.obs.audit.WalScrubber`) sweeps for
+at-rest CRC rot without ever mistaking an in-flight tail for corruption.
 
 fsync policy is *batched* (group commit): ``append`` always writes through
 to the OS (so process crashes lose nothing), and the file is fsynced once
@@ -31,6 +48,7 @@ comes first — so a power failure loses at most one commit group.
 
 from __future__ import annotations
 
+import json
 import os
 import struct
 import time
@@ -46,6 +64,7 @@ from repro.core.updates import (
 
 _FILE_MAGIC = b"GWAL1\n\x00\x00"
 _REC_MAGIC = b"WREC"
+_DIG_MAGIC = b"WDIG"
 _REC_HDR = struct.Struct("<4sQQI")  # magic, version, payload_len, crc32
 
 
@@ -97,8 +116,12 @@ class WriteAheadLog:
             os.fsync(self._f.fileno())
         self._unsynced = 0
         self._last_sync = time.perf_counter()
+        #: durable high-water mark: byte size of the *sealed* region
+        #: (everything below it has been fsynced — the scrubber's domain)
+        self.synced_size = self._f.tell()
         # telemetry
         self.appends = 0
+        self.digest_appends = 0
         self.fsyncs = 0
         self.bytes_written = 0
         self.last_fsync_s = 0.0  # duration of the most recent fsync
@@ -115,22 +138,44 @@ class WriteAheadLog:
         if version is None:
             version = (self.last_version or 0) + 1
         payload = encode_update_batch(batch)
-        rec = _REC_HDR.pack(_REC_MAGIC, version, len(payload),
+        self._write_record(_REC_MAGIC, int(version), payload, sync)
+        self.appends += 1
+        self._m_appends.inc()
+        self.last_version = int(version)
+        return int(version)
+
+    def append_digest(self, digest: Dict,
+                      version: Optional[int] = None,
+                      sync: Optional[bool] = None) -> int:
+        """Append one content-digest record (``WDIG``) for ``version``.
+
+        ``digest`` is the :func:`repro.obs.audit.session_digest` dict (any
+        JSON-able dict works); the leader stamps one after publishing each
+        version so followers can self-check after every poll.  Digest
+        records do not advance :attr:`last_version` and are invisible to
+        :func:`read_wal_records` / :meth:`replay` — they are attestation,
+        not history."""
+        if version is None:
+            version = int(digest.get("version", self.last_version or 0))
+        payload = json.dumps(digest, sort_keys=True).encode()
+        self._write_record(_DIG_MAGIC, int(version), payload, sync)
+        self.digest_appends += 1
+        return int(version)
+
+    def _write_record(self, magic: bytes, version: int, payload: bytes,
+                      sync: Optional[bool]) -> None:
+        rec = _REC_HDR.pack(magic, version, len(payload),
                             zlib.crc32(payload) & 0xFFFFFFFF) + payload
         self._f.write(rec)
         self._f.flush()  # through to the OS: ordered before the apply
-        self.appends += 1
         self.bytes_written += len(rec)
-        self._m_appends.inc()
         self._m_bytes.inc(len(rec))
         self._unsynced += 1
-        self.last_version = int(version)
         now = time.perf_counter()
         if sync or (sync is None and (
                 self._unsynced >= self.fsync_every
                 or now - self._last_sync >= self.fsync_interval_s)):
             self.sync()
-        return int(version)
 
     def sync(self) -> None:
         """Force the batched fsync (group commit boundary)."""
@@ -142,6 +187,7 @@ class WriteAheadLog:
             self._m_commit.observe(self._unsynced)
             self.fsyncs += 1
             self._unsynced = 0
+            self.synced_size = self._f.tell()
         self._last_sync = time.perf_counter()
 
     def close(self) -> None:
@@ -166,10 +212,12 @@ class WriteAheadLog:
         return {
             "path": self.path,
             "appends": self.appends,
+            "digest_appends": self.digest_appends,
             "fsyncs": self.fsyncs,
             "bytes_written": self.bytes_written,
             "last_version": self.last_version,
             "unsynced": self._unsynced,
+            "synced_size": self.synced_size,
             "records": self.appends,
             "bytes": self.bytes_written,
             "resumed_records": self.resumed_records,
@@ -202,7 +250,7 @@ def read_wal_records(
     records: List[Tuple[int, UpdateBatch]] = []
     while off + _REC_HDR.size <= len(data):
         magic, version, length, crc = _REC_HDR.unpack_from(data, off)
-        if magic != _REC_MAGIC:
+        if magic not in (_REC_MAGIC, _DIG_MAGIC):
             break  # corrupt header: stop at the valid prefix
         end = off + _REC_HDR.size + length
         if end > len(data):
@@ -210,9 +258,55 @@ def read_wal_records(
         payload = data[off + _REC_HDR.size: end]
         if zlib.crc32(payload) & 0xFFFFFFFF != crc:
             break  # torn write inside the payload
-        records.append((int(version), decode_update_batch(payload)))
+        if magic == _REC_MAGIC:
+            records.append((int(version), decode_update_batch(payload)))
+        # digest records are attestation, not history: skip but advance
         off = end
     return records, off
+
+
+def scan_wal_entries(path, offset: int = 0) -> Tuple[List[Dict], int]:
+    """Decode *every* record kind from ``offset`` with byte attribution.
+
+    Like :func:`read_wal_records` but surfaces digest records too.  Returns
+    ``(entries, end_offset)`` where each entry is a dict with ``kind``
+    (``"batch"`` or ``"digest"``), ``version``, ``offset`` (byte position
+    of the record header — the attribution handle for divergence
+    findings), and either ``batch`` (an
+    :class:`~repro.core.updates.UpdateBatch`) or ``digest`` (the decoded
+    JSON dict).  Stops at the first truncated / checksum-failing record,
+    same as :func:`read_wal_records`.
+    """
+    with open(path, "rb") as f:
+        data = f.read()
+    off = int(offset)
+    if off == 0:
+        if len(data) < len(_FILE_MAGIC):
+            return [], 0
+        if data[: len(_FILE_MAGIC)] != _FILE_MAGIC:
+            raise ValueError(f"{path!r} is not a WAL file (bad header)")
+        off = len(_FILE_MAGIC)
+    entries: List[Dict] = []
+    while off + _REC_HDR.size <= len(data):
+        magic, version, length, crc = _REC_HDR.unpack_from(data, off)
+        if magic not in (_REC_MAGIC, _DIG_MAGIC):
+            break
+        end = off + _REC_HDR.size + length
+        if end > len(data):
+            break
+        payload = data[off + _REC_HDR.size: end]
+        if zlib.crc32(payload) & 0xFFFFFFFF != crc:
+            break
+        if magic == _REC_MAGIC:
+            entries.append({"kind": "batch", "version": int(version),
+                            "offset": off,
+                            "batch": decode_update_batch(payload)})
+        else:
+            entries.append({"kind": "digest", "version": int(version),
+                            "offset": off,
+                            "digest": json.loads(payload.decode())})
+        off = end
+    return entries, off
 
 
 def replay_wal(path) -> Iterator[Tuple[int, UpdateBatch]]:

@@ -341,6 +341,9 @@ class WindowService:
         #: events captured at the moment a ticket last failed (the
         #: automatic dump; None until a failure happens)
         self.last_flight_record: Optional[List[Dict]] = None
+        #: shadow auditor sampling served tickets (None = auditing off);
+        #: see :meth:`attach_auditor`
+        self.auditor = None
         self._m_flushes = self.obs.counter(
             "repro_flushes_total", "queue flushes by trigger",
             labels=("reason",))
@@ -432,6 +435,15 @@ class WindowService:
                            point=vertex is not None,
                            version=self._active.version)
         return t
+
+    def attach_auditor(self, auditor) -> "WindowService":
+        """Attach a :class:`~repro.obs.audit.ShadowAuditor`: every flush
+        offers its served tickets for sampling (the auditor re-evaluates
+        asynchronously; a full audit queue drops samples, never blocking
+        serving).  Call ``auditor.start()`` separately."""
+        self.auditor = auditor
+        auditor.bind(self)
+        return self
 
     def submit(self, spec, vertex: Optional[int] = None,
                values=None) -> Ticket:
@@ -596,6 +608,11 @@ class WindowService:
         self.flight.record("flush", reason=reason, tickets=len(pending),
                            served=ok, failed=len(pending) - ok,
                            version=view.version)
+        if self.auditor is not None:
+            try:
+                self.auditor.observe_flush(view, pending)
+            except Exception:
+                pass  # auditing is evidence, never a serving failure
         if ok < len(pending):
             self._on_ticket_failure([t for t in pending
                                      if t.error is not None])
@@ -637,6 +654,8 @@ class WindowService:
             },
             "last_flight_record": self.last_flight_record,
         }
+        if self.auditor is not None:
+            report["audit"] = self.auditor.stats
         return report
 
     # ------------------------------------------------------------------ #
@@ -738,10 +757,16 @@ class AsyncWindowService(WindowService):
                  default_class: str = "interactive",
                  max_pending: int = 256,
                  wal: Union[None, str, "object"] = None,
+                 wal_digests: bool = True, digest_results: bool = False,
                  policy=None, obs=None, tracer=None, now_fn=None):
         super().__init__(session, bucket=bucket, auto_flip=auto_flip,
                          use_cache=use_cache, obs=obs, tracer=tracer,
                          now_fn=now_fn)
+        #: stamp a per-version content digest into the WAL after every
+        #: update (the replica self-check channel); ``digest_results``
+        #: additionally folds the served result vectors in
+        self.wal_digests = bool(wal_digests)
+        self.digest_results = bool(digest_results)
         self.classes = dict(DEFAULT_REQUEST_CLASSES)
         if classes:
             self.classes.update(classes)
@@ -984,6 +1009,7 @@ class AsyncWindowService(WindowService):
         return self.flush(reason)
 
     def _flusher_loop(self) -> None:
+        self.tracer.name_thread()
         while True:
             reason = None
             with self._cv:
@@ -1018,7 +1044,18 @@ class AsyncWindowService(WindowService):
                 self.flight.record("wal_commit",
                                    version=self.session.version + 1,
                                    records=int(getattr(batch, "size", 0)))
-            return super().update(batch)
+            reports = super().update(batch)
+            if self.wal is not None and self.wal_digests \
+                    and hasattr(self.wal, "append_digest"):
+                # the leader's per-version content attestation: written
+                # after apply (the digest covers the *produced* state) but
+                # still under the update lock, so record/digest pairs stay
+                # adjacent and in version order in the log
+                self.wal.append_digest(
+                    self.session.digest(
+                        include_results=self.digest_results),
+                    version=self.session.version)
+            return reports
 
     # ------------------------------------------------------------------ #
     @property

@@ -75,6 +75,14 @@ def _dump_failure_artifacts(test_name: str) -> None:
                 fr.dump_json(os.path.join(d, f"{slug}.flight{i}.json"))
     except Exception:
         pass
+    try:  # latest health report of every live monitor
+        from repro.serve.health import all_monitors
+
+        for i, mon in enumerate(all_monitors()):
+            with open(os.path.join(d, f"{slug}.health{i}.json"), "w") as f:
+                json.dump(mon.report(), f, indent=2, default=str)
+    except Exception:
+        pass
 
 
 @pytest.hookimpl(hookwrapper=True)

@@ -1,0 +1,500 @@
+"""Online correctness auditing (ISSUE 9): shadow-oracle sampling, content
+digests, WAL scrubbing, and the health/readiness surface.
+
+The detection tests are *fault-injection* tests: each corrupts exactly one
+thing (a byte in a sealed WAL record, one element of a served result
+vector, one attribute value of a follower's base graph) and asserts the
+matching channel detects it AND attributes it — version, vertex, WAL byte
+offset — while the clean paths stay at zero findings, zero recompiles,
+and never block serving.
+"""
+
+import json
+import os
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro import obs  # noqa: E402
+from repro.core import api  # noqa: E402
+from repro.core.api import QuerySpec, Session  # noqa: E402
+from repro.core.query import brute_force  # noqa: E402
+from repro.core.windows import KHopWindow  # noqa: E402
+from repro.graphs.generators import erdos_renyi  # noqa: E402
+from repro.obs import MetricsRegistry  # noqa: E402
+from repro.obs.audit import (  # noqa: E402
+    AuditFinding,
+    ShadowAuditor,
+    WalScrubber,
+    digests_match,
+    oracle_single,
+    session_digest,
+)
+from repro.serve import (  # noqa: E402
+    AsyncWindowService,
+    HealthMonitor,
+    HealthServer,
+    ReadReplica,
+    WriteAheadLog,
+    read_wal_records,
+    scan_wal_entries,
+)
+from repro.serve.wal import _REC_HDR  # noqa: E402
+
+from test_updates import mixed  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _obs_off():
+    obs.disable()
+    yield
+    obs.disable()
+
+
+def int_graph(n, deg, seed):
+    g = erdos_renyi(n, deg, directed=False, seed=seed)
+    vals = np.random.default_rng(seed + 1).integers(0, 50, g.n)
+    return g.with_attr("val", vals.astype(np.float64))
+
+
+SPECS = [QuerySpec(KHopWindow(2), "sum"), QuerySpec(KHopWindow(2), "min")]
+
+
+def make_session(seed=7, n=60):
+    g = int_graph(n, 2.5, seed)
+    return g, Session(g, SPECS, use_pallas=False)
+
+
+def stream_wal(wal_path, g, n_batches=3, seed=0, **svc_kw):
+    """Run a leader over ``n_batches`` updates, return the closed service."""
+    svc = AsyncWindowService(Session(g, SPECS, use_pallas=False), bucket=8,
+                             wal=wal_path, **svc_kw).start()
+    rng = np.random.default_rng(seed)
+    for _ in range(n_batches):
+        svc.update(mixed(svc.session.graph, rng, 3, 1))
+    svc.stop()
+    svc.wal.sync()
+    return svc
+
+
+# ---------------------------------------------------------------------- #
+#  Oracle + digest primitives
+# ---------------------------------------------------------------------- #
+def test_oracle_single_matches_brute_force_rows():
+    g, _ = make_session()
+    vals = np.asarray(g.attrs["val"], np.float64)
+    for agg in ("sum", "min", "avg"):
+        full = brute_force(g, KHopWindow(2), vals, agg, dtype=np.float32)
+        for v in (0, 7, 31, g.n - 1):
+            one = oracle_single(g, KHopWindow(2), vals, agg, v,
+                                dtype=np.float32)
+            assert np.asarray(one).tobytes() == np.asarray(
+                full[v], dtype=np.asarray(one).dtype).tobytes()
+
+
+def test_session_digest_deterministic_and_sensitive():
+    g, s1 = make_session()
+    _, s2 = make_session()
+    d1 = session_digest(s1, include_results=True)
+    d2 = session_digest(s2, include_results=True)
+    assert d1 == d2  # same construction → bitwise-identical digests
+    assert {"version", "graph_crc", "plan_crc", "result_crc"} <= set(d1)
+    ok, detail = digests_match(d1, d2)
+    assert ok and detail == "ok"
+    # one attribute value flips the graph digest
+    vals = np.asarray(g.attrs["val"]).copy()
+    vals[3] += 1.0
+    s3 = Session(g.with_attr("val", vals), SPECS, use_pallas=False)
+    d3 = session_digest(s3)
+    assert d3["graph_crc"] != d1["graph_crc"]
+    ok, detail = digests_match(d1, d3)
+    assert not ok and "graph_crc" in detail
+    # a leader without result digests never fails a follower that has them
+    ok, _ = digests_match({"graph_crc": d1["graph_crc"]}, d1)
+    assert ok
+    # plan component can be opted out (heterogeneous engine configs)
+    mismatch_plan = dict(d1, plan_crc=d1["plan_crc"] ^ 1)
+    assert not digests_match(d1, mismatch_plan)[0]
+    assert digests_match(d1, mismatch_plan, check_plans=False)[0]
+
+
+# ---------------------------------------------------------------------- #
+#  WAL digest records
+# ---------------------------------------------------------------------- #
+def test_wal_digest_records_interleave_and_old_readers_skip(tmp_path):
+    g, _ = make_session()
+    path = tmp_path / "leader.wal"
+    svc = stream_wal(path, g, n_batches=4, digest_results=True)
+    assert svc.wal.digest_appends == 4
+    entries, _ = scan_wal_entries(path)
+    kinds = [(e["kind"], e["version"]) for e in entries]
+    assert kinds == [(k, v) for v in range(1, 5)
+                     for k in ("batch", "digest")]
+    for e in entries:
+        if e["kind"] == "digest":
+            assert {"version", "graph_crc", "plan_crc",
+                    "result_crc"} <= set(e["digest"])
+    # pre-digest readers see only the batches (backward compatibility):
+    records, _ = read_wal_records(path)
+    assert [v for v, _ in records] == [1, 2, 3, 4]
+    # and crash recovery replays a digest-bearing log to the leader state
+    restored = Session.restore_from_wal(g, SPECS, path, use_pallas=False)
+    assert restored.version == 4
+    ok, detail = digests_match(svc.session.digest(include_results=True),
+                               restored.digest(include_results=True))
+    assert ok, detail
+
+
+def test_wal_digest_disabled_writes_no_digest_records(tmp_path):
+    g, _ = make_session()
+    path = tmp_path / "plain.wal"
+    svc = stream_wal(path, g, n_batches=2, wal_digests=False)
+    assert svc.wal.digest_appends == 0
+    assert all(e["kind"] == "batch" for e in scan_wal_entries(path)[0])
+
+
+# ---------------------------------------------------------------------- #
+#  Replica digest self-check
+# ---------------------------------------------------------------------- #
+def test_replica_digest_checks_clean_20_batch_stream(tmp_path):
+    """Acceptance: leader/follower digests match bitwise for every version
+    of a 20-batch replication stream."""
+    g, _ = make_session()
+    path = tmp_path / "leader.wal"
+    stream_wal(path, g, n_batches=20)
+    rep = ReadReplica(g, SPECS, path, use_pallas=False)
+    applied = rep.catch_up()
+    assert applied == 20 and rep.version == 20
+    assert rep.digest_checks == 20
+    assert rep.divergence is None
+    assert rep.stats["diverged"] is False
+
+
+def test_replica_divergence_detected_and_attributed(tmp_path):
+    g, _ = make_session()
+    path = tmp_path / "leader.wal"
+    stream_wal(path, g, n_batches=3)
+    # follower boots from a base graph that differs in ONE attribute value
+    vals = np.asarray(g.attrs["val"]).copy()
+    vals[0] += 1.0
+    reg = MetricsRegistry()
+    rep = ReadReplica(g.with_attr("val", vals), SPECS, path, obs=reg,
+                      use_pallas=False)
+    rep.catch_up()
+    f = rep.divergence
+    assert isinstance(f, AuditFinding) and f.source == "digest"
+    assert f.version == 1  # FIRST bad version, not the last
+    assert f.wal_offset is not None and f.wal_offset > 0
+    assert "graph_crc" in f.detail
+    # the digest record it disagreed with really lives at that offset
+    entry = [e for e in scan_wal_entries(path)[0]
+             if e["offset"] == f.wal_offset]
+    assert len(entry) == 1 and entry[0]["kind"] == "digest" \
+        and entry[0]["version"] == 1
+    assert reg.snapshot()["repro_replica_divergence_total"][
+        "values"][0]["value"] == 1.0
+    assert any(e["event"] == "divergence"
+               for e in rep.service.flight.dump())
+    # only the FIRST divergence is quarantined (versions 2, 3 also differ)
+    assert rep.digest_checks == 3
+
+
+def test_replica_verify_digests_off_ignores_divergence(tmp_path):
+    g, _ = make_session()
+    path = tmp_path / "leader.wal"
+    stream_wal(path, g, n_batches=2)
+    vals = np.asarray(g.attrs["val"]).copy()
+    vals[0] += 1.0
+    rep = ReadReplica(g.with_attr("val", vals), SPECS, path,
+                      verify_digests=False, use_pallas=False)
+    rep.catch_up()
+    assert rep.digest_checks == 0 and rep.divergence is None
+
+
+def test_replica_upto_version_still_replays_held_digests(tmp_path):
+    g, _ = make_session()
+    path = tmp_path / "leader.wal"
+    stream_wal(path, g, n_batches=3)
+    rep = ReadReplica(g, SPECS, path, use_pallas=False)
+    assert rep.poll(upto_version=1) == 1
+    assert rep.digest_checks == 1  # version-1 digest consumed with it
+    assert rep.poll() == 2  # resumes exactly at the version-2 record
+    assert rep.digest_checks == 3 and rep.divergence is None
+
+
+# ---------------------------------------------------------------------- #
+#  WAL scrubber
+# ---------------------------------------------------------------------- #
+def test_scrubber_detects_sealed_byte_flip_with_offset(tmp_path):
+    g, _ = make_session()
+    path = tmp_path / "leader.wal"
+    stream_wal(path, g, n_batches=3)
+    target = [e for e in scan_wal_entries(path)[0]
+              if e["kind"] == "batch"][1]  # the version-2 record
+    with open(path, "r+b") as f:  # flip one payload byte at rest
+        f.seek(target["offset"] + _REC_HDR.size + 3)
+        b = f.read(1)
+        f.seek(-1, 1)
+        f.write(bytes([b[0] ^ 0xFF]))
+    reg = MetricsRegistry()
+    scrub = WalScrubber(path, obs=reg)
+    new = scrub.scrub_once()
+    assert len(new) == 1
+    f = new[0]
+    assert f.source == "scrub" and f.version == 2 \
+        and f.wal_offset == target["offset"]
+    assert scrub.corruptions == 1
+    assert reg.snapshot()["repro_wal_scrub_corruptions_total"][
+        "values"][0]["value"] == 1.0
+    # deduped: the same rot is not re-reported every sweep
+    assert scrub.scrub_once() == []
+    assert scrub.corruptions == 1 and scrub.sweeps == 2
+
+
+def test_scrubber_clean_log_zero_false_positives(tmp_path):
+    g, _ = make_session()
+    path = tmp_path / "leader.wal"
+    stream_wal(path, g, n_batches=4, digest_results=True)
+    scrub = WalScrubber(path)
+    for _ in range(3):
+        assert scrub.scrub_once() == []
+    assert scrub.corruptions == 0
+    assert scrub.records_verified == 3 * 8  # 4 batches + 4 digests/sweep
+
+
+def test_scrubber_never_judges_the_unsealed_tail(tmp_path):
+    """Only records wholly below the fsync high-water mark are judged: a
+    garbage in-flight tail is a crash artifact, not corruption."""
+    g, _ = make_session()
+    path = tmp_path / "live.wal"
+    rng = np.random.default_rng(0)
+    wal = WriteAheadLog(path, fsync_every=1)
+    wal.append(mixed(g, rng, 3, 1), version=1)
+    sealed = wal.synced_size
+    assert sealed == os.path.getsize(path)
+    # written-but-unsynced garbage past the mark (fsync_every now huge)
+    wal.fsync_every = 10**9
+    wal.fsync_interval_s = 10**9
+    wal._f.write(b"\xde\xad\xbe\xef" * 8)
+    wal._f.flush()
+    assert wal.synced_size == sealed < os.path.getsize(path)
+    scrub = WalScrubber(wal)
+    assert scrub.scrub_once() == []
+    assert scrub.corruptions == 0 and scrub.records_verified == 1
+    wal._f.close()
+
+
+def test_scrubber_background_thread_detects(tmp_path):
+    g, _ = make_session()
+    path = tmp_path / "leader.wal"
+    stream_wal(path, g, n_batches=2)
+    entry = scan_wal_entries(path)[0][0]
+    with open(path, "r+b") as f:
+        f.seek(entry["offset"] + _REC_HDR.size)
+        b = f.read(1)
+        f.seek(-1, 1)
+        f.write(bytes([b[0] ^ 0x01]))
+    found = threading.Event()
+    scrub = WalScrubber(path, interval_s=0.01)
+    with scrub:
+        for _ in range(500):
+            if scrub.corruptions:
+                found.set()
+                break
+            threading.Event().wait(0.01)
+    assert found.is_set()
+    assert scrub.findings[0].wal_offset == entry["offset"]
+
+
+# ---------------------------------------------------------------------- #
+#  Shadow auditor
+# ---------------------------------------------------------------------- #
+def test_auditor_clean_run_zero_mismatches_zero_recompiles():
+    g, sess = make_session()
+    svc = AsyncWindowService(sess, bucket=8)
+    aud = ShadowAuditor(sample_rate=1.0, full_row_rate=1.0)
+    svc.attach_auditor(aud)
+    aud.start()
+    rng = np.random.default_rng(0)
+    svc.query(0, vertex=1)  # warm every executor before counting
+    svc.query(1)
+    before = api.recompile_count()
+    for _ in range(3):
+        svc.update(mixed(svc.session.graph, rng, 3, 1))
+        for v in (1, 5, 9):
+            svc.query(0, vertex=v)
+        svc.query(1)
+    assert aud.drain(30)
+    aud.stop()
+    assert aud.sampled > 0 and aud.audited == aud.sampled
+    assert aud.mismatches == 0 and aud.findings == []
+    assert api.recompile_count() == before  # auditing is recompile-free
+    assert svc.debug_report()["audit"]["mismatches"] == 0
+
+
+def test_auditor_detects_corrupted_served_vector():
+    g, sess = make_session()
+    reg = MetricsRegistry()
+    svc = AsyncWindowService(sess, bucket=8, obs=reg)
+    aud = ShadowAuditor(sample_rate=1.0, obs=reg)
+    svc.attach_auditor(aud)
+    aud.start()
+    svc.query(0)  # warm the cache's full vector for group 0
+    svc.cache._entries[0]["vectors"]["sum"][7] += 1.0  # one poisoned cell
+    t = svc.submit(0, vertex=7)
+    svc.flush()
+    t.get(timeout=5)  # serving itself is oblivious: the hit is served
+    assert aud.drain(30)
+    aud.stop()
+    assert aud.mismatches == 1
+    f = aud.findings[0]
+    assert f.source == "oracle" and f.vertex == 7 and f.version == 0
+    assert f.spec == "khop[2]/sum@val"
+    assert f.expected != f.got and len(f.expected) == len(f.got) == 4
+    d = f.to_dict()
+    assert bytes.fromhex(d["expected"]) == f.expected
+    assert reg.snapshot()["repro_audit_mismatches_total"][
+        "values"][0]["value"] == 1.0
+    assert any(e["event"] == "audit" for e in svc.flight.dump())
+
+
+def test_auditor_sampling_rate_is_exact_and_never_blocks():
+    g, sess = make_session()
+    svc = AsyncWindowService(sess, bucket=8)
+    # worker NOT started and queue of 2: the 3rd+ sample must drop, and no
+    # Ticket.get may ever wait on the audit queue
+    aud = ShadowAuditor(sample_rate=1.0, max_queue=2)
+    svc.attach_auditor(aud)
+    for v in range(8):
+        t = svc.submit(0, vertex=v)
+        svc.flush()
+        t.get(timeout=1.0)  # would deadlock if sampling blocked serving
+    assert aud.sampled == 8
+    assert aud.dropped_samples == 6 and aud._q.qsize() == 2
+    # error-diffusion accumulator: 25% of 8 point reads = exactly 2
+    aud2 = ShadowAuditor(sample_rate=0.25, max_queue=64)
+    svc2 = AsyncWindowService(Session(g, SPECS, use_pallas=False), bucket=8)
+    svc2.attach_auditor(aud2)
+    for v in range(8):
+        svc2.submit(0, vertex=v)
+    svc2.flush()
+    assert aud2.sampled == 2
+
+
+# ---------------------------------------------------------------------- #
+#  Health monitor + endpoint
+# ---------------------------------------------------------------------- #
+class _StubReplica:
+    divergence = None
+    lag = {"behind_bytes": 0, "unpublished_versions": 0}
+    stats = {}
+
+
+class _StubAuditor:
+    mismatches = 0
+    stats = {}
+
+
+def test_health_state_machine_soft_vs_hard():
+    reg = MetricsRegistry()
+    rep, aud = _StubReplica(), _StubAuditor()
+    mon = HealthMonitor(replicas=[rep], auditors=[aud], obs=reg,
+                        max_lag_bytes=100)
+    assert mon.check()["state"] == "ready" and mon.ready
+    # soft failure (lag) degrades but does not fail
+    rep.lag = {"behind_bytes": 10_000, "unpublished_versions": 0}
+    r = mon.check()
+    assert r["state"] == "degraded" and not r["ready"] and r["live"]
+    assert r["failing"] == ["replica_lag"]
+    # hard failure (audit finding) fails even with the soft one cleared
+    rep.lag = {"behind_bytes": 0, "unpublished_versions": 0}
+    aud.mismatches = 2
+    r = mon.check()
+    assert r["state"] == "failed" and r["failing"] == ["audit"]
+    # divergence is hard too
+    aud.mismatches = 0
+    rep.divergence = AuditFinding(source="digest", version=3, wal_offset=99,
+                                  detail="graph_crc: ...")
+    r = mon.check()
+    assert r["state"] == "failed" and r["failing"] == ["replica_divergence"]
+    snap = reg.snapshot()
+    assert snap["repro_health_ready"]["values"][0]["value"] == 0.0
+    assert snap["repro_health_live"]["values"][0]["value"] == 1.0
+
+
+def test_health_endpoint_round_trip_tier1_smoke():
+    """CI smoke: ephemeral-port boot, /metrics + /readyz round-trip, and
+    readiness flips to 503 when a finding lands."""
+    reg, _ = obs.enable()
+    g, sess = make_session(n=40)
+    svc = AsyncWindowService(sess, bucket=8, obs=reg)
+    svc.query(0, vertex=1)
+    aud = ShadowAuditor(obs=reg)
+    svc.attach_auditor(aud)
+    mon = HealthMonitor(service=svc, auditors=[aud], obs=reg)
+    with HealthServer(mon) as hs:
+        assert hs.running and hs.port > 0
+        r = urllib.request.urlopen(hs.url + "/readyz", timeout=5)
+        assert r.status == 200
+        body = json.loads(r.read())
+        assert body["ready"] is True and body["state"] == "ready"
+        metrics = urllib.request.urlopen(
+            hs.url + "/metrics", timeout=5).read().decode()
+        assert "repro_health_ready 1" in metrics
+        assert "repro_flushes_total" in metrics
+        r = urllib.request.urlopen(hs.url + "/healthz", timeout=5)
+        assert json.loads(r.read())["live"] is True
+        dbg = json.loads(urllib.request.urlopen(
+            hs.url + "/debug", timeout=5).read())
+        assert dbg["health"]["state"] == "ready"
+        assert "stats" in dbg["service"]
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(hs.url + "/nope", timeout=5)
+        assert ei.value.code == 404
+        # a quarantined finding flips readiness to 503 (liveness stays 200)
+        aud.mismatches = 1
+        aud.findings.append(AuditFinding(source="oracle", version=1))
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(hs.url + "/readyz", timeout=5)
+        assert ei.value.code == 503
+        assert json.loads(ei.value.read())["failing"] == ["audit"]
+        r = urllib.request.urlopen(hs.url + "/healthz", timeout=5)
+        assert r.status == 200
+    assert not hs.running
+
+
+def test_health_monitor_registered_for_failure_artifacts():
+    from repro.serve.health import all_monitors
+
+    mon = HealthMonitor()
+    assert mon in all_monitors()
+    assert mon.report()["state"] == "ready"  # report() runs a first check
+
+
+# ---------------------------------------------------------------------- #
+#  Wire-format digest stamp
+# ---------------------------------------------------------------------- #
+def test_wire_message_plan_crc_round_trips():
+    from repro.distributed.window_runtime import (
+        decode_wire_message,
+        encode_wire_message,
+    )
+
+    msg = {
+        "kind": "patch", "num_blocks": 2, "patches": [],
+        "block_ids": np.empty(0, np.int64),
+        "block_sizes": np.empty(0, np.int32),
+        "e1_ids": np.empty(0, np.int64), "e1_rows": None,
+        "e2_ids": np.empty(0, np.int64), "e2_rows": None,
+        "plan_crc": 0xDEADBEEF,
+    }
+    out = decode_wire_message(encode_wire_message(msg))
+    assert out["plan_crc"] == 0xDEADBEEF
+    # a stamp-free message stays stamp-free (pre-digest compatibility)
+    del msg["plan_crc"]
+    assert "plan_crc" not in decode_wire_message(encode_wire_message(msg))

@@ -351,3 +351,81 @@ def test_trace_drop_counter_exposed_and_monotonic():
     assert snap3["repro_trace_spans_dropped_total"]["values"][0][
         "value"] == float(tr.dropped_hint) > dropped
     assert "repro_trace_spans_dropped_total" in reg.prometheus()
+
+
+def test_reenable_same_registry_does_not_double_count_drops():
+    """ISSUE 9 satellite: obs.enable(registry=r, tracer=t) called twice
+    must be idempotent — re-running _install_collectors used to reset the
+    drop-delta seen-state, folding the whole historical drop count in
+    again on the next scrape (double counting)."""
+    tr = Tracer(capacity=4)
+    reg = MetricsRegistry()
+    obs.enable(registry=reg, tracer=tr)
+    for i in range(10):
+        with tr.span(f"s{i}"):
+            pass
+    dropped = reg.snapshot()[
+        "repro_trace_spans_dropped_total"]["values"][0]["value"]
+    assert dropped == float(tr.dropped_hint) > 0
+    # re-enable with the SAME registry + tracer (e.g. a test harness
+    # round-tripping enable/disable): nothing may be re-counted
+    obs.enable(registry=reg, tracer=tr)
+    again = reg.snapshot()[
+        "repro_trace_spans_dropped_total"]["values"][0]["value"]
+    assert again == dropped
+    # and the collector did not stack either: one more drop folds once
+    tr.instant("overflow")
+    for _ in range(2):
+        with tr.span("x"):
+            pass
+    final = reg.snapshot()[
+        "repro_trace_spans_dropped_total"]["values"][0]["value"]
+    assert final == float(tr.dropped_hint)
+
+
+def test_name_thread_metadata_survives_thread_exit():
+    """ISSUE 9 satellite: worker threads self-register display names; the
+    Chrome export carries `"ph": "M"` thread_name rows for them even after
+    the thread has exited (threading.enumerate() no longer sees it)."""
+    tr = Tracer()
+
+    def worker():
+        tr.name_thread()  # registers "audit-worker-x" by ident
+        with tr.span("work"):
+            pass
+
+    th = threading.Thread(target=worker, name="audit-worker-x")
+    th.start()
+    th.join()
+    evs = tr.chrome_trace()["traceEvents"]
+    names = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert "audit-worker-x" in names
+    # one process_name row anchors the whole pid in Perfetto
+    assert any(e["ph"] == "M" and e["name"] == "process_name" for e in evs)
+    # explicit-name form wins over the Thread name
+    tr.name_thread("custom-role")
+    evs = tr.chrome_trace()["traceEvents"]
+    names = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert "custom-role" in names
+    # NullTracer compiles the call out
+    NullTracer().name_thread("whatever")
+
+
+def test_flight_recorder_wall_clock_anchor(tmp_path):
+    """ISSUE 9 satellite: dump_json carries anchor_unix_s so the
+    perf_counter-relative t_s stamps correlate with wall-clock metric and
+    trace timestamps."""
+    import time as _time
+
+    from repro.serve.flight import FlightRecorder
+
+    before = _time.time()
+    fr = FlightRecorder(capacity=8)
+    after = _time.time()
+    assert before <= fr.anchor_unix_s <= after
+    fr.record("flip", version=1)
+    out = json.loads(open(fr.dump_json(tmp_path / "f.json")).read())
+    assert out["anchor_unix_s"] == fr.anchor_unix_s
+    assert out["events"][0]["t_s"] >= 0.0
