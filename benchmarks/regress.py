@@ -1,7 +1,7 @@
 """Bench regression gate: diff fresh BENCH_*.json against committed baselines.
 
-Eight benchmark result files are committed at the repo root; CI re-runs
-six of them (smoke mode) and overwrites the workspace copies.  This gate
+Nine benchmark result files are committed at the repo root; CI re-runs
+seven of them (smoke mode) and overwrites the workspace copies.  This gate
 then checks, per file:
 
 * **absolute invariants** — properties that must hold in ANY run at ANY
@@ -50,6 +50,7 @@ BASELINES = (
     "BENCH_obs_overhead.json",
     "BENCH_sharded.json",
     "BENCH_audit.json",
+    "BENCH_cluster.json",
 )
 
 
@@ -108,6 +109,13 @@ INVARIANTS: Tuple = (
     ("BENCH_audit.json", "detection.wal_scrub.detected", "true", None),
     ("BENCH_audit.json", "detection.oracle.detected", "true", None),
     ("BENCH_audit.json", "replication.digests_matched", "true", None),
+    ("BENCH_cluster.json", "scaling.bit_identical", "true", None),
+    ("BENCH_cluster.json", "scaling.recompiles", "eq0", None),
+    ("BENCH_cluster.json", "scaling.speedup_2", "floor", 1.7),
+    ("BENCH_cluster.json", "scaling.speedup_4", "floor", 3.0),
+    ("BENCH_cluster.json", "recovery.bit_identical", "true", None),
+    ("BENCH_cluster.json", "recovery.speedup", "floor", 1.0),
+    ("BENCH_cluster.json", "adaptive.p99_improved", "true", None),
 )
 
 #: ratios worth tracking across runs of the SAME config (higher = better)
@@ -120,6 +128,8 @@ RATIOS: Tuple = (
     ("BENCH_window_algebra.json", "idempotent_union.speedup"),
     ("BENCH_window_algebra.json", "derived_aggregates.fusion_speedup"),
     ("BENCH_audit.json", "audit.qps_audited"),
+    ("BENCH_cluster.json", "scaling.qps.4"),
+    ("BENCH_cluster.json", "recovery.speedup"),
 )
 
 
@@ -203,7 +213,7 @@ def run_gate(root: str = ROOT, rel_frac: float = 0.4,
              require_all: bool = False) -> Tuple[List, List]:
     """Run every check.  Returns (rows, failures); each row is
     ``(label, ok, detail)``.  Files absent on disk are skipped unless
-    ``require_all`` (CI has all eight: six fresh + two committed)."""
+    ``require_all`` (CI has all nine: seven fresh + two committed)."""
     rows: List[Tuple[str, bool, str]] = []
     for name in BASELINES:
         fresh = load_fresh(name, root)
@@ -233,7 +243,7 @@ def main(argv=None) -> int:
     ap.add_argument("--root", default=ROOT,
                     help="directory holding the BENCH_*.json files")
     ap.add_argument("--require-all", action="store_true",
-                    help="fail if any of the eight files is missing")
+                    help="fail if any of the nine files is missing")
     args = ap.parse_args(argv)
     rel_frac = (args.rel_frac if args.rel_frac is not None
                 else (0.25 if args.smoke else 0.4))

@@ -20,6 +20,7 @@ def main(argv=None) -> None:
     from benchmarks import (
         bench_async_service,
         bench_audit,
+        bench_cluster,
         bench_dbindex_eagr,
         bench_iindex,
         bench_kernels,
@@ -52,6 +53,7 @@ def main(argv=None) -> None:
             n=4_000 if args.fast else 20_000),
         "obs_overhead": lambda: bench_obs_overhead.run(smoke=args.fast),
         "audit": lambda: bench_audit.run(smoke=args.fast),
+        "cluster": lambda: bench_cluster.run(smoke=args.fast),
     }
     # bench_sharded_stream is deliberately NOT in this table: it must force
     # the host-platform device count before jax initializes, so it runs

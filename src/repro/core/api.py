@@ -1073,31 +1073,88 @@ class Session:
             applied += 1
         return applied
 
+    def save_checkpoint(self, directory) -> Tuple[int, str]:
+        """Write a snapshot checkpoint of this session's graph + digest to
+        ``directory`` (:mod:`repro.serve.checkpoint`); returns
+        ``(version, path)``.  Pair with ``restore_from_wal(...,
+        checkpoint=directory)`` for bounded-tail recovery."""
+        from repro.serve.checkpoint import save_checkpoint
+
+        return save_checkpoint(self, directory)
+
+    @classmethod
+    def from_checkpoint(cls, path, specs, **kw) -> "Session":
+        """Rebuild a session from one checkpoint file (no WAL tail).
+
+        The checkpoint's section CRCs and stamped ``graph_crc`` are
+        verified on load; the restored session resumes version numbering
+        at the checkpoint version.  Bit-identity holds because every
+        engine state is a deterministic function of the graph — but the
+        freshly built *plan bytes* may legitimately differ from the
+        writer's incrementally patched ones, so follower digest checks
+        against this session must skip the plan component
+        (``check_plan_digest=False``)."""
+        from repro.serve.checkpoint import load_checkpoint
+
+        version, graph, _digest = load_checkpoint(path)
+        session = cls(graph, specs, **kw)
+        session.version = int(version)
+        return session
+
     @classmethod
     def restore_from_wal(cls, g: Graph, specs, wal, *,
-                         upto_version: Optional[int] = None, **kw):
+                         upto_version: Optional[int] = None,
+                         checkpoint=None, **kw):
         """Crash recovery: rebuild a session by replaying a write-ahead log.
 
         ``g`` and ``specs`` must be the *base* graph and compiled specs the
         crashed session started from (the WAL records every batch applied
-        since); ``wal`` is a log file path, an open
-        :class:`~repro.serve.wal.WriteAheadLog`, or any iterable of
-        ``(version, batch)`` pairs.  ``upto_version`` stops the replay
-        early (point-in-time recovery).  All other kwargs are forwarded to
-        the constructor — they must match the crashed session's for
-        bit-identical results.
+        since); ``wal`` is a log file path, a WAL segment directory, an
+        open :class:`~repro.serve.wal.WriteAheadLog` /
+        :class:`~repro.serve.wal.SegmentedWriteAheadLog`, or any iterable
+        of ``(version, batch)`` pairs.  ``upto_version`` stops the replay
+        early (point-in-time recovery).
+
+        ``checkpoint`` names a checkpoint directory (or a single
+        checkpoint file): recovery then starts from the newest usable
+        checkpoint at or below ``upto_version`` and replays only the
+        bounded WAL *tail* past it, instead of the whole log — ``g`` is
+        ignored in that case (the checkpoint carries the graph).  When no
+        usable checkpoint exists, recovery silently falls back to the
+        full replay.  All other kwargs are forwarded to the constructor —
+        they must match the crashed session's for bit-identical results.
         """
+        session = None
+        after_version = 0
+        if checkpoint is not None:
+            from repro.serve.checkpoint import latest_checkpoint
+
+            ckpt_path = os.fspath(checkpoint)
+            if os.path.isdir(ckpt_path):
+                found = latest_checkpoint(ckpt_path,
+                                          upto_version=upto_version)
+                ckpt_path = found[1] if found else None
+            if ckpt_path is not None:
+                session = cls.from_checkpoint(ckpt_path, specs, **kw)
+                after_version = session.version
         if hasattr(wal, "replay"):
             records = list(wal.replay())
+        elif isinstance(wal, (str, os.PathLike)) and os.path.isdir(wal):
+            from repro.serve.wal import read_segmented_records
+
+            records = read_segmented_records(wal, after_version)
         elif isinstance(wal, (str, os.PathLike)):
             from repro.serve.wal import read_wal_records
 
             records = read_wal_records(wal)[0]
         else:
             records = list(wal)
-        session = cls(g, specs, **kw)
+        if session is None:
+            session = cls(g, specs, **kw)
         for item in records:
             version, batch = item if isinstance(item, tuple) else (None, item)
+            if version is not None and version <= after_version:
+                continue  # below the checkpoint: already folded in
             if upto_version is not None and version is not None \
                     and version > upto_version:
                 break

@@ -73,6 +73,20 @@ class SLOTracker:
             self._within.labels(cls).inc()
 
     # ------------------------------------------------------------------ #
+    def counts(self, cls: str) -> Dict[str, float]:
+        """Raw cumulative counters for ``cls`` (``ok`` / ``error`` /
+        ``shed`` / ``within``) — the delta source for controllers that
+        score *windowed* attainment between steps rather than the
+        cumulative ratio (:class:`~repro.serve.window_service.
+        SLOController`).  All zeros under a :class:`~repro.obs.metrics.
+        NullRegistry`."""
+        return {
+            "ok": float(self._req.labels(cls, "ok").value),
+            "error": float(self._req.labels(cls, "error").value),
+            "shed": float(self._req.labels(cls, "shed").value),
+            "within": float(self._within.labels(cls).value),
+        }
+
     def report(self) -> Dict[str, Dict]:
         """Per-class scorecard: count/ok/error/shed, attainment in [0, 1]
         (ok-and-within-target over ok), and p50/p95/p99 in milliseconds."""

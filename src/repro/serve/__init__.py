@@ -9,20 +9,47 @@
 * :class:`~repro.serve.window_service.AsyncWindowService` — continuous
   batching on top: deadline-driven background flusher, staleness-aware
   backpressure/load shedding, and WAL durability (append-before-apply).
+* :class:`~repro.serve.window_service.SLOController` — closes the SLO
+  loop: adapts per-class effective delays and the fill threshold from
+  measured attainment, within declared bounds, with hysteresis.
 * :class:`~repro.serve.wal.WriteAheadLog` — crash-tolerant update log;
-  :meth:`repro.core.api.Session.restore_from_wal` replays it.
+  :class:`~repro.serve.wal.SegmentedWriteAheadLog` rotates it into
+  base-version-named segments (tailing cursors, safe truncation);
+  :meth:`repro.core.api.Session.restore_from_wal` replays either.
+* :mod:`~repro.serve.checkpoint` — pickle-free snapshot checkpoints so
+  recovery is checkpoint-load + bounded tail replay.
 * :class:`~repro.serve.replica.ReadReplica` — follower session tailing
-  the WAL by byte offset (pinned reads, explicit catch-up + flip).
+  the WAL by byte offset or ``(segment, offset)`` cursor (pinned reads,
+  explicit catch-up + flip, checkpoint rejoin).
+* :class:`~repro.serve.cluster.ReplicaSet` /
+  :class:`~repro.serve.cluster.WindowRouter` — the cluster tier: one
+  writer + N auto-catch-up followers, freshness/load routing with MVCC
+  pinning and failover, checkpoint + truncation policy.
 * :class:`~repro.serve.flight.FlightRecorder` — bounded ring of
   structured serving events (admit/shed/flush/WAL-commit/patch/flip,
   plus audit/scrub/divergence findings), dumped automatically when a
   ticket fails.
 * :class:`~repro.serve.health.HealthMonitor` /
   :class:`~repro.serve.health.HealthServer` — liveness/readiness state
-  machine over pressure, lag, SLO, audit and scrub signals, served over
-  stdlib HTTP (``/metrics`` ``/healthz`` ``/readyz`` ``/debug``).
+  machine over pressure, lag, SLO, quorum, audit and scrub signals,
+  served over stdlib HTTP (``/metrics`` ``/healthz`` ``/readyz``
+  ``/debug``).
 """
 
+from repro.serve.checkpoint import (  # noqa: F401
+    CheckpointCorruptError,
+    CheckpointDigestError,
+    latest_checkpoint,
+    list_checkpoints,
+    load_checkpoint,
+    save_checkpoint,
+)
+from repro.serve.cluster import (  # noqa: F401
+    ReplicaFailedError,
+    ReplicaSet,
+    RoutingError,
+    WindowRouter,
+)
 from repro.serve.engine import ServeEngine  # noqa: F401
 from repro.serve.flight import FlightRecorder  # noqa: F401
 from repro.serve.health import (  # noqa: F401
@@ -32,10 +59,16 @@ from repro.serve.health import (  # noqa: F401
 )
 from repro.serve.replica import ReadReplica  # noqa: F401
 from repro.serve.wal import (  # noqa: F401
+    SegmentedWriteAheadLog,
+    WalTruncatedError,
     WriteAheadLog,
+    list_segments,
+    read_segmented_records,
     read_wal_records,
     replay_wal,
+    scan_segmented_entries,
     scan_wal_entries,
+    seek_segmented,
 )
 from repro.serve.window_service import (  # noqa: F401
     AffectedOwnerCache,
@@ -43,6 +76,7 @@ from repro.serve.window_service import (  # noqa: F401
     DEFAULT_REQUEST_CLASSES,
     LoadShedError,
     RequestClass,
+    SLOController,
     Ticket,
     WindowService,
 )

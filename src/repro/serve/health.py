@@ -65,15 +65,22 @@ class HealthMonitor:
 
     #: checks whose failure means "falling behind" (degraded), not
     #: "answers untrusted" (failed)
-    SOFT_CHECKS = ("pressure", "replica_lag", "slo")
+    SOFT_CHECKS = ("pressure", "replica_lag", "slo", "fleet")
 
     def __init__(self, service=None, replicas: Sequence = (),
                  auditors: Sequence = (), scrubbers: Sequence = (),
+                 cluster=None,
                  obs=None, max_pressure: float = 0.9,
                  max_lag_bytes: int = 1 << 20,
                  max_lag_versions: int = 64,
                  min_slo_attainment: float = 0.5,
                  min_slo_samples: int = 20):
+        #: a :class:`~repro.serve.cluster.ReplicaSet`: the monitor then
+        #: tracks its writer + live fleet (quorum) and ``/debug`` carries
+        #: per-replica cursors and checkpoint state
+        self.cluster = cluster
+        if cluster is not None and service is None:
+            service = cluster.writer
         self.service = service
         self.replicas = list(replicas)
         self.auditors = list(auditors)
@@ -121,12 +128,18 @@ class HealthMonitor:
                 "detail": f"staleness pressure {p:.3f} "
                           f"(max {self.max_pressure})"}
 
-        # soft: replica lag / hard: replica divergence
-        for i, rep in enumerate(self.replicas):
+        # soft: replica lag / hard: replica divergence.  Dead replicas are
+        # not "lagging" — they are counted by the quorum check instead.
+        replicas = (list(self.cluster.replicas.values())
+                    if self.cluster is not None else self.replicas)
+        live_reps = [r for r in replicas if getattr(r, "alive", True)]
+        for i, rep in enumerate(replicas):
+            if not getattr(rep, "alive", True):
+                continue
             lag = rep.lag
             ok = (lag["behind_bytes"] <= self.max_lag_bytes
                   and lag["unpublished_versions"] <= self.max_lag_versions)
-            checks[f"replica_lag[{i}]" if len(self.replicas) > 1
+            checks[f"replica_lag[{i}]" if len(replicas) > 1
                    else "replica_lag"] = {
                 "ok": ok, "value": lag,
                 "detail": f"{lag['behind_bytes']}B behind, "
@@ -134,11 +147,31 @@ class HealthMonitor:
             div = getattr(rep, "divergence", None)
             if div is not None:
                 checks[f"replica_divergence[{i}]"
-                       if len(self.replicas) > 1
+                       if len(replicas) > 1
                        else "replica_divergence"] = {
                     "ok": False,
                     "detail": f"diverged at version {div.version} "
                               f"(wal offset {div.wal_offset}): {div.detail}"}
+
+        # quorum over the fleet: hard-fail when the writer is down or a
+        # majority of replicas is dead (no trustworthy capacity left);
+        # a dead minority only degrades (soft "fleet" check)
+        if replicas and (self.cluster is not None
+                         or any(hasattr(r, "alive") for r in replicas)):
+            n_live, n_total = len(live_reps), len(replicas)
+            dead = [getattr(r, "name", str(i))
+                    for i, r in enumerate(replicas)
+                    if not getattr(r, "alive", True)]
+            checks["quorum"] = {
+                "ok": live and 2 * n_live > n_total,
+                "value": {"live": n_live, "total": n_total},
+                "detail": (f"{n_live}/{n_total} replicas live"
+                           + ("" if live else "; writer down")
+                           + (f"; dead: {dead}" if dead else ""))}
+            if dead and 2 * n_live > n_total:
+                checks["fleet"] = {
+                    "ok": False, "value": dead,
+                    "detail": f"minority down: {dead}"}
 
         # soft: SLO attainment (only once enough tickets scored)
         if svc is not None and getattr(svc, "slo", None) is not None \
@@ -222,6 +255,13 @@ class HealthMonitor:
             out["scrubbers"] = [s.stats for s in self.scrubbers]
         if self.replicas:
             out["replicas"] = [r.stats for r in self.replicas]
+        if self.cluster is not None:
+            # per-replica lag + (segment, offset) cursors + checkpoint
+            # retention — the cluster operator's one-stop dump
+            try:
+                out["cluster"] = self.cluster.debug_info()
+            except Exception as e:  # debug must degrade, not 500
+                out["cluster"] = {"error": repr(e)}
         return out
 
 

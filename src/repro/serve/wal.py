@@ -110,7 +110,10 @@ class WriteAheadLog:
                 self.torn_truncations = 1
                 self._m_torn.inc()
         self._f = open(self.path, "ab")
-        if not existing:
+        # write the magic whenever the file is (or was truncated back to)
+        # empty — a kill mid-header-write leaves a <8-byte file whose torn
+        # tail IS the header, and resume must re-seed it
+        if self._f.tell() == 0:
             self._f.write(_FILE_MAGIC)
             self._f.flush()
             os.fsync(self._f.fileno())
@@ -312,3 +315,342 @@ def scan_wal_entries(path, offset: int = 0) -> Tuple[List[Dict], int]:
 def replay_wal(path) -> Iterator[Tuple[int, UpdateBatch]]:
     """Iterate ``(version, batch)`` over a log file's valid prefix."""
     return iter(read_wal_records(path)[0])
+
+
+# ---------------------------------------------------------------------- #
+#  Segmented WAL: a directory of GWAL1 files named by base version
+# ---------------------------------------------------------------------- #
+_SEG_SUFFIX = ".wal"
+
+
+class WalTruncatedError(RuntimeError):
+    """A reader's cursor (or required history) points below the oldest
+    retained segment — the records were truncated away.  Recover from a
+    checkpoint (:mod:`repro.serve.checkpoint`) instead of the log."""
+
+
+def segment_filename(base_version: int) -> str:
+    """Segment file name for the segment whose first record is
+    ``base_version`` (zero-padded so lexical order == version order)."""
+    return f"{int(base_version):012d}{_SEG_SUFFIX}"
+
+
+def list_segments(directory) -> List[Tuple[int, str]]:
+    """``[(base_version, path)]`` for every segment file, version order."""
+    directory = os.fspath(directory)
+    out: List[Tuple[int, str]] = []
+    try:
+        names = os.listdir(directory)
+    except FileNotFoundError:
+        return out
+    for name in names:
+        if not name.endswith(_SEG_SUFFIX):
+            continue
+        stem = name[: -len(_SEG_SUFFIX)]
+        if stem.isdigit():
+            out.append((int(stem), os.path.join(directory, name)))
+    out.sort()
+    return out
+
+
+def scan_segmented_entries(
+    directory, cursor: Optional[Tuple[int, int]] = None
+) -> Tuple[List[Dict], Tuple[int, int]]:
+    """:func:`scan_wal_entries` across a segment directory.
+
+    ``cursor`` is ``(segment_base, offset)`` — the resume handle a replica
+    passes back in (``None`` starts at the oldest retained segment).  Each
+    returned entry additionally carries ``"segment"`` (its segment's base
+    version).  Segment-boundary rules:
+
+    * a *sealed* segment (one with a successor) that scans clean to its
+      end-of-file advances the cursor to ``(next_base, 0)``;
+    * a sealed segment that stops early (torn/corrupt bytes mid-file) is
+      **held**, never skipped: the cursor stays inside it so no records
+      can be silently jumped over — the scrubber/health tier surfaces the
+      corruption;
+    * the last (active) segment behaves like the single-file scan: a
+      partially appended tail is simply retried on the next call.
+
+    Raises :class:`WalTruncatedError` when the cursor's segment no longer
+    exists (truncated away) — the reader must rebuild from a checkpoint.
+    """
+    segs = list_segments(directory)
+    if not segs:
+        return [], (cursor or (0, 0))
+    if cursor is None or cursor == (0, 0):
+        cur_base, cur_off = segs[0][0], 0
+    else:
+        cur_base, cur_off = int(cursor[0]), int(cursor[1])
+    bases = [b for b, _ in segs]
+    if cur_base not in bases:
+        raise WalTruncatedError(
+            f"cursor segment {cur_base} not in retained segments "
+            f"{bases[:3]}..{bases[-1:]} under {os.fspath(directory)!r}")
+    entries: List[Dict] = []
+    out_cursor = (cur_base, cur_off)
+    for i in range(bases.index(cur_base), len(segs)):
+        base, path = segs[i]
+        start = cur_off if base == cur_base else 0
+        if os.path.getsize(path) == 0:
+            # mid-rotation kill: created but never seeded — nothing to
+            # read, and nothing before it was skipped to get here
+            out_cursor = (base, start)
+            continue
+        es, end = scan_wal_entries(path, start)
+        for e in es:
+            e["segment"] = base
+        entries.extend(es)
+        sealed = i < len(segs) - 1
+        if sealed and end >= os.path.getsize(path):
+            out_cursor = (segs[i + 1][0], 0)
+        else:
+            out_cursor = (base, end)
+            if sealed:
+                break  # torn sealed segment: hold, never skip
+    return entries, out_cursor
+
+
+def seek_segmented(directory, after_version: int) -> Tuple[int, int]:
+    """Cursor positioned so the next *batch* record read has
+    ``version > after_version`` — the bounded-tail entry point after a
+    checkpoint restore.  Raises :class:`WalTruncatedError` when the needed
+    history was truncated away."""
+    segs = list_segments(directory)
+    after_version = int(after_version)
+    if not segs:
+        if after_version > 0:
+            raise WalTruncatedError(
+                f"no segments under {os.fspath(directory)!r} but history "
+                f"after version {after_version} was requested")
+        return (0, 0)
+    if segs[0][0] > after_version + 1:
+        raise WalTruncatedError(
+            f"oldest retained segment starts at version {segs[0][0]} but "
+            f"history from {after_version + 1} was requested")
+    idx = max(i for i, (b, _) in enumerate(segs) if b <= after_version + 1)
+    base, path = segs[idx]
+    es, end = scan_wal_entries(path)
+    for e in es:
+        if e["kind"] == "batch" and e["version"] > after_version:
+            return (base, e["offset"])
+    if idx < len(segs) - 1:
+        return (segs[idx + 1][0], 0)
+    return (base, end)
+
+
+def read_segmented_records(
+    directory, after_version: int = 0
+) -> List[Tuple[int, UpdateBatch]]:
+    """``(version, batch)`` across all retained segments with
+    ``version > after_version`` (replay/recovery entry point)."""
+    cursor = seek_segmented(directory, after_version)
+    entries, _ = scan_segmented_entries(directory, cursor)
+    return [(e["version"], e["batch"]) for e in entries
+            if e["kind"] == "batch" and e["version"] > int(after_version)]
+
+
+class SegmentedWriteAheadLog:
+    """A WAL split into rotated ``GWAL1`` segments named by base version.
+
+    Same append/digest/sync surface as :class:`WriteAheadLog` (the async
+    service and scrubber consume either through duck typing), plus:
+
+    * **rotation** — a new segment starts once the active one holds
+      ``rotate_records`` records or ``rotate_bytes`` bytes (checked before
+      each batch append, so a record and its digest always share a
+      segment); sealed segments are complete by construction (the active
+      file is synced before the new one is created);
+    * **truncation** — :meth:`truncate_upto` deletes sealed segments whose
+      entire version range is ``<= version``; callers must pick ``version
+      = min(slowest live replica, newest checkpoint)`` so no reader's
+      cursor and no recovery path is stranded;
+    * **resume** — sealed segments are validated end-to-end and a torn one
+      raises (history must never be silently skipped); only the *last*
+      segment gets the single-file torn-tail truncation, and an empty
+      trailing segment left by a kill mid-rotation is adopted as the
+      active segment.
+    """
+
+    def __init__(self, directory, *, rotate_bytes: int = 1 << 20,
+                 rotate_records: Optional[int] = None,
+                 fsync_every: int = 8, fsync_interval_s: float = 0.05,
+                 obs=None):
+        self.directory = os.fspath(directory)
+        os.makedirs(self.directory, exist_ok=True)
+        self.rotate_bytes = int(rotate_bytes) if rotate_bytes else 0
+        self.rotate_records = int(rotate_records) if rotate_records else 0
+        self.fsync_every = int(fsync_every)
+        self.fsync_interval_s = float(fsync_interval_s)
+        self._obs_explicit = obs
+        self.rotations = 0
+        self.truncated_segments = 0
+        # counters folded in from sealed (closed) segments
+        self._sealed = {"appends": 0, "digest_appends": 0, "fsyncs": 0,
+                        "bytes_written": 0, "resumed_records": 0,
+                        "torn_truncations": 0}
+        segs = list_segments(self.directory)
+        for base, path in segs[:-1]:  # sealed: validate, never truncate
+            if os.path.getsize(path) == 0:
+                continue  # empty non-trailing segment: nothing to lose
+            records, end = read_wal_records(path)
+            if end < os.path.getsize(path):
+                raise ValueError(
+                    f"sealed WAL segment {path!r} is torn/corrupt at byte "
+                    f"{end} — refusing to resume past missing history")
+            self._sealed["resumed_records"] += len(records)
+        if segs:
+            active_base = segs[-1][0]
+        else:
+            active_base = 1
+        self._active_base = active_base
+        self._active = WriteAheadLog(
+            os.path.join(self.directory, segment_filename(active_base)),
+            fsync_every=self.fsync_every,
+            fsync_interval_s=self.fsync_interval_s, obs=obs)
+        if self._active.last_version is None and active_base > 1:
+            # empty/fresh trailing segment: history continues from the
+            # sealed predecessor (base = its last version + 1)
+            self.last_version: Optional[int] = active_base - 1
+        else:
+            self.last_version = self._active.last_version
+
+    # ------------------------------------------------------------------ #
+    @property
+    def obs(self):
+        """Registry resolved at call time so rotation-created segments and
+        truncation counters land in a registry enabled after construction."""
+        return (self._obs_explicit if self._obs_explicit is not None
+                else _obs.get_registry())
+
+    @property
+    def path(self) -> str:
+        """The active segment's path (scrubber/debug compatibility)."""
+        return self._active.path
+
+    @property
+    def synced_size(self) -> int:
+        return self._active.synced_size
+
+    @property
+    def active_base(self) -> int:
+        return self._active_base
+
+    def segments(self) -> List[Tuple[int, str]]:
+        return list_segments(self.directory)
+
+    # ------------------------------------------------------------------ #
+    def _should_rotate(self) -> bool:
+        if self._active.appends == 0:
+            return False  # never rotate an empty segment
+        if self.rotate_records and self._active.appends >= self.rotate_records:
+            return True
+        if self.rotate_bytes and self._active._f.tell() >= self.rotate_bytes:
+            return True
+        return False
+
+    def rotate(self, next_version: Optional[int] = None) -> str:
+        """Seal the active segment and start a new one whose base is the
+        next version to be appended.  Returns the new segment's path."""
+        if next_version is None:
+            next_version = (self.last_version or 0) + 1
+        for k in self._sealed:
+            self._sealed[k] += getattr(self._active, k)
+        self._active.close()  # syncs: the sealed segment is complete
+        self._active_base = int(next_version)
+        self._active = WriteAheadLog(
+            os.path.join(self.directory, segment_filename(next_version)),
+            fsync_every=self.fsync_every,
+            fsync_interval_s=self.fsync_interval_s,
+            obs=self._obs_explicit)
+        self.rotations += 1
+        self.obs.counter("repro_wal_rotations_total",
+                         "WAL segment rotations").inc()
+        return self._active.path
+
+    def append(self, batch: UpdateBatch, version: Optional[int] = None,
+               sync: Optional[bool] = None) -> int:
+        if version is None:
+            version = (self.last_version or 0) + 1
+        if self._should_rotate():
+            self.rotate(next_version=int(version))
+        v = self._active.append(batch, version=int(version), sync=sync)
+        self.last_version = v
+        return v
+
+    def append_digest(self, digest: Dict, version: Optional[int] = None,
+                      sync: Optional[bool] = None) -> int:
+        # digests never trigger rotation: a record and its attestation
+        # always land in the same segment
+        if version is None:
+            version = int(digest.get("version", self.last_version or 0))
+        return self._active.append_digest(digest, version=int(version),
+                                          sync=sync)
+
+    def sync(self) -> None:
+        self._active.sync()
+
+    def close(self) -> None:
+        self._active.close()
+
+    def __enter__(self) -> "SegmentedWriteAheadLog":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------ #
+    def replay(self) -> Iterator[Tuple[int, UpdateBatch]]:
+        """``(version, batch)`` across every retained segment, in order."""
+        self.sync()
+        out: List[Tuple[int, UpdateBatch]] = []
+        for _, path in self.segments():
+            if os.path.getsize(path) == 0:
+                continue
+            out.extend(read_wal_records(path)[0])
+        return iter(out)
+
+    def truncate_upto(self, version: Optional[int]) -> List[Tuple[int, str]]:
+        """Delete sealed segments whose entire version range is
+        ``<= version``; the active segment is never deleted.  Returns the
+        removed ``[(base, path)]``.
+
+        Safety is the *caller's* contract: pass ``min(slowest live
+        replica's applied version, newest checkpoint version)`` so every
+        tailing cursor stays valid and checkpoint+tail recovery keeps a
+        complete tail (see :meth:`repro.serve.cluster.ReplicaSet.truncate`).
+        """
+        if version is None:
+            return []
+        segs = list_segments(self.directory)
+        removed: List[Tuple[int, str]] = []
+        for i, (base, path) in enumerate(segs[:-1]):
+            last_in_seg = segs[i + 1][0] - 1  # next base = its first
+            if last_in_seg <= int(version):
+                os.remove(path)
+                removed.append((base, path))
+        if removed:
+            self.truncated_segments += len(removed)
+            self.obs.counter(
+                "repro_wal_segments_truncated_total",
+                "sealed WAL segments deleted by retention").inc(len(removed))
+        return removed
+
+    @property
+    def stats(self) -> Dict:
+        segs = self.segments()
+        out = dict(self._active.stats)
+        for k, v in self._sealed.items():
+            out[k] = out.get(k, 0) + v
+        out.update(
+            directory=self.directory,
+            last_version=self.last_version,
+            active_base=self._active_base,
+            segments=len(segs),
+            oldest_base=segs[0][0] if segs else None,
+            rotations=self.rotations,
+            truncated_segments=self.truncated_segments,
+            records=out["appends"],
+            bytes=out["bytes_written"],
+        )
+        return out

@@ -416,7 +416,7 @@ class WindowService:
                     f"got {values.shape}"
                 )
         now = self.now()
-        deadline = (now + request_class.max_delay_ms / 1e3
+        deadline = (now + self._delay_s(request_class)
                     if request_class is not None else None)
         with self._lock:
             rid = self._rid
@@ -435,6 +435,13 @@ class WindowService:
                            point=vertex is not None,
                            version=self._active.version)
         return t
+
+    def _delay_s(self, request_class: RequestClass) -> float:
+        """Scheduling delay for one class, in seconds.  The base service
+        uses the declared ``max_delay_ms``; the async tier may run a
+        tighter *effective* delay under SLO-controller pressure (never a
+        looser one — the declared deadline is a hard bound)."""
+        return request_class.max_delay_ms / 1e3
 
     def attach_auditor(self, auditor) -> "WindowService":
         """Attach a :class:`~repro.obs.audit.ShadowAuditor`: every flush
@@ -773,6 +780,13 @@ class AsyncWindowService(WindowService):
         self.default_class = default_class
         self.max_pending = int(max_pending)
         assert self.max_pending >= self.bucket
+        #: SLO-controller overrides: per-class *effective* scheduling delay
+        #: in ms, clamped to ``(0, declared max_delay_ms]`` at use time
+        self.class_delay_ms: Dict[str, float] = {}
+        #: fill trigger (queue depth that launches immediately) in
+        #: ``[1, bucket]`` — the controller trades launch occupancy for
+        #: latency; the compiled ``[bucket, n]`` executor shape never moves
+        self.fill_threshold = self.bucket
         if wal is not None and not hasattr(wal, "append"):
             from repro.serve.wal import WriteAheadLog
 
@@ -963,6 +977,13 @@ class AsyncWindowService(WindowService):
         return t
 
     # --------------------------- flushing ----------------------------- #
+    def _delay_s(self, request_class: RequestClass) -> float:
+        declared = request_class.max_delay_ms
+        eff = self.class_delay_ms.get(request_class.name, declared)
+        # the declared deadline is a ceiling, never raised; floor keeps a
+        # runaway controller from busy-flushing every submit
+        return min(max(eff, 0.05), declared) / 1e3
+
     def flush(self, reason: str = "manual") -> List[Ticket]:
         served = super().flush(reason)
         with self._cv:
@@ -982,7 +1003,8 @@ class AsyncWindowService(WindowService):
         """
         if not self._pending:
             return None, None
-        if len(self._pending) >= self.bucket:
+        if len(self._pending) >= max(1, min(self.fill_threshold,
+                                            self.bucket)):
             return "fill", None
         now = self.now()
         dl = min(t.deadline_s if t.deadline_s is not None else now + 0.05
@@ -1072,6 +1094,199 @@ class AsyncWindowService(WindowService):
             pressure=self.pressure(),
             running=self.running,
         )
+        out["class_delay_ms"] = dict(self.class_delay_ms)
+        out["fill_threshold"] = self.fill_threshold
         if self.wal is not None:
             out["wal"] = self.wal.stats
         return out
+
+
+# ---------------------------------------------------------------------- #
+#  SLOController: close the measure → adapt loop
+# ---------------------------------------------------------------------- #
+class SLOController:
+    """Adapt an :class:`AsyncWindowService`'s batching knobs from measured
+    per-class SLO attainment (ROADMAP direction 1's "adapt bucket sizes /
+    ``max_delay_ms`` within declared bounds").
+
+    Two knobs, both shape-safe (the compiled ``[bucket, n]`` executors are
+    never retraced):
+
+    * **per-class effective delay** (``service.class_delay_ms``) — how
+      long the scheduler may hold a ticket for batching.  Tightening it
+      flushes earlier, trading launch occupancy for latency.  Hard bounds:
+      never above the class's *declared* ``max_delay_ms`` (the deadline
+      contract is inviolable), never below ``min_delay_ms``.
+    * **fill threshold** (``service.fill_threshold``) — the queue depth
+      that triggers an immediate launch, in ``[1, bucket]``.  Lowered when
+      the worst class is missing (smaller, sooner launches), restored
+      toward ``bucket`` when every class is comfortably attaining.
+
+    Decisions are **windowed and hysteretic**: each :meth:`step` scores
+    the attainment of tickets finished *since the previous step* (deltas
+    of :meth:`~repro.obs.slo.SLOTracker.counts`, so one bad cold-start
+    window can't haunt the cumulative ratio), ignores windows with fewer
+    than ``min_samples`` ok tickets, and only acts after ``hysteresis``
+    consecutive agreeing windows — a single noisy window never flips the
+    knobs.  Steps are multiplicative (``tighten_factor`` down,
+    ``relax_factor`` up) so convergence is geometric from either side.
+
+    Every decision is exported:
+    ``repro_slo_controller_decisions_total{cls, action}`` (actions
+    ``tighten`` / ``relax`` / ``hold``) and gauges
+    ``repro_slo_effective_delay_ms{cls}`` / ``repro_slo_fill_threshold``.
+    Drive it manually (:meth:`step` after each serving window — tests use
+    this, wall-clock-free) or with :meth:`start` on a background thread.
+
+    Requires a live metrics registry: under a ``NullRegistry`` the
+    tracker records nothing, every window is empty, and the controller
+    holds (by design — no evidence, no movement).
+    """
+
+    def __init__(self, service: AsyncWindowService, *,
+                 target_attainment: float = 0.95,
+                 min_delay_ms: float = 0.25,
+                 tighten_factor: float = 0.6,
+                 relax_factor: float = 1.25,
+                 hysteresis: int = 2,
+                 min_samples: int = 16,
+                 adapt_fill: bool = True,
+                 obs=None):
+        assert 0.0 < target_attainment <= 1.0
+        assert 0.0 < tighten_factor < 1.0 < relax_factor
+        self.service = service
+        self.target_attainment = float(target_attainment)
+        self.min_delay_ms = float(min_delay_ms)
+        self.tighten_factor = float(tighten_factor)
+        self.relax_factor = float(relax_factor)
+        self.hysteresis = max(int(hysteresis), 1)
+        self.min_samples = max(int(min_samples), 1)
+        self.adapt_fill = bool(adapt_fill)
+        self._obs_explicit = obs
+        self._last_counts: Dict[str, Dict[str, float]] = {}
+        self._miss_streak: Dict[str, int] = {}
+        self._ok_streak: Dict[str, int] = {}
+        self.steps = 0
+        self.decisions: List[Dict] = []
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # ------------------------------------------------------------------ #
+    @property
+    def obs(self):
+        """Registry resolved at call time (the obs re-enable rule)."""
+        return (self._obs_explicit if self._obs_explicit is not None
+                else _obs.get_registry())
+
+    def _record(self, cls: str, action: str, delay_ms: float) -> None:
+        reg = self.obs
+        reg.counter("repro_slo_controller_decisions_total",
+                    "SLO controller decisions", labels=("cls", "action")
+                    ).labels(cls, action).inc()
+        reg.gauge("repro_slo_effective_delay_ms",
+                  "controller-effective scheduling delay",
+                  labels=("cls",)).labels(cls).set(delay_ms)
+        self.decisions.append({"step": self.steps, "cls": cls,
+                               "action": action, "delay_ms": delay_ms})
+
+    def effective_delay_ms(self, cls: str) -> float:
+        declared = self.service.classes[cls].max_delay_ms
+        return min(self.service.class_delay_ms.get(cls, declared), declared)
+
+    def step(self) -> Dict[str, str]:
+        """Score the window since the last step; move the knobs.  Returns
+        ``{cls: action}`` for every declared class."""
+        svc = self.service
+        self.steps += 1
+        actions: Dict[str, str] = {}
+        worst_missing = False
+        for cls_name, rc in svc.classes.items():
+            cur = svc.slo.counts(cls_name)
+            prev = self._last_counts.get(cls_name,
+                                         {k: 0.0 for k in cur})
+            self._last_counts[cls_name] = cur
+            d_ok = cur["ok"] - prev["ok"]
+            d_within = cur["within"] - prev["within"]
+            eff = self.effective_delay_ms(cls_name)
+            if d_ok < self.min_samples:
+                actions[cls_name] = "hold"
+                self._record(cls_name, "hold", eff)
+                continue
+            attainment = d_within / d_ok
+            if attainment < self.target_attainment:
+                worst_missing = True
+                self._miss_streak[cls_name] = \
+                    self._miss_streak.get(cls_name, 0) + 1
+                self._ok_streak[cls_name] = 0
+                if self._miss_streak[cls_name] >= self.hysteresis \
+                        and eff > self.min_delay_ms:
+                    new = max(eff * self.tighten_factor, self.min_delay_ms)
+                    svc.class_delay_ms[cls_name] = new
+                    self._miss_streak[cls_name] = 0
+                    actions[cls_name] = "tighten"
+                    self._record(cls_name, "tighten", new)
+                    continue
+            else:
+                self._ok_streak[cls_name] = \
+                    self._ok_streak.get(cls_name, 0) + 1
+                self._miss_streak[cls_name] = 0
+                if self._ok_streak[cls_name] >= self.hysteresis \
+                        and eff < rc.max_delay_ms:
+                    new = min(eff * self.relax_factor, rc.max_delay_ms)
+                    svc.class_delay_ms[cls_name] = new
+                    self._ok_streak[cls_name] = 0
+                    actions[cls_name] = "relax"
+                    self._record(cls_name, "relax", new)
+                    continue
+            actions[cls_name] = "hold"
+            self._record(cls_name, "hold", eff)
+        if self.adapt_fill:
+            if worst_missing:
+                svc.fill_threshold = max(1, svc.fill_threshold - 1)
+            elif all(a in ("hold", "relax") for a in actions.values()):
+                svc.fill_threshold = min(svc.bucket, svc.fill_threshold + 1)
+            self.obs.gauge("repro_slo_fill_threshold",
+                           "controller-effective fill trigger depth"
+                           ).set(svc.fill_threshold)
+        return actions
+
+    # --------------------------- background ---------------------------- #
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def start(self, interval_s: float = 0.25) -> "SLOController":
+        """Step continuously on a daemon thread until :meth:`stop`."""
+        if not self.running:
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._loop, args=(float(interval_s),),
+                name="slo-controller", daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 10.0) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+            self._thread = None
+
+    def _loop(self, interval_s: float) -> None:
+        while not self._stop.is_set():
+            try:
+                self.step()
+            except Exception:
+                pass  # a controller hiccup must never take serving down
+            self._stop.wait(interval_s)
+
+    @property
+    def stats(self) -> Dict:
+        return {
+            "steps": self.steps,
+            "running": self.running,
+            "fill_threshold": self.service.fill_threshold,
+            "class_delay_ms": {
+                cls: self.effective_delay_ms(cls)
+                for cls in self.service.classes},
+            "decisions": self.decisions[-32:],
+        }
